@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: cached datasets, timing, CSV rows.
+
+Benchmarks mirror the paper's tables on seeded synthetic datasets whose
+statistics track the TIGER/OSM collections (see datagen/synthetic.py). Grid
+orders are scaled to the synthetic map density (the paper's N=16 on a
+continent-sized map corresponds to N≈10 on our unit-square workloads —
+polygon/cell-size ratios are kept comparable).
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+from repro.datagen import make_dataset, make_linestrings
+
+# benchmark-scale dataset sizes (seconds-scale on one CPU core)
+SIZES = {"T1": 320, "T2": 520, "T3": 24, "T9": 6, "T10": 80,
+         "O5": 300, "O6": 380}
+
+
+@lru_cache(maxsize=None)
+def ds(name: str, seed: int = 0):
+    return make_dataset(name, seed=seed, count=SIZES.get(name))
+
+
+@lru_cache(maxsize=None)
+def lines(seed: int = 0, count: int = 400):
+    return make_linestrings(seed=seed, count=count)
+
+
+def timeit(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

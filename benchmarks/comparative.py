@@ -1,0 +1,27 @@
+"""Fig. 13: comparative study — None / 5C+CH / RA / RI / APRIL / APRIL-C
+filter effectiveness, filter cost and end-to-end join cost.
+
+Grid order 10 keeps the polygon-diameter / cell-size ratio close to the
+paper's N=16 regime (see benchmarks/common.py): at coarser grids Strong-
+Strong cells dominate and RI's extra hit detection is overstated."""
+from __future__ import annotations
+
+from repro.spatial import spatial_intersection_join
+
+from .common import ds, row
+
+
+def run():
+    out = []
+    for pair in (("T1", "T2"), ("O5", "O6")):
+        R, S = ds(pair[0]), ds(pair[1])
+        for m in ("none", "5cch", "ra", "ri", "april", "april-c"):
+            _, st = spatial_intersection_join(R, S, method=m, n_order=10,
+                                              max_ra_cells=256)
+            h, g, i = st.rates()
+            out.append(row(
+                f"fig13_{pair[0]}x{pair[1]}_{m}", st.t_filter * 1e6,
+                f"hits={h:.3f};negs={g:.3f};indec={i:.3f};"
+                f"filter_s={st.t_filter:.4f};refine_s={st.t_refine:.3f};"
+                f"total_s={st.t_total:.3f};approx_B={st.approx_bytes}"))
+    return out

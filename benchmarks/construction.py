@@ -1,0 +1,30 @@
+"""Table 11: APRIL construction methods — RI-style full rasterization vs
+scanline vs flood fill vs one-step intervalization (PiPs / Neighbors /
+TPU-batched)."""
+from __future__ import annotations
+
+from repro.core.april import build_april
+from repro.core.intervalize import PIP_COUNTER
+from repro.core.ri import build_ri
+
+from .common import ds, row, timeit
+
+
+def run():
+    out = []
+    for name in ("T1", "T2", "T3"):
+        D = ds(name)
+        for method in ("scanline", "floodfill", "pips", "neighbors",
+                       "batched"):
+            PIP_COUNTER["count"] = 0
+            _, dt = timeit(build_april, D, 9, method=method)
+            pips = PIP_COUNTER["count"]
+            out.append(row(f"table11_{name}_{method}",
+                           dt / max(1, len(D)) * 1e6,
+                           f"total_s={dt:.3f};pip_tests={pips}"))
+        # RI needs Strong/Weak labels => coverage clipping (the costly path)
+        if name != "T3":  # T3 at order 9 is large; keep the bench bounded
+            _, dt = timeit(build_ri, D, 8)
+            out.append(row(f"table11_{name}_ri_full", dt / len(D) * 1e6,
+                           f"total_s={dt:.3f}"))
+    return out

@@ -1,0 +1,36 @@
+"""Table 10: mixed-granularity joins — T1 at N=10 vs T3 at L<=10."""
+from __future__ import annotations
+
+from repro.core.april import build_april
+from repro.core.granularity import mixed_order_verdict_pair
+from repro.core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+from repro.spatial.mbr_join import mbr_join
+
+from .common import ds, row, timeit
+
+
+def run():
+    R, S = ds("T1"), ds("T3")
+    n_fine = 10
+    ar = build_april(R, n_fine)
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    out = []
+    for L in (10, 9, 8, 7):
+        as_ = build_april(S, L)
+
+        def filter_all():
+            cnt = [0, 0, 0]
+            for i, j in pairs:
+                v = mixed_order_verdict_pair(
+                    ar.a_list(int(i)), ar.f_list(int(i)), n_fine,
+                    as_.a_list(int(j)), as_.f_list(int(j)), L)
+                cnt[v] += 1
+            return cnt
+
+        cnt, tf = timeit(filter_all)
+        n = max(1, len(pairs))
+        out.append(row(
+            f"table10_T3_order{L}", tf * 1e6,
+            f"hits={cnt[TRUE_HIT] / n:.3f};negs={cnt[TRUE_NEG] / n:.3f};"
+            f"indec={cnt[INDECISIVE] / n:.3f};t3_size_B={as_.size_bytes()}"))
+    return out

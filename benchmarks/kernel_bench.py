@@ -1,0 +1,44 @@
+"""Kernel-layer benchmark: vectorized/batched joins vs the paper's
+sequential merge join, plus refinement batching. (The Pallas kernels
+themselves run interpret=True on CPU — their latency here is NOT indicative;
+their roofline terms are derived analytically in EXPERIMENTS.md §Perf.)"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.april import build_april
+from repro.core.join import (april_filter_batch, april_verdict_pair,
+                             pack_lists)
+from repro.core.join import batch_overlap_np
+from repro.spatial.mbr_join import mbr_join
+from repro.spatial.distributed import distributed_april_filter, pack_pair_batch
+
+from .common import ds, row, timeit
+
+
+def run():
+    out = []
+    R, S = ds("T1"), ds("T2")
+    ar, as_ = build_april(R, 9), build_april(S, 9)
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    n = max(1, len(pairs))
+
+    def sequential():
+        return [april_verdict_pair(ar.a_list(int(i)), ar.f_list(int(i)),
+                                   as_.a_list(int(j)), as_.f_list(int(j)))
+                for i, j in pairs]
+
+    _, t_seq = timeit(sequential)
+    out.append(row("kernel_seq_merge_join", t_seq / n * 1e6,
+                   f"pairs={len(pairs)}"))
+
+    _, t_np = timeit(april_filter_batch, ar, as_, pairs)
+    out.append(row("kernel_batch_numpy", t_np / n * 1e6,
+                   f"speedup={t_seq / t_np:.2f}x"))
+
+    packed = pack_pair_batch(ar, as_, pairs)
+    _, t_j0 = timeit(distributed_april_filter, packed)   # includes jit
+    _, t_j = timeit(distributed_april_filter, packed, repeats=3)
+    out.append(row("kernel_batch_jax_sharded", t_j / n * 1e6,
+                   f"speedup={t_seq / t_j:.2f}x;first_call_s={t_j0:.2f}"))
+    return out

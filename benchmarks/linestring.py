@@ -1,0 +1,21 @@
+"""Table 17: polygon x linestring intersection joins."""
+from __future__ import annotations
+
+from repro.spatial import polygon_linestring_join
+
+from .common import ds, lines, row
+
+
+def run():
+    out = []
+    L = lines()
+    for name in ("T1", "T2", "T3"):
+        S = ds(name)
+        for m in ("none", "april"):
+            _, st = polygon_linestring_join(S, L, method=m, n_order=9)
+            h, g, i = st.rates()
+            out.append(row(
+                f"table17_{name}xT8_{m}", st.t_filter * 1e6,
+                f"hits={h:.3f};negs={g:.3f};indec={i:.3f};"
+                f"refine_s={st.t_refine:.3f};total_s={st.t_total:.3f}"))
+    return out

@@ -1,0 +1,43 @@
+"""Tables 8/9: partitions-per-dimension vs filter effectiveness, time, size."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import partition as pm
+from repro.core.join import INDECISIVE, april_verdict_pair
+from repro.spatial.mbr_join import mbr_join
+
+from .common import ds, row, timeit
+
+
+def run():
+    out = []
+    for pair in (("T1", "T2"), ("O5", "O6")):
+        R, S = ds(pair[0]), ds(pair[1])
+        pairs = mbr_join(R.mbrs, S.mbrs)
+        for parts in (1, 2, 3, 4):
+            parting = pm.partition_space([R, S], parts_per_dim=parts)
+            (sr, ss), tb = timeit(
+                lambda: (parting.build_april(R, 9), parting.build_april(S, 9)))
+            size = sum(s.size_bytes() for s in sr if s) \
+                + sum(s.size_bytes() for s in ss if s)
+
+            def filter_all():
+                ind = 0
+                for i, j in pairs:
+                    p = pm.reference_partition(parts, R.mbrs[i], S.mbrs[j])
+                    part = parting.partitions[p]
+                    li = np.nonzero(part.obj_idx[pair[0]] == i)[0][0]
+                    lj = np.nonzero(part.obj_idx[pair[1]] == j)[0][0]
+                    v = april_verdict_pair(
+                        sr[p].a_list(int(li)), sr[p].f_list(int(li)),
+                        ss[p].a_list(int(lj)), ss[p].f_list(int(lj)))
+                    ind += int(v == INDECISIVE)
+                return ind
+
+            ind, tf = timeit(filter_all)
+            out.append(row(
+                f"table8_{pair[0]}x{pair[1]}_parts{parts}", tf * 1e6,
+                f"indec={ind / max(1, len(pairs)):.3f};size_B={size};"
+                f"build_s={tb:.2f}"))
+    return out

@@ -1,0 +1,48 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
+``python -m benchmarks.run table5 fig13 ...``; no args runs everything.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (adaptive_order, comparative, construction, effect_of_n,
+               granularity, join_order, kernel_bench, linestring,
+               partitioning, selection, size_variance, space, within_join)
+
+SUITES = {
+    "table4_space": space,
+    "table5_effect_of_n": effect_of_n,
+    "table7_join_order": join_order,
+    "table8_partitioning": partitioning,
+    "table10_granularity": granularity,
+    "table11_construction": construction,
+    "table13_size_variance": size_variance,
+    "table15_selection": selection,
+    "table16_within": within_join,
+    "table17_linestring": linestring,
+    "fig13_comparative": comparative,
+    "beyond_adaptive_order": adaptive_order,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> None:
+    want = sys.argv[1:]
+    print("name,us_per_call,derived")
+    for name, mod in SUITES.items():
+        if want and not any(w in name for w in want):
+            continue
+        t0 = time.time()
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # keep the suite going; surface the failure
+            print(f"{name}_FAILED,0,{e!r}")
+        print(f"# suite {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

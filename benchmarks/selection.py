@@ -1,0 +1,29 @@
+"""Table 15: polygonal selection (range) queries — T3 polygons as queries
+against T1/T2, APRIL vs RI."""
+from __future__ import annotations
+
+from repro.core.april import build_april
+from repro.core.ri import build_ri
+from repro.datagen import make_dataset
+from repro.spatial import selection_queries
+
+from .common import ds, row
+
+
+def run():
+    out = []
+    queries = make_dataset("T3", seed=7, count=12)
+    for name in ("T1", "T2"):
+        data = ds(name)
+        pre = build_april(data, 9)
+        _, st = selection_queries(data, queries, method="april", n_order=9,
+                                  prebuilt=pre)
+        h, g, i = st.rates()
+        out.append(row(f"table15_{name}_april", st.t_filter * 1e6,
+                       f"hits={h:.3f};negs={g:.3f};indec={i:.3f};"
+                       f"total_s={st.t_total:.3f}"))
+        _, st_none = selection_queries(data, queries, method="none")
+        out.append(row(f"table15_{name}_none", st_none.t_filter * 1e6,
+                       f"refine_s={st_none.t_refine:.3f};"
+                       f"total_s={st_none.t_total:.3f}"))
+    return out

@@ -1,0 +1,26 @@
+"""Tables 13/14: joins between T2 and datasets of increasing object size
+(T1 -> T10 -> T3 -> T9); APRIL's advantage grows with size skew."""
+from __future__ import annotations
+
+from repro.spatial import spatial_intersection_join
+
+from .common import ds, row
+
+
+def run():
+    out = []
+    R = ds("T2")
+    for other, methods in (("T1", ("none", "5cch", "ra", "april")),
+                           ("T10", ("none", "5cch", "april")),
+                           ("T3", ("none", "5cch", "april")),
+                           ("T9", ("none", "april"))):
+        S = ds(other)
+        for m in methods:
+            _, st = spatial_intersection_join(R, S, method=m, n_order=9,
+                                              max_ra_cells=256)
+            h, g, i = st.rates()
+            out.append(row(
+                f"table13_T2x{other}_{m}", st.t_filter * 1e6,
+                f"hits={h:.3f};negs={g:.3f};indec={i:.3f};"
+                f"refine_s={st.t_refine:.3f};total_s={st.t_total:.3f}"))
+    return out

@@ -1,0 +1,37 @@
+"""Tables 4/12: approximation space requirements — MBR vs APRIL vs APRIL-C
+vs RI vs RA vs 5C+CH.
+
+NOTE: RI here is built at order 8 (its Weak/Strong coverage labeling is the
+expensive path) while APRIL uses order 9, so this table under-states RI's
+size; the same-order size comparison (both at N=10) is in the fig13 rows
+(approx_B column) and EXPERIMENTS.md quotes those."""
+from __future__ import annotations
+
+from repro.baselines import build_5cch, build_ra
+from repro.core.april import build_april
+from repro.core.compress import compress_intervals
+from repro.core.ri import build_ri
+
+from .common import ds, row
+
+
+def run():
+    out = []
+    for name in ("T1", "T2", "T3"):
+        D = ds(name)
+        geom = sum(int(n) * 16 for n in D.nverts)
+        mbr = 32 * len(D)
+        april = build_april(D, 9)
+        aprilc = sum(
+            len(compress_intervals(april.a_list(i))[0])
+            + len(compress_intervals(april.f_list(i))[0])
+            for i in range(len(D)))
+        ri = build_ri(D, 8)
+        ra = build_ra(D, max_cells=256)
+        cch = build_5cch(D)
+        out.append(row(
+            f"table4_{name}", 0.0,
+            f"geom_B={geom};mbr_B={mbr};april_B={april.size_bytes()};"
+            f"aprilc_B={aprilc};ri_B={ri.size_bytes()};ra_B={ra.size_bytes()};"
+            f"5cch_B={cch.size_bytes()}"))
+    return out

@@ -1,0 +1,20 @@
+"""Table 16: spatial within joins (r within s)."""
+from __future__ import annotations
+
+from repro.spatial import spatial_within_join
+
+from .common import ds, row
+
+
+def run():
+    out = []
+    for pair in (("T2", "T10"), ("T1", "T3"), ("T2", "T3")):
+        R, S = ds(pair[0]), ds(pair[1])
+        for m in ("none", "april"):
+            _, st = spatial_within_join(R, S, method=m, n_order=9)
+            h, g, i = st.rates()
+            out.append(row(
+                f"table16_{pair[0]}in{pair[1]}_{m}", st.t_filter * 1e6,
+                f"hits={h:.3f};negs={g:.3f};indec={i:.3f};"
+                f"refine_s={st.t_refine:.3f};total_s={st.t_total:.3f}"))
+    return out

@@ -1,0 +1,39 @@
+"""Quickstart: build APRIL approximations and run a spatial intersection
+join end-to-end, comparing intermediate filters.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.april import build_april_polygon
+from repro.core.join import april_verdict_pair, INDECISIVE, TRUE_HIT, TRUE_NEG
+from repro.datagen import make_dataset
+from repro.spatial import spatial_intersection_join
+
+
+def main():
+    # --- one pair, by hand -------------------------------------------------
+    sq1 = np.array([[0.20, 0.20], [0.60, 0.20], [0.60, 0.60], [0.20, 0.60]])
+    sq2 = sq1 + 0.25
+    a1, f1 = build_april_polygon(sq1, 4, n_order=8)
+    a2, f2 = build_april_polygon(sq2, 4, n_order=8)
+    verdict = april_verdict_pair(a1, f1, a2, f2)
+    names = {TRUE_NEG: "true negative", TRUE_HIT: "TRUE HIT",
+             INDECISIVE: "indecisive"}
+    print(f"squares overlap -> APRIL verdict: {names[verdict]}")
+    print(f"A-list has {len(a1)} intervals, F-list {len(f1)} "
+          f"(8x8..256x256 Hilbert grid)")
+
+    # --- full pipeline on synthetic landmark/water layers ------------------
+    R = make_dataset("T1", count=300)
+    S = make_dataset("T2", count=500)
+    for method in ("none", "april"):
+        results, stats = spatial_intersection_join(R, S, method=method,
+                                                   n_order=9)
+        print(stats.row())
+    print("both methods return the SAME join result; APRIL just refines "
+          "far fewer pairs.")
+
+
+if __name__ == "__main__":
+    main()

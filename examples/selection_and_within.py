@@ -1,0 +1,30 @@
+"""APRIL beyond intersection joins (§4.3): polygonal selection queries,
+within joins, and polygon x linestring joins.
+
+    PYTHONPATH=src python examples/selection_and_within.py
+"""
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import (polygon_linestring_join, selection_queries,
+                           spatial_within_join)
+
+
+def main():
+    data = make_dataset("T1", count=400)
+    counties = make_dataset("T3", count=10)
+
+    results, st = selection_queries(data, counties, method="april", n_order=9)
+    print("selection:", st.row())
+    print(f"  e.g. query 0 returned {len(results[0])} landmark polygons")
+
+    small = make_dataset("T2", count=400)
+    res, st = spatial_within_join(small, counties, method="april", n_order=9)
+    print("within:   ", st.row())
+
+    roads = make_linestrings(count=300)
+    res, st = polygon_linestring_join(counties, roads, method="april",
+                                      n_order=9)
+    print("linestring:", st.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Continuous-batching serving example: a fixed pool of decode slots serves
+a queue of requests, each at its own position (per-slot KV positions).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --requests 12
+    PYTHONPATH=src python examples/serve_pool.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

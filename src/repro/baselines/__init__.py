@@ -1,0 +1,2 @@
+from .fivec_ch import FiveCCH, build_5cch, fivecch_verdict_pair  # noqa: F401
+from .ra import RAStore, build_ra, ra_verdict_pair  # noqa: F401

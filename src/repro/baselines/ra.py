@@ -1,0 +1,156 @@
+"""RA — the raster approximation of Zimbrao & de Souza [58] (paper §2).
+
+Per-object grid over the MBR with at most K cells; cell side quantized to
+``omega * 2^k`` with coordinates at multiples of the side, so any two RA
+grids are hierarchically aligned and differ by a power-of-two scale. Cells
+carry one of four classes: Empty / Weak (<=50%) / Strong (>50%) / Full,
+assigned from exact coverage fractions. Pair filtering re-scales the finer
+grid (2x2 combination) onto the coarser one and applies Table 1.
+
+Combination caveat (faithful to the information RA stores): classes — not
+fractions — are stored, so combined 2x2 classes use midpoint coverage
+estimates (Empty=0, Weak=0.25, Strong=0.75, Full=1). To remain *sound*, an
+estimated combination can only produce Weak/Strong labels; Full (resp.
+Empty) requires all four children Full (resp. Empty). With that, Table 1
+verdicts stay conservative and the filter never contradicts the geometry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import rasterize
+from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+from ..core.rasterize import Extent
+
+__all__ = ["RAStore", "build_ra", "ra_verdict_pair"]
+
+EMPTY, WEAK, STRONG, FULL = 0, 1, 2, 3
+_MID = np.array([0.0, 0.25, 0.75, 1.0])
+
+# Table 1: does a shared cell certify intersection? yes=1 / no=-1 / maybe=0
+_TABLE = np.zeros((4, 4), np.int8)
+_TABLE[EMPTY, :] = -1; _TABLE[:, EMPTY] = -1
+_TABLE[FULL, WEAK:] = 1; _TABLE[WEAK:, FULL] = 1
+_TABLE[STRONG, STRONG] = 1
+_TABLE[WEAK, WEAK] = 0; _TABLE[WEAK, STRONG] = 0; _TABLE[STRONG, WEAK] = 0
+
+
+@dataclass
+class RAStore:
+    omega: float                 # unit cell side
+    k: np.ndarray                # [P] scale exponent: cell side = omega * 2^k
+    origin: np.ndarray           # [P,2] grid origin (multiple of side)
+    shape: np.ndarray            # [P,2] (nx, ny) cells
+    cells: list[np.ndarray]      # per object: [ny, nx] int8 class grid
+
+    def __len__(self):
+        return len(self.cells)
+
+    def size_bytes(self) -> int:
+        # 2 bits/cell packed (4 classes) + per-object header
+        return sum((c.size + 3) // 4 for c in self.cells) + 24 * len(self.cells)
+
+
+def build_ra(dataset, max_cells: int = 750, omega: float = 1.0 / (1 << 16)) -> RAStore:
+    P = len(dataset)
+    ks = np.zeros(P, np.int64)
+    origins = np.zeros((P, 2))
+    shapes = np.zeros((P, 2), np.int64)
+    grids: list[np.ndarray] = []
+    for i in range(P):
+        v = dataset.polygon(i)
+        mbr = dataset.mbrs[i]
+        w = mbr[2] - mbr[0]; h = mbr[3] - mbr[1]
+        # smallest k with cell count <= max_cells
+        k = 0
+        while True:
+            side = omega * (1 << k)
+            nx = int(np.floor(mbr[2] / side)) - int(np.floor(mbr[0] / side)) + 1
+            ny = int(np.floor(mbr[3] / side)) - int(np.floor(mbr[1] / side)) + 1
+            if nx * ny <= max_cells or side > 1.0:
+                break
+            k += 1
+        side = omega * (1 << k)
+        ox = np.floor(mbr[0] / side) * side
+        oy = np.floor(mbr[1] / side) * side
+        nx = int(np.floor(mbr[2] / side)) - int(np.floor(mbr[0] / side)) + 1
+        ny = int(np.floor(mbr[3] / side)) - int(np.floor(mbr[1] / side)) + 1
+        # coverage fractions for all cells in the window
+        cxs = np.arange(nx); cys = np.arange(ny)
+        CX, CY = np.meshgrid(cxs, cys, indexing="xy")
+        cells = np.stack([CX.ravel(), CY.ravel()], axis=1)
+        ext = Extent(ox, oy, side)  # one-cell extent trick: order 0 per cell
+        frac = rasterize.coverage_fractions(v, len(v), cells, 0, ext)
+        grid = np.full(nx * ny, EMPTY, np.int8)
+        grid[(frac > 0) & (frac <= 0.5)] = WEAK
+        grid[(frac > 0.5) & (frac < 1.0 - 1e-12)] = STRONG
+        grid[frac >= 1.0 - 1e-12] = FULL
+        ks[i] = k
+        origins[i] = (ox, oy)
+        shapes[i] = (nx, ny)
+        grids.append(grid.reshape(ny, nx))
+    return RAStore(omega=omega, k=ks, origin=origins, shape=shapes, cells=grids)
+
+
+def _upscale_to(store: RAStore, i: int, k_to: int):
+    """Combine 2x2 blocks until object i's grid reaches scale k_to.
+    Returns (origin, grid) at scale k_to with sound class combination."""
+    grid = store.cells[i]
+    k = int(store.k[i])
+    ox, oy = store.origin[i]
+    side = store.omega * (1 << k)
+    while k < k_to:
+        ny, nx = grid.shape
+        # align origin to the parent grid
+        gx = int(np.floor(round(ox / side)))  # integer cell coords at scale k
+        gy = int(np.floor(round(oy / side)))
+        pad_l = gx & 1
+        pad_b = gy & 1
+        pad_r = (nx + pad_l) & 1
+        pad_t = (ny + pad_b) & 1
+        g = np.pad(grid, ((pad_b, pad_t), (pad_l, pad_r)), constant_values=EMPTY)
+        # coverage LOWER bounds per class keep the combination sound: a
+        # parent may be labeled STRONG only when its true coverage provably
+        # exceeds 50% (Table 1's strong-strong => hit rule demands it).
+        lo_tab = np.array([0.0, 0.0, 0.5, 1.0])   # EMPTY WEAK STRONG FULL
+        lo = (lo_tab[g[0::2, 0::2]] + lo_tab[g[1::2, 0::2]]
+              + lo_tab[g[0::2, 1::2]] + lo_tab[g[1::2, 1::2]]) / 4.0
+        allfull = ((g[0::2, 0::2] == FULL) & (g[1::2, 0::2] == FULL)
+                   & (g[0::2, 1::2] == FULL) & (g[1::2, 1::2] == FULL))
+        allempty = ((g[0::2, 0::2] == EMPTY) & (g[1::2, 0::2] == EMPTY)
+                    & (g[0::2, 1::2] == EMPTY) & (g[1::2, 1::2] == EMPTY))
+        out = np.where(lo > 0.5, STRONG, WEAK).astype(np.int8)
+        out[allfull] = FULL
+        out[allempty] = EMPTY
+        grid = out
+        ox = (gx - pad_l) * side
+        oy = (gy - pad_b) * side
+        k += 1
+        side *= 2
+    return (ox, oy), grid
+
+
+def ra_verdict_pair(store_r: RAStore, i: int, store_s: RAStore, j: int) -> int:
+    """Re-scale to the coarser grid, overlay, and apply Table 1."""
+    k = max(int(store_r.k[i]), int(store_s.k[j]))
+    (oxr, oyr), gr = _upscale_to(store_r, i, k)
+    (oxs, oys), gs = _upscale_to(store_s, j, k)
+    side = store_r.omega * (1 << k)
+    # integer cell coordinates of each grid origin (aligned by construction)
+    rx0 = int(round(oxr / side)); ry0 = int(round(oyr / side))
+    sx0 = int(round(oxs / side)); sy0 = int(round(oys / side))
+    x0 = max(rx0, sx0); y0 = max(ry0, sy0)
+    x1 = min(rx0 + gr.shape[1], sx0 + gs.shape[1])
+    y1 = min(ry0 + gr.shape[0], sy0 + gs.shape[0])
+    if x0 >= x1 or y0 >= y1:
+        return TRUE_NEG
+    sub_r = gr[y0 - ry0: y1 - ry0, x0 - rx0: x1 - rx0]
+    sub_s = gs[y0 - sy0: y1 - sy0, x0 - sx0: x1 - sx0]
+    t = _TABLE[sub_r, sub_s]
+    if bool((t == 1).any()):
+        return TRUE_HIT
+    if bool((t == 0).any()):
+        return INDECISIVE
+    return TRUE_NEG

@@ -1,0 +1,55 @@
+"""Assigned input shapes and abstract input specs (ShapeDtypeStruct only —
+no device allocation; the dry-run lowers against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import build_caches
+
+# name -> (seq_len, global_batch, mode)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    """Why a (arch, shape) cell is skipped, or None if it runs."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 500k context is quadratic "
+                "(run only for SSM/hybrid per assignment)")
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str, dtype=jnp.bfloat16) -> dict:
+    """Abstract model inputs for one (arch, shape) cell.
+
+    train: {'tokens', 'labels'} (+ 'frames'/'patches' stubs);
+    prefill: {'tokens'} (+ ctx stubs);
+    decode: {'tokens' [B,1], 'pos' scalar, 'caches' tree} (+ ctx stubs).
+    """
+    seq, batch, mode = SHAPES[shape]
+    out: dict = {}
+    if mode in ("train", "prefill"):
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+        if mode == "train":
+            out["labels"] = _sds((batch, seq), jnp.int32)
+    else:
+        out["tokens"] = _sds((batch, 1), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+        out["caches"] = jax.eval_shape(
+            lambda: build_caches(cfg, batch, seq, dtype=dtype))
+    # modality frontends are stubs: precomputed embeddings
+    if cfg.encoder is not None:
+        out["frames"] = _sds((batch, cfg.encoder.n_frames, cfg.d_model), dtype)
+    elif cfg.n_patch_tokens:
+        out["patches"] = _sds((batch, cfg.n_patch_tokens, cfg.d_model), dtype)
+    return out

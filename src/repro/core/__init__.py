@@ -1,0 +1,11 @@
+"""Core library: the paper's contribution (RI + APRIL raster-interval
+approximations and interval-join intermediate filters) in JAX/NumPy."""
+from . import (  # noqa: F401
+    april, compress, geometry, granularity, hilbert, intervalize, join,
+    partition, rasterize, ri,
+)
+from .april import AprilStore, build_april, build_april_polygon  # noqa: F401
+from .join import (  # noqa: F401
+    INDECISIVE, TRUE_HIT, TRUE_NEG, april_filter_batch, april_verdict_pair,
+)
+from .rasterize import Extent, GLOBAL_EXTENT  # noqa: F401

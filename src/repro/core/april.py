@@ -1,0 +1,88 @@
+"""APRIL approximation store (§4): per-polygon A- and F-interval lists.
+
+Host storage is CSR-style: one flat [sum_I, 2] uint64 interval array plus
+[P+1] offsets, per list kind. Device batches are packed on demand
+(:func:`pack_pairs` in ``join.py``) into padded int32 *biased* arrays with an
+inclusive-last representation (`end - 1`), which keeps every endpoint inside
+int32 — the TPU-native integer — even for N=16 where half-open ends reach
+2^32 (see ``hilbert.u32_to_biased_i32``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import intervalize, rasterize
+from .rasterize import Extent, GLOBAL_EXTENT
+
+__all__ = ["AprilStore", "build_april", "build_april_polygon"]
+
+
+@dataclass
+class AprilStore:
+    """APRIL approximations for one dataset."""
+    n_order: int
+    extent: Extent
+    a_off: np.ndarray    # [P+1] int64
+    a_ints: np.ndarray   # [sum_Ia, 2] uint64
+    f_off: np.ndarray    # [P+1] int64
+    f_ints: np.ndarray   # [sum_If, 2] uint64
+
+    def __len__(self) -> int:
+        return len(self.a_off) - 1
+
+    def a_list(self, i: int) -> np.ndarray:
+        return self.a_ints[self.a_off[i]: self.a_off[i + 1]]
+
+    def f_list(self, i: int) -> np.ndarray:
+        return self.f_ints[self.f_off[i]: self.f_off[i + 1]]
+
+    def num_intervals(self) -> tuple[int, int]:
+        return len(self.a_ints), len(self.f_ints)
+
+    def size_bytes(self) -> int:
+        """Uncompressed size: every endpoint is a 32-bit unsigned int (paper
+        §3.2/N=16 choice), plus the offset tables."""
+        return 4 * 2 * (len(self.a_ints) + len(self.f_ints)) \
+            + 8 * (len(self.a_off) + len(self.f_off))
+
+
+def build_april_polygon(
+    verts: np.ndarray, n: int, n_order: int,
+    extent: Extent = GLOBAL_EXTENT, method: str = "batched",
+) -> tuple[np.ndarray, np.ndarray]:
+    """(A-list, F-list) for one polygon. ``method``: 'batched' | 'pips' |
+    'neighbors' (one-step, §6.2) or 'scanline' | 'floodfill' (§6.1)."""
+    if method in ("batched", "pips", "neighbors"):
+        return intervalize.onestep(verts, n, n_order, extent, method=method)
+    partial = rasterize.dda_partial_cells(verts, n, n_order, extent)
+    if method == "scanline":
+        full = rasterize.scanline_full_cells(verts, n, partial, n_order, extent)
+    elif method == "floodfill":
+        full = rasterize.floodfill_classify(verts, n, partial, n_order, extent)
+    else:
+        raise ValueError(f"unknown construction method {method!r}")
+    return intervalize.april_from_cells(partial, full, n_order)
+
+
+def build_april(
+    dataset, n_order: int, extent: Extent = GLOBAL_EXTENT,
+    method: str = "batched",
+) -> AprilStore:
+    """Build the APRIL store for a PolygonDataset."""
+    a_off = [0]; f_off = [0]
+    a_chunks = []; f_chunks = []
+    for i in range(len(dataset)):
+        a, f = build_april_polygon(
+            dataset.verts[i], int(dataset.nverts[i]), n_order, extent, method)
+        a_chunks.append(a); f_chunks.append(f)
+        a_off.append(a_off[-1] + len(a))
+        f_off.append(f_off[-1] + len(f))
+    cat = lambda chunks: (np.concatenate(chunks, axis=0)
+                          if chunks else np.zeros((0, 2), np.uint64))
+    return AprilStore(
+        n_order=n_order, extent=extent,
+        a_off=np.asarray(a_off, np.int64), a_ints=cat(a_chunks),
+        f_off=np.asarray(f_off, np.int64), f_ints=cat(f_chunks),
+    )

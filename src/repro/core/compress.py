@@ -1,0 +1,133 @@
+"""APRIL-C: delta + Variable-Byte compression of interval lists (§5.1).
+
+An interval list is a strictly-increasing flat integer sequence
+``s0, e0, s1, e1, ...`` (disjoint sorted intervals), so gaps are positive and
+delta + VByte compresses well. The decoder supports *streaming* consumption —
+`DecompressingCursor` yields one value at a time, so a merge join can stop
+after the first overlap without decompressing the rest (join-while-decompress,
+as the paper does with libvbyte).
+
+Device note: byte-granular varint decode is scalar poison on TPU; the device
+path decompresses per *partition shard* on host before upload (DESIGN.md §3),
+while this codec provides the storage sizes reported in Table-4-style
+benchmarks and the streaming host join.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
+
+__all__ = [
+    "vbyte_encode", "vbyte_decode", "compress_intervals",
+    "decompress_intervals", "DecompressingCursor", "interval_join_compressed",
+    "april_verdict_compressed",
+]
+
+
+def vbyte_encode(values: np.ndarray) -> bytes:
+    """Delta + VByte encode a strictly increasing uint64 sequence."""
+    v = np.asarray(values, np.uint64)
+    if len(v) == 0:
+        return b""
+    deltas = np.empty_like(v)
+    deltas[0] = v[0]
+    deltas[1:] = v[1:] - v[:-1]
+    out = bytearray()
+    for d in deltas.tolist():
+        while True:
+            b = d & 0x7F
+            d >>= 7
+            if d:
+                out.append(b | 0x80)
+            else:
+                out.append(b)
+                break
+    return bytes(out)
+
+
+def vbyte_decode(buf: bytes, count: int) -> np.ndarray:
+    """Inverse of :func:`vbyte_encode`."""
+    out = np.empty(count, np.uint64)
+    acc = 0
+    pos = 0
+    for i in range(count):
+        val = 0
+        shift = 0
+        while True:
+            b = buf[pos]; pos += 1
+            val |= (b & 0x7F) << shift
+            if not (b & 0x80):
+                break
+            shift += 7
+        acc += val
+        out[i] = acc
+    return out
+
+
+def compress_intervals(ints: np.ndarray) -> tuple[bytes, int]:
+    """Compress an [I,2] interval list; returns (buffer, count=2I)."""
+    flat = np.asarray(ints, np.uint64).reshape(-1)
+    return vbyte_encode(flat), len(flat)
+
+
+def decompress_intervals(buf: bytes, count: int) -> np.ndarray:
+    return vbyte_decode(buf, count).reshape(-1, 2)
+
+
+class DecompressingCursor:
+    """Streams intervals out of a compressed buffer one at a time."""
+
+    def __init__(self, buf: bytes, count: int):
+        self.buf = buf
+        self.count = count          # number of flat values (2 * intervals)
+        self.pos = 0
+        self.emitted = 0
+        self.acc = 0
+
+    def _next_value(self) -> int:
+        val = 0
+        shift = 0
+        while True:
+            b = self.buf[self.pos]; self.pos += 1
+            val |= (b & 0x7F) << shift
+            if not (b & 0x80):
+                break
+            shift += 7
+        self.acc += val
+        self.emitted += 1
+        return self.acc
+
+    def next_interval(self):
+        """Next (start, end) or None when exhausted."""
+        if self.emitted >= self.count:
+            return None
+        return self._next_value(), self._next_value()
+
+
+def interval_join_compressed(bx: tuple[bytes, int], by: tuple[bytes, int]) -> bool:
+    """Merge join directly over two compressed lists; decompresses only as far
+    as needed to find the first overlap (§5.1)."""
+    cx = DecompressingCursor(*bx)
+    cy = DecompressingCursor(*by)
+    x = cx.next_interval()
+    y = cy.next_interval()
+    while x is not None and y is not None:
+        if x[0] < y[1] and y[0] < x[1]:
+            return True
+        if x[1] <= y[1]:
+            x = cx.next_interval()
+        else:
+            y = cy.next_interval()
+    return False
+
+
+def april_verdict_compressed(ar, fr, as_, fs) -> int:
+    """APRIL filter over compressed (buf, count) lists — APRIL-C."""
+    if not interval_join_compressed(ar, as_):
+        return TRUE_NEG
+    if interval_join_compressed(ar, fs):
+        return TRUE_HIT
+    if interval_join_compressed(fr, as_):
+        return TRUE_HIT
+    return INDECISIVE

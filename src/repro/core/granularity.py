@@ -1,0 +1,55 @@
+"""Mixed-granularity APRIL joins (§5.3).
+
+Large-polygon datasets may be approximated at a lower Hilbert order L < N to
+cut interval counts. Joining an order-N list with an order-L list scales the
+finer list down (paper Eq. 1):
+
+    a' = [a_start >> 2(N-L),  ((a_end - 1) >> 2(N-L)) + 1)      (half-open)
+
+Scaling is only sound for A-lists (a Full interval at order N need not be
+Full at order L), so the filter runs just TWO joins: AA (scaled) and the
+AF/FA join that uses the *coarse* side's F-list.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .join import (INDECISIVE, TRUE_HIT, TRUE_NEG, interval_join_pair)
+
+__all__ = ["scale_intervals", "mixed_order_verdict_pair"]
+
+
+def scale_intervals(ints: np.ndarray, n_from: int, n_to: int) -> np.ndarray:
+    """Scale half-open intervals from order n_from down to n_to (Eq. 1) and
+    re-merge any now-overlapping/adjacent intervals."""
+    assert n_from >= n_to
+    if n_from == n_to or len(ints) == 0:
+        return np.asarray(ints, np.uint64)
+    sh = np.uint64(2 * (n_from - n_to))
+    one = np.uint64(1)
+    starts = ints[:, 0] >> sh
+    ends = ((ints[:, 1] - one) >> sh) + one
+    # merge: scaled intervals can touch/overlap
+    merged_s = [starts[0]]
+    merged_e = [ends[0]]
+    for s, e in zip(starts[1:], ends[1:]):
+        if s <= merged_e[-1]:
+            merged_e[-1] = max(merged_e[-1], e)
+        else:
+            merged_s.append(s); merged_e.append(e)
+    return np.stack([np.asarray(merged_s, np.uint64),
+                     np.asarray(merged_e, np.uint64)], axis=1)
+
+
+def mixed_order_verdict_pair(
+    a_fine: np.ndarray, f_fine: np.ndarray, n_fine: int,
+    a_coarse: np.ndarray, f_coarse: np.ndarray, n_coarse: int,
+) -> int:
+    """APRIL filter across orders: fine side scaled down; only the coarse
+    side's F-list participates (§5.3)."""
+    a_scaled = scale_intervals(a_fine, n_fine, n_coarse)
+    if not interval_join_pair(a_scaled, a_coarse):
+        return TRUE_NEG
+    if interval_join_pair(a_scaled, f_coarse):
+        return TRUE_HIT
+    return INDECISIVE

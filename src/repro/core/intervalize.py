@@ -1,0 +1,217 @@
+"""Intervalization: from raster cells to A- and F-interval lists.
+
+Three construction families, mirroring the paper:
+
+* :func:`april_from_cells` — full-rasterization path (§6.1): take labeled
+  Partial/Full cell sets (from scanline or flood fill) and merge consecutive
+  Hilbert ids into intervals.
+* :func:`onestep` with ``method='pips'`` / ``'neighbors'`` — the paper's
+  one-step intervalization (Algorithm 3), faithful sequential host versions,
+  with and without the neighbor-inheritance shortcut.
+* :func:`onestep` with ``method='batched'`` — the TPU-adapted variant: gaps in
+  the sorted Partial-cell sequence are classified Full/Empty by ONE vectorized
+  PiP pass over all gap-head cells (see DESIGN.md §3). Identical output; on
+  accelerators the batched PiP replaces the serial neighbor-inheritance.
+
+Robustness note (beyond the paper): Algorithm 3 implicitly assumes the Hilbert
+curve's origin cell lies *outside* every polygon — a polygon covering the
+curve's first/last cells would otherwise get its leading/trailing interior
+cells dropped. We additionally classify the *virtual* leading gap
+``[0, first_partial)`` and trailing gap ``[last_partial+1, 4^N)`` (two extra
+PiP tests), which makes all methods exact for corner-covering polygons too.
+
+Intervals are half-open ``[start, end)`` over Hilbert ids, stored uint64 on
+host (ids themselves fit uint32 for N <= 16).
+"""
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+from . import geometry, rasterize
+from .hilbert import d2xy, xy2d
+from .rasterize import Extent, GLOBAL_EXTENT
+
+__all__ = [
+    "intervals_from_ids", "april_from_cells", "onestep", "ids_in_intervals",
+    "PIP_COUNTER",
+]
+
+# PiP-test counter (validates the paper's OneStep(Neighbors) claim of
+# 40-70% fewer PiP tests; reset/read by benchmarks/construction.py)
+PIP_COUNTER = {"count": 0}
+
+
+def intervals_from_ids(ids: np.ndarray) -> np.ndarray:
+    """Merge a sorted unique id array into [I,2] half-open intervals."""
+    ids = np.asarray(ids, dtype=np.uint64)
+    if len(ids) == 0:
+        return np.zeros((0, 2), dtype=np.uint64)
+    brk = np.nonzero(np.diff(ids) != 1)[0]
+    starts = np.concatenate([ids[:1], ids[brk + 1]])
+    ends = np.concatenate([ids[brk], ids[-1:]]) + np.uint64(1)
+    return np.stack([starts, ends], axis=1)
+
+
+def ids_in_intervals(intervals: np.ndarray) -> np.ndarray:
+    """Expand [I,2] intervals back to a sorted id array (test helper)."""
+    if len(intervals) == 0:
+        return np.zeros((0,), dtype=np.uint64)
+    out = [np.arange(s, e, dtype=np.uint64) for s, e in intervals]
+    return np.concatenate(out) if out else np.zeros((0,), dtype=np.uint64)
+
+
+def april_from_cells(partial_cells: np.ndarray, full_cells: np.ndarray,
+                     n_order: int) -> tuple[np.ndarray, np.ndarray]:
+    """(A-list, F-list) from labeled cell-coordinate sets (full-raster path)."""
+    p_ids = rasterize.cells_to_hilbert(np.asarray(partial_cells, np.int64), n_order)
+    f_ids = rasterize.cells_to_hilbert(np.asarray(full_cells, np.int64), n_order)
+    a_ids = np.union1d(p_ids, f_ids)
+    return intervals_from_ids(a_ids), intervals_from_ids(f_ids)
+
+
+def onestep(
+    verts: np.ndarray, n: int, n_order: int,
+    extent: Extent = GLOBAL_EXTENT, method: str = "batched",
+) -> tuple[np.ndarray, np.ndarray]:
+    """One-step intervalization (paper Alg. 3 + TPU-adapted batched variant).
+
+    Returns (A-list [Ia,2], F-list [If,2]) uint64 half-open intervals.
+    """
+    v = np.asarray(verts, np.float64)
+    cells = rasterize.dda_partial_cells(v, n, n_order, extent)
+    p = rasterize.cells_to_hilbert(cells, n_order)
+    if len(p) == 0:
+        return np.zeros((0, 2), np.uint64), np.zeros((0, 2), np.uint64)
+
+    # Partial runs and the R+1 gaps around them (incl. virtual lead/trail).
+    brk = np.nonzero(np.diff(p) != 1)[0]
+    run_start = np.concatenate([p[:1], p[brk + 1]])            # [R]
+    run_end = np.concatenate([p[brk], p[-1:]]) + np.uint64(1)  # [R]
+    n_cells_total = np.uint64(1) << np.uint64(2 * n_order)
+    gap_start = np.concatenate([[np.uint64(0)], run_end])      # [R+1]
+    gap_end = np.concatenate([run_start, [n_cells_total]])     # [R+1]
+    nonzero = gap_end > gap_start                              # [R+1]
+
+    gap_full = np.zeros(len(gap_start), dtype=bool)
+    idx = np.nonzero(nonzero)[0]
+    if len(idx):
+        if method == "batched":
+            gap_full[idx] = _classify_gaps_batched(
+                v, n, n_order, extent, gap_start[idx])
+        elif method == "pips":
+            gap_full[idx] = _classify_gaps_pips(
+                v, n, n_order, extent, gap_start[idx])
+        elif method == "neighbors":
+            gap_full[idx] = _classify_gaps_neighbors(
+                v, n, n_order, extent, p, gap_start[idx], gap_end[idx])
+        else:
+            raise ValueError(f"unknown method {method!r}")
+
+    return _assemble(run_start, run_end, gap_start, gap_end, gap_full)
+
+
+def _assemble(run_start, run_end, gap_start, gap_end, gap_full):
+    """Interleave gap/run blocks: G0 R0 G1 R1 ... R_{R-1} G_R; A-intervals
+    break exactly at non-Full gaps; F-intervals are the Full gaps."""
+    R = len(run_start)
+    f_sel = gap_full & (gap_end > gap_start)
+    f_list = np.stack([gap_start[f_sel], gap_end[f_sel]], axis=1).astype(np.uint64)
+
+    # Block sequence starts/ends + A-membership flags, interleaved.
+    n_blocks = 2 * R + 1
+    b_start = np.empty(n_blocks, dtype=np.uint64)
+    b_end = np.empty(n_blocks, dtype=np.uint64)
+    b_in_a = np.empty(n_blocks, dtype=bool)
+    b_start[0::2] = gap_start; b_end[0::2] = gap_end; b_in_a[0::2] = f_sel
+    b_start[1::2] = run_start; b_end[1::2] = run_end; b_in_a[1::2] = True
+
+    # Merge maximal runs of consecutive in-A blocks (zero-length gaps that are
+    # not Full break nothing only if marked in_a; they are not, but they are
+    # also zero-length — exclude them so they don't split runs).
+    zero_len = b_end == b_start
+    keep = ~zero_len
+    bs, be, ba = b_start[keep], b_end[keep], b_in_a[keep]
+    if len(bs) == 0:
+        return np.zeros((0, 2), np.uint64), f_list
+    # contiguity: next block starts where previous ends AND both in A
+    joined = (bs[1:] == be[:-1]) & ba[1:] & ba[:-1]
+    seg_break = ~joined
+    a_blocks_idx = np.nonzero(ba)[0]
+    # A-interval starts: in-A block whose predecessor isn't joined-in-A
+    starts_mask = ba & np.concatenate([[True], seg_break])
+    ends_mask = ba & np.concatenate([seg_break, [True]])
+    a_list = np.stack([bs[starts_mask], be[ends_mask]], axis=1).astype(np.uint64)
+    return a_list, f_list
+
+
+def _gap_head_centers(gap_start, n_order, extent):
+    hx, hy = d2xy(n_order, np.asarray(gap_start, np.uint64))
+    return rasterize.cell_centers(hx, hy, n_order, extent)
+
+
+def _classify_gaps_batched(v, n, n_order, extent, gap_start) -> np.ndarray:
+    """ALL gap heads tested in one vectorized PiP pass (TPU-adapted)."""
+    centers = _gap_head_centers(gap_start, n_order, extent)
+    PIP_COUNTER["count"] += len(gap_start)
+    return geometry.points_in_polygon(centers, v[: int(n)])
+
+
+def _classify_gaps_pips(v, n, n_order, extent, gap_start) -> np.ndarray:
+    """One PiP per gap, sequential — OneStep (PiPs) of Table 11."""
+    centers = _gap_head_centers(gap_start, n_order, extent)
+    out = np.zeros(len(gap_start), dtype=bool)
+    poly = v[: int(n)]
+    PIP_COUNTER["count"] += len(gap_start)
+    for i in range(len(gap_start)):          # deliberate sequential loop
+        out[i] = bool(geometry.points_in_polygon(centers[i: i + 1], poly)[0])
+    return out
+
+
+def _classify_gaps_neighbors(v, n, n_order, extent, p, gap_start, gap_end) -> np.ndarray:
+    """Faithful Alg. 3 CheckNeighbors: inspect 4-adjacent cells of the gap
+    head with SMALLER Hilbert id; inherit Full/Empty from a resolved gap, else
+    fall back to one PiP test. Sequential by construction."""
+    poly = v[: int(n)]
+    G = 1 << n_order
+    n_gaps = len(gap_start)
+    out = np.zeros(n_gaps, dtype=bool)
+    f_starts: list[int] = []; f_ends: list[int] = []
+    e_starts: list[int] = []; e_ends: list[int] = []
+    p_list = p.tolist()
+
+    def in_intervals(idv: int, starts: list[int], ends: list[int]) -> bool:
+        k = bisect.bisect_right(starts, idv) - 1
+        return k >= 0 and idv < ends[k]
+
+    for g in range(n_gaps):
+        head = int(gap_start[g])
+        hx, hy = d2xy(n_order, np.array([head], dtype=np.uint64))
+        hx, hy = int(hx[0]), int(hy[0])
+        decided = None
+        for nx_, ny_ in ((hx + 1, hy), (hx - 1, hy), (hx, hy + 1), (hx, hy - 1)):
+            if not (0 <= nx_ < G and 0 <= ny_ < G):
+                continue
+            nid = int(xy2d(n_order, np.array([nx_]), np.array([ny_]))[0])
+            if nid >= head:
+                continue  # not yet visited in Hilbert order
+            k = bisect.bisect_left(p_list, nid)
+            if k < len(p_list) and p_list[k] == nid:
+                continue  # partial neighbor is uninformative
+            if in_intervals(nid, f_starts, f_ends):
+                decided = True
+                break
+            if in_intervals(nid, e_starts, e_ends):
+                decided = False
+                break
+        if decided is None:
+            c = rasterize.cell_centers(np.array([hx]), np.array([hy]), n_order, extent)
+            PIP_COUNTER["count"] += 1
+            decided = bool(geometry.points_in_polygon(c, poly)[0])
+        out[g] = decided
+        if decided:
+            f_starts.append(int(gap_start[g])); f_ends.append(int(gap_end[g]))
+        else:
+            e_starts.append(int(gap_start[g])); e_ends.append(int(gap_end[g]))
+    return out

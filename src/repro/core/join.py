@@ -1,0 +1,272 @@
+"""Interval joins: the APRIL intermediate filter (paper §4.2, Algorithm 2).
+
+Two execution styles:
+
+* **Faithful sequential merge joins** (`interval_join_pair`,
+  `april_verdict_pair`) — the paper's two-pointer O(n+m) loops with early
+  exit. Host/NumPy; used as the reference and for CPU-baseline benchmarks.
+* **Vectorized batched joins** (`batch_overlap_np`, `batch_overlap_jnp`,
+  `april_filter_batch`) — the TPU adaptation: each interval of X binary-
+  searches Y (both lists are sorted and disjoint), giving a fully
+  data-parallel O(n log m) test, batched over thousands of candidate pairs.
+  Device arrays use *biased int32* with inclusive-last endpoints (see
+  ``april.py``). `kernels/interval_join` provides the Pallas version.
+
+Verdicts follow the paper's trichotomy: a pair is a sure non-result
+(TRUE_NEG, AA-join empty), a sure result (TRUE_HIT, AF- or FA-join finds an
+overlap), or INDECISIVE (forwarded to refinement).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .hilbert import u32_to_biased_i32
+
+try:
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+    jnp = None
+
+__all__ = [
+    "TRUE_NEG", "TRUE_HIT", "INDECISIVE",
+    "interval_join_pair", "april_verdict_pair", "within_verdict_pair",
+    "linestring_verdict_pair", "pack_lists", "batch_overlap_np",
+    "batch_overlap_jnp", "april_filter_batch", "containment_join_pair",
+    "adaptive_order",
+]
+
+TRUE_NEG, TRUE_HIT, INDECISIVE = 0, 1, 2
+I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# Faithful sequential joins (paper Algorithm 2, host reference)
+# ---------------------------------------------------------------------------
+
+def interval_join_pair(X: np.ndarray, Y: np.ndarray) -> bool:
+    """Two-pointer merge join over sorted disjoint half-open intervals.
+    Returns True iff any pair overlaps (paper Alg. 2 `IntervalJoin`)."""
+    i = j = 0
+    nx, ny = len(X), len(Y)
+    while i < nx and j < ny:
+        xs, xe = X[i]
+        ys, ye = Y[j]
+        if xs < ye and ys < xe:
+            return True
+        if xe <= ye:
+            i += 1
+        else:
+            j += 1
+    return False
+
+
+def containment_join_pair(X: np.ndarray, F: np.ndarray) -> bool:
+    """True iff EVERY interval of X is contained in some interval of F
+    (within-join variant of the AF-join, §4.3.2)."""
+    j = 0
+    nf = len(F)
+    for xs, xe in X:
+        while j < nf and F[j][1] < xe:
+            j += 1
+        if j >= nf or not (F[j][0] <= xs and xe <= F[j][1]):
+            return False
+    return True
+
+
+def april_verdict_pair(
+    Ar: np.ndarray, Fr: np.ndarray, As: np.ndarray, Fs: np.ndarray,
+    order: tuple[str, ...] = ("AA", "AF", "FA"),
+) -> int:
+    """APRIL intermediate filter for one candidate pair (Algorithm 2).
+
+    ``order`` permutes the three joins (§7.2.2 join-order study). Semantics
+    are order-invariant; early exits differ.
+    """
+    lists = {"AA": (Ar, As), "AF": (Ar, Fs), "FA": (Fr, As)}
+    aa_overlap = None
+    for step in order:
+        X, Y = lists[step]
+        hit = interval_join_pair(X, Y)
+        if step == "AA":
+            aa_overlap = hit
+            if not hit:
+                return TRUE_NEG
+        elif hit:
+            return TRUE_HIT
+    if aa_overlap is None:   # AA ran last and was True (else returned above)
+        raise AssertionError("order must include 'AA'")
+    return INDECISIVE
+
+
+def adaptive_order(mbr_r, mbr_s, nf_r: int, nf_s: int) -> tuple[str, ...]:
+    """Per-pair join-order selection (the paper's §9 future-work item).
+
+    Heuristic from object statistics available before any interval work:
+    the MBR-overlap fraction of the smaller object predicts hit likelihood.
+    Pairs whose common MBR covers most of one object are likely TRUE HITS
+    -> run the cheap hit-detecting join (AF/FA, picking the side with the
+    larger F-list) first; barely-touching pairs are likely TRUE NEGATIVES
+    -> keep AA first (the paper's default).
+    """
+    ix = max(0.0, min(mbr_r[2], mbr_s[2]) - max(mbr_r[0], mbr_s[0]))
+    iy = max(0.0, min(mbr_r[3], mbr_s[3]) - max(mbr_r[1], mbr_s[1]))
+    inter = ix * iy
+    area_r = max(1e-30, (mbr_r[2] - mbr_r[0]) * (mbr_r[3] - mbr_r[1]))
+    area_s = max(1e-30, (mbr_s[2] - mbr_s[0]) * (mbr_s[3] - mbr_s[1]))
+    cover = inter / min(area_r, area_s)
+    if cover > 0.6 and (nf_r or nf_s):
+        return ("AF", "FA", "AA") if nf_s >= nf_r else ("FA", "AF", "AA")
+    return ("AA", "AF", "FA")
+
+
+def within_verdict_pair(Ar, Fr, As, Fs) -> int:
+    """Within-join filter (§4.3.2): r within s?  AA disjoint => TRUE_NEG;
+    every A(r) interval inside an F(s) interval => TRUE_HIT; else indecisive."""
+    if not interval_join_pair(Ar, As):
+        return TRUE_NEG
+    if len(Ar) and containment_join_pair(Ar, Fs):
+        return TRUE_HIT
+    return INDECISIVE
+
+
+def linestring_verdict_pair(Ap, Fp, cell_ids: np.ndarray) -> int:
+    """Polygon x linestring filter (§4.3.3). The linestring is a sorted
+    Partial cell-id array, treated as unit intervals."""
+    cells = np.stack([cell_ids, cell_ids + np.uint64(1)], axis=1) \
+        if len(cell_ids) else np.zeros((0, 2), np.uint64)
+    if not interval_join_pair(Ap, cells):
+        return TRUE_NEG
+    if interval_join_pair(Fp, cells):
+        return TRUE_HIT
+    return INDECISIVE
+
+
+# ---------------------------------------------------------------------------
+# Vectorized batched joins (TPU-adapted; numpy reference + jnp device)
+# ---------------------------------------------------------------------------
+
+def pack_lists(store, idx: np.ndarray, kind: str, pad_to: int | None = None):
+    """Pack interval lists store[kind][idx] into padded biased-int32 arrays.
+
+    Returns (starts [B, I], lasts [B, I], counts [B]) where I is the max (or
+    ``pad_to``) interval count; padding slots hold I32_MAX. Endpoints are
+    inclusive-last (end-1) in biased-int32 space. Fully vectorized CSR->
+    padded gather (no per-pair Python loop — this packing is on the host hot
+    path of every device batch).
+    """
+    idx = np.asarray(idx, np.int64)
+    off = store.a_off if kind == "A" else store.f_off
+    ints = store.a_ints if kind == "A" else store.f_ints
+    lo = off[idx]
+    counts = (off[idx + 1] - lo).astype(np.int32)
+    B = len(idx)
+    width = int(max(1, counts.max() if B else 1))
+    if pad_to is not None:
+        width = max(width, pad_to)
+    starts = np.full((B, width), I32_MAX, np.int32)
+    lasts = np.full((B, width), I32_MAX, np.int32)
+    if len(ints) and B:
+        col = np.arange(width)[None, :]
+        mask = col < counts[:, None]                       # [B, width]
+        src = (lo[:, None] + col)[mask]                    # flat gather idx
+        starts[mask] = u32_to_biased_i32(ints[src, 0])
+        lasts[mask] = u32_to_biased_i32(ints[src, 1] - np.uint64(1))
+    return starts, lasts, counts
+
+
+def batch_overlap_np(xs, xl, nx, ys, yl, ny) -> np.ndarray:
+    """NumPy vectorized overlap test per batch row (inclusive-last ints).
+
+    Overlap iff exists (i, j): ys[j] <= xl[i] and xs[i] <= yl[j]. Per x-
+    interval, binary-search y-lasts for the first j with yl[j] >= xs[i].
+    """
+    B, I = xs.shape
+    out = np.zeros(B, dtype=bool)
+    for b in range(B):  # host reference — device path is the jnp/Pallas one
+        nyb = int(ny[b])
+        nxb = int(nx[b])
+        if nyb == 0 or nxb == 0:
+            continue
+        j = np.searchsorted(yl[b, :nyb], xs[b, :nxb], side="left")
+        ok = j < nyb
+        jj = np.minimum(j, nyb - 1)
+        out[b] = bool(np.any(ok & (ys[b, jj] <= xl[b, :nxb])))
+    return out
+
+
+def batch_overlap_jnp(xs, xl, nx, ys, yl, ny):
+    """jnp device version of :func:`batch_overlap_np` (vmapped searchsorted)."""
+    assert jnp is not None
+
+    def one(xs_r, xl_r, nx_r, ys_r, yl_r, ny_r):
+        I = xs_r.shape[0]
+        j = jnp.searchsorted(yl_r, xs_r, side="left")
+        ok = j < ny_r
+        jj = jnp.minimum(j, jnp.maximum(ny_r - 1, 0))
+        ys_at = jnp.take(ys_r, jj)
+        valid_x = jnp.arange(I, dtype=jnp.int32) < nx_r
+        return jnp.any(valid_x & ok & (ys_at <= xl_r))
+
+    return jax.vmap(one)(xs, xl, nx, ys, yl, ny)
+
+
+def _containment_batch_np(xs, xl, nx, fs, fl, nf) -> np.ndarray:
+    """Every x interval contained in some f interval? (within-join, batched)"""
+    B, I = xs.shape
+    out = np.zeros(B, dtype=bool)
+    for b in range(B):
+        nxb, nfb = int(nx[b]), int(nf[b])
+        if nxb == 0:
+            continue
+        if nfb == 0:
+            out[b] = False
+            continue
+        j = np.searchsorted(fl[b, :nfb], xl[b, :nxb], side="left")
+        ok = j < nfb
+        jj = np.minimum(j, nfb - 1)
+        out[b] = bool(np.all(ok & (fs[b, jj] <= xs[b, :nxb])
+                             & (xl[b, :nxb] <= fl[b, jj])))
+    return out
+
+
+def april_filter_batch(
+    store_r, store_s, pairs: np.ndarray,
+    order: tuple[str, ...] = ("AA", "AF", "FA"),
+    use_jnp: bool = False,
+) -> np.ndarray:
+    """Vectorized APRIL filter over candidate pairs [[r_idx, s_idx], ...].
+
+    Returns verdicts [N] int8. The three joins run as masked batch passes in
+    ``order``; pairs decided by an earlier pass are excluded from later ones
+    (batch-level short-circuit — see DESIGN.md §3).
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    verdicts = np.full(N, INDECISIVE, np.int8)
+    if N == 0:
+        return verdicts
+    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
+
+    undecided = np.arange(N)
+    aa_seen = np.zeros(N, dtype=bool)
+    for step in order:
+        if len(undecided) == 0:
+            break
+        r_idx = pairs[undecided, 0]
+        s_idx = pairs[undecided, 1]
+        xk, yk = ("A", "A") if step == "AA" else (("A", "F") if step == "AF" else ("F", "A"))
+        xs, xl, nx = pack_lists(store_r, r_idx, xk)
+        ys, yl, ny = pack_lists(store_s, s_idx, yk)
+        hit = np.asarray(overlap(xs, xl, nx, ys, yl, ny))
+        if step == "AA":
+            aa_seen[undecided] = True
+            verdicts[undecided[~hit]] = TRUE_NEG
+            undecided = undecided[hit]
+        else:
+            verdicts[undecided[hit]] = TRUE_HIT
+            undecided = undecided[~hit]
+    # pairs never killed by AA (when AA ran last) keep INDECISIVE; pairs with
+    # empty A-overlap already got TRUE_NEG above.
+    return verdicts

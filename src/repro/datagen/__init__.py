@@ -1,0 +1,3 @@
+from .synthetic import (  # noqa: F401
+    PolygonDataset, make_dataset, make_linestrings, DATASET_SPECS
+)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance-critical layers.
+
+Each kernel package ships three files:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dtype plumbing, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels are validated on CPU with ``interpret=True`` and designed for the
+TPU memory hierarchy (HBM->VMEM tiles, (8,128) VPU lanes, MXU-aligned dims).
+"""

@@ -1,0 +1,1 @@
+from .ops import april_attention, build_block_intervals  # noqa: F401

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: APRIL-interval block-sparse flash attention.
+
+The beyond-paper bridge (DESIGN.md §5): APRIL classifies raster cells as
+Full / Partial / Empty and stores each class as sorted interval lists along a
+locality-preserving order. A block-sparse attention mask has exactly this
+structure on the (q_block x kv_block) grid:
+
+    Empty   block: no query attends any key        -> skip entirely
+    Full    block: every query attends every key   -> compute, NO mask applied
+    Partial block: boundary of the mask            -> compute + apply mask
+
+Per q-block row the kernel receives an A-interval ``[a_lo, a_hi)`` (blocks to
+visit) and an F-interval ``[f_lo, f_hi)`` (mask-free sub-run) — for causal and
+local-window masks the Partial blocks are exactly the boundary runs flanking
+the F-run, mirroring the paper's A/F-list split. Scalar-prefetched interval
+tables steer the grid; masked-out KV blocks cost no FLOPs or VMEM traffic.
+
+Flash-attention online softmax accumulates in f32 VMEM scratch; the KV axis
+is the innermost grid dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["april_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(iv_ref,                       # scalar prefetch: [nq, 4] int32
+            q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr,
+            *, scale, block_q, block_kv, mask_kind, window, softcap):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    a_lo = iv_ref[qi, 0]
+    f_lo = iv_ref[qi, 1]
+    f_hi = iv_ref[qi, 2]
+    a_hi = iv_ref[qi, 3]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    visit = (ki >= a_lo) & (ki < a_hi)
+
+    @pl.when(visit)
+    def _block():
+        q = q_ref[0]                       # [bq, D]
+        k = k_ref[0]                       # [bkv, D]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bkv]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        partial_blk = (ki < f_lo) | (ki >= f_hi)
+
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kpos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        if mask_kind == "causal":
+            allowed = kpos <= qpos
+        elif mask_kind == "local":
+            allowed = (kpos <= qpos) & (kpos > qpos - window)
+        else:  # 'full' — A/F intervals already encode everything
+            allowed = jnp.ones((block_q, block_kv), bool)
+        # Full blocks skip the mask entirely (the APRIL F-run property)
+        s = jnp.where(partial_blk & ~allowed, NEG_INF, s)
+
+        m_prev = m_scr[...]                # [bq, 1]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)             # [bq, bkv]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.where(l == 0, 1.0, l)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def april_attention_pallas(
+    q, k, v, intervals, *, scale=None, block_q=128, block_kv=128,
+    mask_kind="causal", window=0, softcap=None, interpret=False,
+):
+    """q: [BH, Sq, D]; k/v: [BH, Skv, D]; intervals: [nq_blocks, 4] int32
+    rows (a_lo, f_lo, f_hi, a_hi) in kv-block units. Returns [BH, Sq, D]."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    nq = Sq // block_q
+    nk = Skv // block_kv
+    scale = scale if scale is not None else (1.0 / D ** 0.5)
+
+    grid = (BH, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        mask_kind=mask_kind, window=window, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, D), lambda b, qi, ki, iv: (b, qi, 0)),
+                pl.BlockSpec((1, block_kv, D), lambda b, qi, ki, iv: (b, ki, 0)),
+                pl.BlockSpec((1, block_kv, D), lambda b, qi, ki, iv: (b, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, D),
+                                   lambda b, qi, ki, iv: (b, qi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        interpret=interpret,
+    )(intervals, q, k, v)

@@ -1,0 +1,66 @@
+"""Wrapper: builds the per-q-block A/F interval tables (the APRIL structure
+of the mask) and dispatches the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .april_attention import april_attention_pallas
+
+
+def build_block_intervals(Sq: int, Skv: int, block_q: int, block_kv: int,
+                          mask_kind: str, window: int = 0) -> np.ndarray:
+    """[nq, 4] int32 rows (a_lo, f_lo, f_hi, a_hi) in kv-block units.
+
+    Exactly the APRIL construction on the (q_block x kv_block) raster:
+    a 'cell' (block) is Full iff every (q, k) position it covers is allowed,
+    Partial iff some are, Empty otherwise. For causal/local masks the three
+    classes form contiguous runs per row, so one A- and one F-interval
+    suffice (the general case would carry lists, as in the paper).
+    """
+    nq = Sq // block_q
+    nk = Skv // block_kv
+    out = np.zeros((nq, 4), np.int32)
+    for qi in range(nq):
+        q_lo = qi * block_q
+        q_hi = q_lo + block_q - 1         # inclusive
+        if mask_kind == "causal":
+            lo_pos, hi_pos = 0, q_hi
+            full_lo_pos, full_hi_pos = 0, q_lo  # kpos <= q_lo - 1 + 1
+        elif mask_kind == "local":
+            lo_pos = max(0, q_lo - window + 1)
+            hi_pos = q_hi
+            full_lo_pos = max(0, q_hi - window + 1)
+            full_hi_pos = q_lo
+        else:  # full attention
+            lo_pos, hi_pos = 0, Skv - 1
+            full_lo_pos, full_hi_pos = 0, Skv
+        a_lo = lo_pos // block_kv
+        a_hi = min(nk, hi_pos // block_kv + 1)
+        # Full blocks: fully contained in [full_lo_pos, full_hi_pos)
+        f_lo = (full_lo_pos + block_kv - 1) // block_kv
+        f_hi = max(f_lo, full_hi_pos // block_kv)
+        f_lo = max(f_lo, a_lo)
+        f_hi = min(f_hi, a_hi)
+        if f_hi <= f_lo:
+            f_lo = f_hi = a_lo            # empty F-run
+        out[qi] = (a_lo, f_lo, f_hi, a_hi)
+    return out
+
+
+@partial(jax.jit, static_argnames=(
+    "block_q", "block_kv", "mask_kind", "window", "softcap", "interpret", "scale"))
+def april_attention(q, k, v, *, scale=None, block_q=128, block_kv=128,
+                    mask_kind="causal", window=0, softcap=None,
+                    interpret=False):
+    """Block-interval attention. q: [BH, Sq, D]; k/v: [BH, Skv, D]."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    iv = jnp.asarray(build_block_intervals(
+        Sq, Skv, block_q, block_kv, mask_kind, window))
+    return april_attention_pallas(
+        q, k, v, iv, scale=scale, block_q=block_q, block_kv=block_kv,
+        mask_kind=mask_kind, window=window, softcap=softcap,
+        interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: dense attention with the equivalent mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dense_mask(Sq: int, Skv: int, mask_kind: str, window: int = 0):
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    if mask_kind == "causal":
+        return kpos <= qpos
+    if mask_kind == "local":
+        return (kpos <= qpos) & (kpos > qpos - window)
+    return jnp.ones((Sq, Skv), bool)
+
+
+def april_attention_ref(q, k, v, *, scale=None, mask_kind="causal",
+                        window=0, softcap=None):
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else (1.0 / D ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = dense_mask(Sq, Skv, mask_kind, window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    row_any = mask.any(axis=1)[None, :, None]
+    out = jnp.where(row_any, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import batch_interval_overlap  # noqa: F401

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched sorted-interval-list overlap join.
+
+The paper's intermediate filter reduces to "do two sorted disjoint interval
+lists share a point?" per candidate pair (AA/AF/FA joins). On CPU this is a
+branchy two-pointer merge; on TPU we evaluate the overlap predicate for all
+(i, j) interval pairs of a tile at once on the VPU — lists are short (tens of
+intervals), so the O(I*J) lane-parallel pass beats any serial walk and needs
+no gather/scatter.
+
+Tiling: grid (B/BB, J/JB); each program holds BB pair-rows of X intervals
+([BB, I]) and a JB-wide slab of Y intervals in VMEM, materializes the
+[BB, I, JB] predicate, reduces over (I, JB), and ORs into the [BB] output.
+Endpoints are biased-int32, inclusive-last (see core/april.py); X rows are
+masked by their true interval counts, Y slabs by theirs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["interval_overlap_pallas"]
+
+
+def _kernel(nx_ref, ny_ref, xs_ref, xl_ref, ys_ref, yl_ref, out_ref, *, jb_size):
+    jb = pl.program_id(1)
+    xs = xs_ref[...]            # [BB, I]
+    xl = xl_ref[...]
+    ys = ys_ref[...]            # [BB, JB]
+    yl = yl_ref[...]
+    nx = nx_ref[...]            # [BB]
+    ny = ny_ref[...]
+
+    BB, I = xs.shape
+    JB = ys.shape[1]
+    # overlap(i, j) = ys[j] <= xl[i] and xs[i] <= yl[j]
+    ovl = (ys[:, None, :] <= xl[:, :, None]) & (xs[:, :, None] <= yl[:, None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (BB, I, JB), 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (BB, I, JB), 2) + jb * jb_size
+    valid = (ii < nx[:, None, None]) & (jj < ny[:, None, None])
+    any_hit = jnp.any(ovl & valid, axis=(1, 2))
+
+    @pl.when(jb == 0)
+    def _():
+        out_ref[...] = any_hit
+
+    @pl.when(jb != 0)
+    def _():
+        out_ref[...] = out_ref[...] | any_hit
+
+
+def interval_overlap_pallas(
+    xs, xl, nx, ys, yl, ny, *, block_b: int = 8, block_j: int = 128,
+    interpret: bool = False,
+):
+    """[B] bool: does pair b's X list overlap its Y list?
+
+    xs/xl: [B, I] int32 (biased, inclusive-last, padded with INT32_MAX);
+    ys/yl: [B, J]; nx/ny: [B] int32 true counts.
+    """
+    B, I = xs.shape
+    J = ys.shape[1]
+    assert B % block_b == 0 and J % block_j == 0, (B, J, block_b, block_j)
+    grid = (B // block_b, J // block_j)
+
+    return pl.pallas_call(
+        partial(_kernel, jb_size=block_j),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda b, j: (b,)),            # nx
+            pl.BlockSpec((block_b,), lambda b, j: (b,)),            # ny
+            pl.BlockSpec((block_b, I), lambda b, j: (b, 0)),        # xs
+            pl.BlockSpec((block_b, I), lambda b, j: (b, 0)),        # xl
+            pl.BlockSpec((block_b, block_j), lambda b, j: (b, j)),  # ys
+            pl.BlockSpec((block_b, block_j), lambda b, j: (b, j)),  # yl
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda b, j: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.bool_),
+        interpret=interpret,
+    )(nx, ny, xs, xl, ys, yl)

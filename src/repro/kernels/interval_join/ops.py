@@ -1,0 +1,43 @@
+"""jit'd public wrapper: pads to kernel tile multiples and dispatches."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .interval_join import interval_overlap_pallas
+
+I32_MAX = np.iinfo(np.int32).max
+
+
+def _pad_axis(a, axis, mult, fill):
+    size = a.shape[axis]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(a, pad, constant_values=fill)
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_b", "block_j"))
+def batch_interval_overlap(xs, xl, nx, ys, yl, ny, *, interpret: bool = False,
+                           block_b: int = 8, block_j: int = 128):
+    """Overlap verdicts [B] bool for padded interval batches (any I/J/B)."""
+    xs = _pad_axis(jnp.asarray(xs, jnp.int32), 1, 128, I32_MAX)
+    xl = _pad_axis(jnp.asarray(xl, jnp.int32), 1, 128, I32_MAX)
+    ys = _pad_axis(jnp.asarray(ys, jnp.int32), 1, block_j, I32_MAX)
+    yl = _pad_axis(jnp.asarray(yl, jnp.int32), 1, block_j, I32_MAX)
+    B = xs.shape[0]
+    xs = _pad_axis(xs, 0, block_b, I32_MAX)
+    xl = _pad_axis(xl, 0, block_b, I32_MAX)
+    ys = _pad_axis(ys, 0, block_b, I32_MAX)
+    yl = _pad_axis(yl, 0, block_b, I32_MAX)
+    nx = _pad_axis(jnp.asarray(nx, jnp.int32), 0, block_b, 0)
+    ny = _pad_axis(jnp.asarray(ny, jnp.int32), 0, block_b, 0)
+    out = interval_overlap_pallas(xs, xl, nx, ys, yl, ny,
+                                  block_b=block_b, block_j=block_j,
+                                  interpret=interpret)
+    return out[:B]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the interval-overlap kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interval_overlap_ref(xs, xl, nx, ys, yl, ny):
+    """Same contract as interval_overlap_pallas, dense jnp evaluation."""
+    B, I = xs.shape
+    J = ys.shape[1]
+    ovl = (ys[:, None, :] <= xl[:, :, None]) & (xs[:, :, None] <= yl[:, None, :])
+    ii = jnp.arange(I, dtype=jnp.int32)[None, :, None]
+    jj = jnp.arange(J, dtype=jnp.int32)[None, None, :]
+    valid = (ii < nx[:, None, None]) & (jj < ny[:, None, None])
+    return jnp.any(ovl & valid, axis=(1, 2))

@@ -1,0 +1,1 @@
+from .ops import batch_edges_intersect  # noqa: F401

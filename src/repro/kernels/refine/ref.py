@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the refinement kernel (same eps semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edges_intersect_ref(a0, a1, am, b0, b1, bm, eps: float = 1e-5):
+    def orient(p, q, r):
+        return ((q[..., 0] - p[..., 0]) * (r[..., 1] - p[..., 1])
+                - (q[..., 1] - p[..., 1]) * (r[..., 0] - p[..., 0]))
+
+    A0 = a0[:, :, None, :].astype(jnp.float32)
+    A1 = a1[:, :, None, :].astype(jnp.float32)
+    B0 = b0[:, None, :, :].astype(jnp.float32)
+    B1 = b1[:, None, :, :].astype(jnp.float32)
+    d1 = orient(B0, B1, A0)
+    d2 = orient(B0, B1, A1)
+    d3 = orient(A0, A1, B0)
+    d4 = orient(A0, A1, B1)
+    valid = am[:, :, None] & bm[:, None, :]
+    proper = ((d1 > 0) != (d2 > 0)) & ((d3 > 0) != (d4 > 0))
+    scale = (jnp.abs(A1[..., 0] - A0[..., 0]) + jnp.abs(A1[..., 1] - A0[..., 1])
+             + jnp.abs(B1[..., 0] - B0[..., 0]) + jnp.abs(B1[..., 1] - B0[..., 1]))
+    tol = eps * scale * scale
+    near0 = (jnp.abs(d1) <= tol) | (jnp.abs(d2) <= tol) \
+        | (jnp.abs(d3) <= tol) | (jnp.abs(d4) <= tol)
+    boxes = ((jnp.minimum(A0[..., 0], A1[..., 0]) <= jnp.maximum(B0[..., 0], B1[..., 0]) + tol)
+             & (jnp.minimum(B0[..., 0], B1[..., 0]) <= jnp.maximum(A0[..., 0], A1[..., 0]) + tol)
+             & (jnp.minimum(A0[..., 1], A1[..., 1]) <= jnp.maximum(B0[..., 1], B1[..., 1]) + tol)
+             & (jnp.minimum(B0[..., 1], B1[..., 1]) <= jnp.maximum(A0[..., 1], A1[..., 1]) + tol))
+    hit = jnp.any(proper & ~near0 & valid, axis=(1, 2))
+    unc = jnp.any(near0 & boxes & valid, axis=(1, 2))
+    return hit, unc

@@ -1,0 +1,1 @@
+from .ops import batch_aligned_and  # noqa: F401

@@ -1,0 +1,38 @@
+"""Wrapper: packs host RI bit fragments into word batches and dispatches.
+
+Also provides :func:`pack_bits_u32` / :func:`xor_mask_words` used by tests
+and by the RI device pipeline.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ri_and import aligned_and_pallas
+
+
+def pack_bits_u32(bits: np.ndarray, W: int) -> np.ndarray:
+    """[n] 0/1 -> [W] uint32 words, LSB-first within each word."""
+    out = np.zeros(W, np.uint32)
+    n = min(len(bits), 32 * W)
+    idx = np.arange(n)
+    np.add.at(out, idx // 32,
+              (bits[:n].astype(np.uint32) << (idx % 32).astype(np.uint32)))
+    return out
+
+
+def xor_mask_words(W: int, pattern=(1, 1, 0)) -> np.ndarray:
+    """Repeating 3-bit XOR mask (phase 0) packed into W uint32 words."""
+    bits = np.tile(np.asarray(pattern, np.uint8), (32 * W + 2) // 3)[: 32 * W]
+    return pack_bits_u32(bits, W)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def batch_aligned_and(x_words, y_words, meta, mask_words, *, interpret=False):
+    return aligned_and_pallas(
+        jnp.asarray(x_words, jnp.uint32), jnp.asarray(y_words, jnp.uint32),
+        jnp.asarray(meta, jnp.int32), jnp.asarray(mask_words, jnp.uint32),
+        interpret=interpret)

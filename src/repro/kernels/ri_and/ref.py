@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for ALIGNEDAND: expand words to bit vectors and compare."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _to_bits(words, n_bits_total):
+    """[.., W] uint32 -> [.., 32W] bool, LSB-first per word."""
+    b = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> b[None, :]) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], -1)[..., :n_bits_total]
+
+
+def aligned_and_ref(x_words, y_words, meta, mask_words):
+    """Same contract as aligned_and_pallas (meta: [B,4] int32)."""
+    B, W = x_words.shape
+    nb = 32 * W
+    xb = _to_bits(x_words, nb)           # [B, nb]
+    yb = _to_bits(y_words, nb)
+    mb = _to_bits(mask_words[None, :], nb)[0]
+    pos = jnp.arange(nb)
+    out = []
+    for i in range(B):
+        xo, yo, n, xy = (int(meta[i, 0]), int(meta[i, 1]),
+                         int(meta[i, 2]), int(meta[i, 3]))
+        ax = jnp.roll(xb[i], -xo)
+        ay = jnp.roll(yb[i], -yo)
+        if xy:
+            ay = ay ^ mb
+        keep = pos < n
+        out.append(jnp.any((ax & ay & keep.astype(ax.dtype)) != 0))
+    return jnp.stack(out)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: RI ALIGNEDAND (paper §3.3) on packed uint32 words.
+
+The paper aligns two interval bitstrings byte-by-byte with carry-over and
+ANDs them, early-exiting on the first non-zero byte. Byte loops are scalar
+poison on TPU; here each grid program aligns one fragment pair with
+*vectorized 32-bit funnel shifts* over the whole word vector (roll + shift),
+applies the optional XOR re-encoding mask (same-encoding joins) and the tail
+mask, and reduces with a single any().
+
+Codes are packed LSB-first: stream bit ``3c+t`` is bit ``(3c+t) % 32`` of
+word ``(3c+t) // 32`` (t = position inside the cell's 3-bit code). Fragments
+start on cell boundaries, so the XOR mask's phase is always 0 and the mask
+word pattern (period lcm(3,32) = 3 words) is passed in precomputed.
+
+TPU note: one fragment pair per grid step keeps the shifts scalar-uniform
+(per-row funnel shifts would need lane gathers). Fragment words W is tiny
+(3·cells/32), so the batch axis is the throughput axis — on real hardware
+multiple pairs pipeline through the sequential grid with negligible VMEM
+pressure, and the hot path of APRIL never calls this kernel (RI only).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["aligned_and_pallas"]
+
+
+def _funnel_align(words, off_bits, W):
+    """Extract W words starting at bit offset ``off_bits`` from ``words``."""
+    off_w = off_bits // 32
+    sh = (off_bits % 32).astype(jnp.uint32)
+    cur = jnp.roll(words, -off_w)
+    nxt = jnp.roll(words, -(off_w + 1))
+    hi_sh = (jnp.uint32(32) - sh) % jnp.uint32(32)
+    shifted = (cur >> sh) | jnp.where(sh == 0, jnp.uint32(0), nxt << hi_sh)
+    return shifted
+
+
+def _kernel(meta_ref, x_ref, y_ref, mask_ref, out_ref):
+    # meta row: [1,4] int32 = (x_off_bits, y_off_bits, n_bits, xor_y)
+    x_off = meta_ref[0, 0]
+    y_off = meta_ref[0, 1]
+    n_bits = meta_ref[0, 2]
+    xor_y = meta_ref[0, 3]
+
+    xw = x_ref[0]             # [W] uint32
+    yw = y_ref[0]
+    mask = mask_ref[...]      # [W] uint32 repeating XOR pattern (phase 0)
+    W = xw.shape[0]
+
+    ax = _funnel_align(xw, x_off, W)
+    ay = _funnel_align(yw, y_off, W)
+    ay = jnp.where(xor_y != 0, ay ^ mask, ay)
+
+    # tail mask: word k keeps bits [0, clamp(n_bits - 32k, 0, 32))
+    k = jax.lax.broadcasted_iota(jnp.int32, (W,), 0)
+    rem = jnp.clip(n_bits - 32 * k, 0, 32)
+    full = rem >= 32
+    tail = (jnp.uint32(1) << rem.astype(jnp.uint32)) - jnp.uint32(1)
+    keep = jnp.where(full, jnp.uint32(0xFFFFFFFF), tail)
+
+    out_ref[0, 0] = jnp.any((ax & ay & keep) != 0)
+
+
+def aligned_and_pallas(x_words, y_words, meta, mask_words, *,
+                       interpret: bool = False):
+    """[B] bool. x_words/y_words: [B, W] uint32; meta: [B, 4] int32
+    (x_off_bits, y_off_bits, n_bits, xor_y); mask_words: [W] uint32."""
+    B, W = x_words.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda b: (b, 0)),
+            pl.BlockSpec((1, W), lambda b: (b, 0)),
+            pl.BlockSpec((1, W), lambda b: (b, 0)),
+            pl.BlockSpec((W,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.bool_),
+        interpret=interpret,
+    )(meta, x_words, y_words, mask_words)[:, 0]

@@ -1,0 +1,388 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against abstract inputs (ShapeDtypeStruct — no allocation), then
+extract memory_analysis / cost_analysis / collective bytes for §Roofline.
+
+MUST be run as its own process (the XLA_FLAGS line above pins the 512
+placeholder devices before jax initializes). Results land as one JSON per
+cell under --out, so the sweep is resumable (crashed/killed runs keep
+completed cells).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --arch april_join --mesh multi   # paper system
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_config, input_specs, shape_skip_reason
+from ..models.model import init_model
+from ..models.serve import make_decode_step, make_prefill_step
+from ..models.sharding import (cache_specs, data_axes, make_activation_hook,
+                               named_sharding_tree, opt_state_specs,
+                               param_specs)
+from ..models.train import make_train_step
+from ..optim.adamw import adamw_init
+from .mesh import make_production_mesh
+from .roofline import RooflineReport, collective_bytes, model_flops
+
+JOIN_SHAPES = {  # paper-system cells: (n_pairs, intervals_per_list)
+    "join_256k": (262144, 64),
+    "join_1m": (1048576, 32),
+}
+
+
+def _batch_sharding(mesh, specs, cfg):
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    d = daxes if len(daxes) > 1 else daxes[0]
+    out = {}
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = named_sharding_tree(mesh, cache_specs(v, mesh))
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        elif v.ndim in (2, 3):
+            b = d if v.shape[0] % dsize == 0 else None
+            out[k] = NamedSharding(mesh, P(*((b,) + (None,) * (v.ndim - 1))))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def lower_model_cell(arch: str, shape_name: str, multi_pod: bool,
+                     sequence_parallel: bool = True, remat: str = "dots",
+                     donate: bool = True, probe_cycles: int | None = None,
+                     probe_enc_layers: int | None = None,
+                     probe_tail: bool = False, cfg=None,
+                     zero1_grads: bool = False, sp_prefill: bool = False,
+                     replicate_params: bool = False,
+                     microbatch: int | None = None,
+                     moe_groups: int | None = None):
+    """Returns (lowered, cfg, mesh, mode).
+
+    probe_cycles/probe_enc_layers: truncate+unroll the layer loops — used by
+    the FLOP-correction probes (XLA cost analysis counts while bodies once;
+    see analyze())."""
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    if moe_groups and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=moe_groups))
+    unroll = probe_cycles is not None
+    if probe_cycles is not None:
+        tail = len(cfg.tail_kinds) if probe_tail else 0
+        cfg = dataclasses.replace(
+            cfg, n_layers=probe_cycles * cfg.pattern_period + tail)
+    if probe_enc_layers is not None and cfg.encoder is not None:
+        cfg = dataclasses.replace(
+            cfg, encoder=dataclasses.replace(cfg.encoder,
+                                             n_layers=probe_enc_layers))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = SHAPES[shape_name][2]
+    specs = input_specs(cfg, shape_name)
+
+    params_shape = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.bfloat16))
+    if replicate_params:
+        # context-parallel serving for small models: weights replicated,
+        # BOTH mesh axes shard data/sequence (no TP collectives)
+        ns_params = jax.tree.map(
+            lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), params_shape)
+    else:
+        ns_params = named_sharding_tree(mesh, param_specs(params_shape, mesh))
+    sp_on = (mode == "train" and sequence_parallel) or \
+        (mode == "prefill" and sp_prefill)
+    hook = make_activation_hook(mesh, sequence_parallel=sp_on,
+                                decode=(mode == "decode"))
+    bshard = _batch_sharding(mesh, specs, cfg)
+
+    with mesh:
+        if mode == "train":
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            ns_opt = named_sharding_tree(mesh, opt_state_specs(params_shape, mesh))
+            step = make_train_step(
+                cfg, remat_policy=remat, activation_hook=hook, unroll=unroll,
+                grad_shardings=(ns_opt["m"] if zero1_grads else None),
+                microbatch=microbatch)
+            jitted = jax.jit(
+                step,
+                in_shardings=(ns_params, ns_opt,
+                              {k: bshard[k] for k in specs}),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        elif mode == "prefill":
+            step = make_prefill_step(cfg, activation_hook=hook, unroll=unroll)
+            jitted = jax.jit(step, in_shardings=(ns_params,
+                                                 {k: bshard[k] for k in specs}))
+            lowered = jitted.lower(params_shape, specs)
+        else:  # decode
+            step = make_decode_step(cfg, activation_hook=hook, unroll=unroll)
+            caches_shape = specs.pop("caches")
+            ns_caches = bshard.pop("caches")
+            jitted = jax.jit(
+                step,
+                in_shardings=(ns_params, ns_caches,
+                              {k: bshard[k] for k in specs}),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_shape, caches_shape, specs)
+    return lowered, cfg, mesh, mode
+
+
+def lower_join_cell(shape_name: str, multi_pod: bool):
+    """Lower the paper's distributed APRIL filter on the production mesh."""
+    from ..spatial.distributed import april_filter_kernel_jnp
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    d = data_axes(mesh)
+    d = d if len(d) > 1 else d[0]
+    B, I = JOIN_SHAPES[shape_name]
+    sds = jax.ShapeDtypeStruct
+    batch = {k: sds((B, I), jnp.int32)
+             for k in ("ra_s", "ra_l", "rf_s", "rf_l",
+                       "sa_s", "sa_l", "sf_s", "sf_l")}
+    batch.update({k: sds((B,), jnp.int32)
+                  for k in ("ra_n", "rf_n", "sa_n", "sf_n")})
+    shard = {k: NamedSharding(mesh, P(d) if v.ndim == 1 else P(d, None))
+             for k, v in batch.items()}
+
+    def step(b):
+        verd = april_filter_kernel_jnp(b)
+        counts = jnp.stack([jnp.sum(verd == 0), jnp.sum(verd == 1),
+                            jnp.sum(verd == 2)])
+        return verd, counts
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(shard,)).lower(batch)
+    return lowered, mesh
+
+
+def _cell_metrics(compiled) -> dict:
+    """(flops, bytes, per-kind collective bytes) of one compiled module."""
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _combine(u1: dict, u2: dict, n: int) -> dict:
+    """total = U1 + (n-1)(U2-U1), per metric (clamped at U1)."""
+    out = {"flops": max(u1["flops"], u1["flops"] + (n - 1) * (u2["flops"] - u1["flops"])),
+           "bytes": max(u1["bytes"], u1["bytes"] + (n - 1) * (u2["bytes"] - u1["bytes"]))}
+    coll = {}
+    for k in set(u1["coll"]) | set(u2["coll"]):
+        a, b = u1["coll"].get(k, 0), u2["coll"].get(k, 0)
+        coll[k] = max(a, a + (n - 1) * (b - a))
+    out["coll"] = coll
+    return out
+
+
+def probe_metrics(arch, shape_name, multi_pod, cfg=None, **kw) -> dict:
+    """Loop-corrected per-chip metrics via unrolled 1/2-cycle probes.
+
+    XLA's HloCostAnalysis counts while-loop bodies ONCE, so the scanned
+    full-model lower under-reports FLOPs/bytes/collectives by ~n_cycles.
+    Probes with truncated, unrolled stacks give the per-cycle body cost:
+    total = U1 + (n_cycles-1)(U2-U1), and likewise for the encoder loop.
+    """
+    import dataclasses
+    base = cfg or get_config(arch)
+    kw.pop("probe_cycles", None)
+
+    def probe(d, e, tail=False):
+        lowered, pcfg, mesh, mode = lower_model_cell(
+            arch, shape_name, multi_pod, probe_cycles=d,
+            probe_enc_layers=e, probe_tail=tail, donate=False, cfg=cfg, **kw)
+        return _cell_metrics(lowered.compile())
+
+    has_enc = base.encoder is not None
+    u11 = probe(1, 1 if has_enc else None)
+    u21 = probe(2, 1 if has_enc else None)
+    total = _combine(u11, u21, base.n_cycles)
+    if base.tail_kinds:
+        u1t = probe(1, 1 if has_enc else None, tail=True)
+        total = {
+            "flops": total["flops"] + (u1t["flops"] - u11["flops"]),
+            "bytes": total["bytes"] + (u1t["bytes"] - u11["bytes"]),
+            "coll": {k: total["coll"].get(k, 0)
+                     + (u1t["coll"].get(k, 0) - u11["coll"].get(k, 0))
+                     for k in set(total["coll"]) | set(u1t["coll"])},
+        }
+    if has_enc:
+        u12 = probe(1, 2)
+        enc_body = _combine(u11, u12, base.encoder.n_layers)
+        # add the encoder's extra (n_enc - 1) bodies on top
+        total = {
+            "flops": total["flops"] + (enc_body["flops"] - u11["flops"]),
+            "bytes": total["bytes"] + (enc_body["bytes"] - u11["bytes"]),
+            "coll": {k: total["coll"].get(k, 0)
+                     + (enc_body["coll"].get(k, 0) - u11["coll"].get(k, 0))
+                     for k in set(total["coll"]) | set(enc_body["coll"])},
+        }
+    return total
+
+
+def analyze(lowered, *, arch, shape_name, mesh, cfg=None,
+            corrected: dict | None = None) -> dict:
+    compiled_t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - compiled_t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_bytes = sum(
+            int(getattr(mem, k, 0) or 0)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"))
+        # alias'd (donated) bytes are double-counted in arg+output
+        mem_bytes -= int(getattr(mem, "alias_size_in_bytes", 0) or 0) * 2
+        mem_detail = {k: int(getattr(mem, k, 0) or 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes")}
+    except Exception as e:  # pragma: no cover
+        mem_bytes, mem_detail = 0, {"error": str(e)}
+
+    raw = _cell_metrics(compiled)
+    if corrected is not None:
+        flops, bytes_accessed, coll = (corrected["flops"],
+                                       corrected["bytes"], corrected["coll"])
+    else:
+        flops, bytes_accessed, coll = raw["flops"], raw["bytes"], raw["coll"]
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    mf = model_flops(cfg, shape_name, SHAPES) if cfg is not None else 0.0
+    report = RooflineReport(
+        arch=arch, shape=shape_name,
+        mesh="x".join(str(v) for v in mesh.shape.values()),
+        chips=n_chips, flops_per_chip=flops, bytes_per_chip=bytes_accessed,
+        coll_bytes_per_chip=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops_global=mf, memory_per_chip_bytes=float(mem_bytes),
+        compile_seconds=compile_s)
+    out = report.to_dict()
+    out["memory_detail"] = mem_detail
+    out["hlo_collective_ops"] = {k: v for k, v in coll.items()}
+    out["raw_scan_metrics"] = raw
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, q_chunk=None, tag="",
+             **kw):
+    mesh_tag = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_tag}{tag}.json")
+    if q_chunk is not None and arch != "april_join":
+        import dataclasses
+        kw["cfg"] = dataclasses.replace(get_config(arch),
+                                        attn_q_chunk=q_chunk)
+    if os.path.exists(path):
+        print(f"[skip-done] {path}")
+        return json.load(open(path))
+
+    if arch == "april_join":
+        t0 = time.time()
+        lowered, mesh = lower_join_cell(shape_name, multi_pod)
+        res = analyze(lowered, arch=arch, shape_name=shape_name, mesh=mesh)
+    else:
+        cfg = get_config(arch)
+        reason = shape_skip_reason(cfg, shape_name)
+        if reason:
+            res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "skipped": reason}
+            json.dump(res, open(path, "w"), indent=1)
+            print(f"[skip] {arch} {shape_name} {mesh_tag}: {reason}")
+            return res
+        t0 = time.time()
+        lowered, cfg, mesh, mode = lower_model_cell(
+            arch, shape_name, multi_pod, **kw)
+        corrected = probe_metrics(arch, shape_name, multi_pod, **kw)
+        res = analyze(lowered, arch=arch, shape_name=shape_name, mesh=mesh,
+                      cfg=cfg, corrected=corrected)
+    res["lower_seconds"] = time.time() - t0 - res.get("compile_seconds", 0)
+    json.dump(res, open(path, "w"), indent=1)
+    print(f"[ok] {arch} {shape_name} {mesh_tag}: "
+          f"flops/chip={res.get('flops_per_chip', 0):.3e} "
+          f"coll/chip={res.get('coll_bytes_per_chip', 0):.3e} "
+          f"mem/chip={res.get('memory_per_chip_bytes', 0) / 2**30:.2f}GiB "
+          f"bottleneck={res.get('bottleneck')} "
+          f"compile={res.get('compile_seconds', 0):.1f}s")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel activation sharding")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--q-chunk", type=int, default=None,
+                    help="query-chunked attention (A-interval banding)")
+    ap.add_argument("--zero1-grads", action="store_true",
+                    help="constrain grads to ZeRO-1 shard layout (RS+AG)")
+    ap.add_argument("--sp-prefill", action="store_true",
+                    help="sequence-parallel activations in prefill too")
+    ap.add_argument("--replicate-params", action="store_true",
+                    help="context-parallel serving: replicated weights")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="gradient-accumulation splits per train step")
+    ap.add_argument("--moe-groups", type=int, default=None,
+                    help="grouped 2D MoE dispatch (set = data-axis size)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (hillclimb variants)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.arch == "april_join":
+        cells = [("april_join", s) for s in
+                 ([args.shape] if args.shape else list(JOIN_SHAPES))]
+    elif args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_name, mp, args.out,
+                         sequence_parallel=not args.no_sp, remat=args.remat,
+                         q_chunk=args.q_chunk, tag=args.tag,
+                         zero1_grads=args.zero1_grads,
+                         sp_prefill=args.sp_prefill,
+                         replicate_params=args.replicate_params,
+                         microbatch=args.microbatch,
+                         moe_groups=args.moe_groups)
+            except Exception as e:
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"[FAIL] {arch} {shape_name} "
+                      f"{'multi' if mp else 'single'}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

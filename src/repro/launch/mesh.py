@@ -1,0 +1,16 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_data: int, n_model: int):
+    """Small mesh for tests on forced-host-device backends."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,139 @@
+"""Distributed spatial-join launcher — the paper's system as a service run.
+
+  PYTHONPATH=src python -m repro.launch.spatial_join --r T1 --s T2 \
+      --n-order 8 --parts 2 --ckpt-dir /tmp/join_ckpt
+
+Orchestration (DESIGN.md §4): partition the map (§5.2) -> per-partition
+APRIL stores -> MBR join per partition -> bucketed pair batches -> sharded
+APRIL filter across the device mesh -> batched refinement of the indecisive
+remainder. Fault tolerance: per-partition results checkpoint through
+CheckpointManager, so a killed run resumes at partition granularity; the
+WorkQueue re-leases partitions whose workers stall (straggler mitigation).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core import partition as partition_mod
+from ..core.april import build_april
+from ..core.join import INDECISIVE, TRUE_HIT
+from ..datagen import make_dataset
+from ..runtime.checkpoint import CheckpointManager
+from ..runtime.elastic import WorkQueue
+from ..spatial import refine
+from ..spatial.distributed import (bucket_pairs, distributed_april_filter,
+                                   make_join_mesh)
+from ..spatial.mbr_join import mbr_join
+
+
+def join_partition(R, S, stores_r, stores_s, parting, pidx, mesh):
+    """Filter + refine all candidate pairs owned by partition ``pidx``."""
+    part = parting.partitions[pidx]
+    ridx = part.obj_idx[R.name]
+    sidx = part.obj_idx[S.name]
+    sr, ss = stores_r[pidx], stores_s[pidx]
+    if sr is None or ss is None or len(ridx) == 0 or len(sidx) == 0:
+        return np.zeros((0, 2), np.int64), {}
+
+    local_pairs = mbr_join(R.mbrs[ridx], S.mbrs[sidx])
+    if len(local_pairs) == 0:
+        return np.zeros((0, 2), np.int64), {}
+    # ownership: reference point must fall inside this partition's tile
+    own = np.asarray([
+        partition_mod.reference_partition(
+            parting.parts_per_dim, R.mbrs[ridx[i]], S.mbrs[sidx[j]]) == pidx
+        for i, j in local_pairs])
+    local_pairs = local_pairs[own]
+    if len(local_pairs) == 0:
+        return np.zeros((0, 2), np.int64), {}
+
+    results = []
+    counts = {"true_neg": 0, "true_hit": 0, "indecisive": 0}
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    for packed in bucket_pairs(sr, ss, local_pairs, n_devices=n_dev):
+        verd, c = distributed_april_filter(packed, mesh)
+        for k in counts:
+            counts[k] += c[k]
+        valid = packed.valid
+        hits = packed.pair_idx[valid & (verd == TRUE_HIT)]
+        indec = packed.pair_idx[valid & (verd == INDECISIVE)]
+        if len(indec):
+            glob = np.stack([ridx[indec[:, 0]], sidx[indec[:, 1]]], axis=1)
+            ref = refine.refine_pairs(R, S, glob)
+            results.append(glob[ref])
+        if len(hits):
+            results.append(np.stack([ridx[hits[:, 0]], sidx[hits[:, 1]]],
+                                    axis=1))
+    out = (np.concatenate(results, axis=0) if results
+           else np.zeros((0, 2), np.int64))
+    return out, counts
+
+
+def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
+             seed=0, count_r=None, count_s=None, mesh=None):
+    R = make_dataset(r_name, seed=seed, count=count_r)
+    S = make_dataset(s_name, seed=seed + 1, count=count_s)
+    mesh = mesh or make_join_mesh()
+
+    t0 = time.perf_counter()
+    parting = partition_mod.partition_space([R, S], parts_per_dim=parts)
+    stores_r = parting.build_april(R, n_order)
+    stores_s = parting.build_april(S, n_order)
+    t_build = time.perf_counter() - t0
+
+    mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+    done: dict[int, np.ndarray] = {}
+    if mgr is not None:
+        restored = mgr.restore()
+        if restored is not None:
+            _, flat, extra = restored
+            done = {int(k.split("_")[1]): v for k, v in flat.items()
+                    if k.startswith("part_")}
+            print(f"[resume] {len(done)} partitions already joined")
+
+    queue = WorkQueue([p for p in range(len(parting)) if p not in done],
+                      lease_seconds=600)
+    totals = {"true_neg": 0, "true_hit": 0, "indecisive": 0}
+    t0 = time.perf_counter()
+    while not queue.finished:
+        p = queue.acquire()
+        if p is None:
+            break
+        res, counts = join_partition(R, S, stores_r, stores_s, parting, p, mesh)
+        done[p] = res
+        for k in totals:
+            totals[k] += counts.get(k, 0)
+        queue.complete(p)
+        if mgr is not None:
+            mgr.save(len(done), {f"part_{k}": v for k, v in done.items()})
+    t_join = time.perf_counter() - t0
+    if mgr is not None:
+        mgr.wait()
+
+    results = np.concatenate([v for v in done.values() if len(v)], axis=0) \
+        if any(len(v) for v in done.values()) else np.zeros((0, 2), np.int64)
+    print(f"build {t_build:.2f}s  join {t_join:.2f}s  "
+          f"results {len(results)}  filter counts {totals}")
+    return results, totals
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--r", default="T1")
+    ap.add_argument("--s", default="T2")
+    ap.add_argument("--n-order", type=int, default=8)
+    ap.add_argument("--parts", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--count-r", type=int, default=None)
+    ap.add_argument("--count-s", type=int, default=None)
+    args = ap.parse_args()
+    run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
+             ckpt_dir=args.ckpt_dir, count_r=args.count_r,
+             count_s=args.count_s)
+
+
+if __name__ == "__main__":
+    main()

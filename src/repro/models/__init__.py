@@ -1,0 +1,8 @@
+"""Assigned-architecture substrate: pure-JAX transformer/SSM/MoE stack.
+
+Param trees are plain nested dicts of jnp arrays; layers are stacked along a
+leading axis per pattern position and executed with lax.scan (small HLO,
+fast multi-pod compiles). See models/model.py for the assembly.
+"""
+from .config import ModelConfig, MoEConfig, SSMConfig, EncoderConfig  # noqa: F401
+from .model import init_model, forward_logits  # noqa: F401

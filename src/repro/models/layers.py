@@ -1,0 +1,246 @@
+"""Transformer building blocks (pure JAX, param dicts, bf16-friendly).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take an rng key + config;
+  * activations are [B, S, D]; attention folds heads internally;
+  * every block is written to be scanned over a stacked leading layer axis;
+  * sharding is applied OUTSIDE via tree-of-PartitionSpec (models/sharding.py)
+    plus a few with_sharding_constraint hooks (SP at layer boundaries).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms/rope
+
+def rmsnorm_init(d):
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["w"]
+    return out.astype(x.dtype)
+
+
+def rope(x, pos, theta):
+    """x: [B, S, H, Dh]; pos: [S] (shared) or [B, S] (per-slot decode)."""
+    B, S, H, Dh = x.shape
+    half = Dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.asarray(pos, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]                                # [1, S]
+    angles = pos[..., None] * freqs                       # [B', S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False):
+    d, dh = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, H * dh)),
+        "wk": _init(ks[1], (d, KV * dh)),
+        "wv": _init(ks[2], (d, KV * dh)),
+        "wo": _init(ks[3], (H * dh, d), scale=1.0 / np.sqrt(H * dh)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * dh,), jnp.float32)
+    return p
+
+
+def _fold_heads(x, n, dh):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, dh)
+
+
+def attention(p, x, cfg: ModelConfig, *, kind: str, pos_offset=0,
+              cache=None, ctx=None, mask_mode="causal"):
+    """Self- or cross-attention.
+
+    kind: 'attn' (full) | 'local' (sliding window) — mask choice.
+    cache: optional dict {k, v, pos} for decode; k/v are [B, KV, C, dh] with
+    C = context capacity (ring buffer of size `local_window` for local
+    layers). ctx: [B, T, D] cross-attention context (kind ignored, bidir).
+    Returns (out [B, S, D], new_cache).
+    """
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = ctx if ctx is not None else x
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dh->bth", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = _fold_heads(q, H, dh)
+    k = _fold_heads(k, KV, dh)
+    v = _fold_heads(v, KV, dh)
+
+    is_cross = ctx is not None
+    pos_vec = jnp.asarray(pos_offset)
+    per_slot = pos_vec.ndim == 1            # [B] per-slot decode positions
+    if not is_cross:
+        if per_slot:
+            qpos = pos_vec[:, None] + jnp.arange(S)[None, :]   # [B, S]
+        else:
+            qpos = pos_vec + jnp.arange(S)
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, qpos, cfg.rope_theta)
+
+    # Chunked/banded path (A-interval restriction; training & prefill only)
+    qc = cfg.attn_q_chunk
+    if (qc and cache is None and not is_cross and mask_mode == "causal"
+            and S > qc and S % qc == 0):
+        out = _chunked_attention(q, k, v, cfg, kind, pos_offset, qc, x.dtype)
+        out = out.reshape(B, S, H * dh)
+        out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+        return out, None
+
+    new_cache = None
+    if cache is not None and not is_cross:
+        # decode (S == 1): write k/v at each slot's own position
+        C = cache["k"].shape[2]
+        cur = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,))   # [B]
+        slot = jnp.mod(cur, C) if kind == "local" else jnp.clip(cur, 0, C - 1)
+        bidx = jnp.arange(B)[:, None]
+        hidx = jnp.arange(KV)[None, :]
+        k_new = k.transpose(0, 2, 1, 3)[:, :, 0, :].astype(cache["k"].dtype)
+        v_new = v.transpose(0, 2, 1, 3)[:, :, 0, :].astype(cache["v"].dtype)
+        k_c = cache["k"].at[bidx, hidx, slot[:, None]].set(k_new)
+        v_c = cache["v"].at[bidx, hidx, slot[:, None]].set(v_new)
+        new_cache = {"k": k_c, "v": v_c, "pos": cache["pos"] + S}
+        k = k_c.transpose(0, 2, 1, 3)
+        v = v_c.transpose(0, 2, 1, 3)
+        Tk = C
+    else:
+        Tk = k.shape[1]
+
+    # heads: group queries over kv heads (GQA); scale folded into Q (one
+    # small pass instead of a full pass over the score tensor)
+    group = H // KV
+    q = q.reshape(B, S, KV, group, dh)
+    q = q * jnp.asarray(1.0 / np.sqrt(dh), q.dtype)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    if cfg.attn_softcap is not None:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+
+    if is_cross or mask_mode == "bidir":
+        mask = jnp.ones((S, Tk), bool)[None]                  # [1, S, Tk]
+    elif cache is not None:
+        # decode: key slot t holds absolute position (ring-aware), per slot
+        tpos = jnp.arange(Tk)[None, :]                        # [1, Tk]
+        cur = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,))[:, None]
+        if kind == "local":
+            # ring buffer: slot t holds position p with p % C == t, the
+            # latest such p <= cur
+            delta = jnp.mod(cur - tpos, Tk)
+            abs_pos = cur - delta
+            mask = (abs_pos >= 0) & (abs_pos > cur - cfg.local_window)
+        else:
+            mask = tpos <= cur
+        mask = mask[:, None, :]                               # [B, 1(S), Tk]
+    else:
+        qp = (pos_vec[:, None, None] + jnp.arange(S)[None, :, None]
+              ) if per_slot else (pos_vec + jnp.arange(S))[None, :, None]
+        kp = jnp.arange(Tk)[None, None, :]
+        mask = kp <= qp
+        if kind == "local":
+            mask = mask & (kp > qp - cfg.local_window)        # [B', S, Tk]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    out = out.reshape(B, S, H * dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _chunked_attention(q, k, v, cfg: ModelConfig, kind: str, pos_offset,
+                       q_chunk: int, dtype):
+    """Query-chunked causal/local attention with static K/V band slicing.
+
+    This is the APRIL bridge in XLA form: per query chunk, only the KV range
+    covered by the mask's A-interval is read — [0, chunk_end) for causal,
+    the sliding-window band for local — so masked-out blocks cost neither
+    FLOPs nor score memory (the paper's Empty cells), and the transient
+    buffer shrinks from S x S to q_chunk x band.
+    """
+    B, S, KV, dh = k.shape[0], k.shape[1], cfg.n_kv_heads, cfg.head_dim
+    H = cfg.n_heads
+    group = H // KV
+    q = q.reshape(B, S, KV, group, dh)
+    # fold the softmax scale into Q: one pass over [B,S,H,dh] instead of a
+    # full read+write over every [chunk, band] score tensor
+    q = q * jnp.asarray(1.0 / np.sqrt(dh), q.dtype)
+    outs = []
+    for ci in range(S // q_chunk):
+        lo_q = ci * q_chunk
+        hi_q = lo_q + q_chunk
+        if kind == "local":
+            lo_k = max(0, hi_q - cfg.local_window - q_chunk + 1)
+        else:
+            lo_k = 0
+        k_c = k[:, lo_k:hi_q]
+        v_c = v[:, lo_k:hi_q]
+        q_c = q[:, lo_q:hi_q]
+        s = jnp.einsum("bskgh,btkh->bkgst", q_c, k_c).astype(jnp.float32)
+        if cfg.attn_softcap is not None:
+            s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+        qp = lo_q + jnp.arange(q_chunk)[:, None]
+        kp = lo_k + jnp.arange(hi_q - lo_k)[None, :]
+        mask = kp <= qp
+        if kind == "local":
+            mask &= kp > qp - cfg.local_window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(dtype)
+        outs.append(jnp.einsum("bkgst,btkh->bskgh", pr, v_c))
+    out = jnp.concatenate(outs, axis=1)
+    return out.reshape(B, S, H * dh)
+
+
+# ----------------------------------------------------------------- MLP / MoE
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w1": _init(ks[0], (d, f)), "w3": _init(ks[1], (d, f)),
+                "w2": _init(ks[2], (f, d), scale=1.0 / np.sqrt(f))}
+    return {"w1": _init(ks[0], (d, f)),
+            "w2": _init(ks[2], (f, d), scale=1.0 / np.sqrt(f))}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    else:  # 'gelu'
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)

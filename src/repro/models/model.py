@@ -1,0 +1,304 @@
+"""Model assembly: embedding -> pattern-cycle layer scan -> head.
+
+Heterogeneous layer patterns (gemma2's local/global alternation,
+recurrentgemma's 2x RG-LRU + local attn, llama-vision's cross-attn every 5th
+layer) are handled by stacking parameters *per pattern position* and scanning
+over cycles: one cycle applies `pattern_period` different sublayers, and
+``lax.scan`` runs ``n_layers / period`` cycles. This keeps the HLO size
+O(period) instead of O(n_layers) — crucial for multi-pod compile times —
+while supporting arbitrary periodic architectures.
+
+Modes:
+  train/prefill: full-sequence forward (no cache)
+  decode:        one token, stacked KV caches / recurrent states as carry
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init, attention, attention_init, mlp, mlp_init, \
+    rmsnorm, rmsnorm_init
+from .moe import moe_init, moe_mlp
+from .rglru import rglru_block, rglru_init, rglru_state_init
+from .ssm import ssm_block, ssm_init, ssm_state_init
+
+P_ = None  # set lazily to avoid importing sharding at module load
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": rmsnorm_init(cfg.d_model)}
+    if kind in ("attn", "local", "xattn"):
+        p["attn"] = attention_init(ks[0], cfg)
+        if kind == "xattn":
+            p["lnx"] = rmsnorm_init(cfg.d_model)
+            p["xattn"] = attention_init(ks[1], cfg, cross=True)
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        if cfg.moe is not None:
+            p["moe"] = moe_init(ks[2], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg)
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        if cfg.moe is not None:
+            p["moe"] = moe_init(ks[2], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _apply_layer(p, x, cfg: ModelConfig, kind: str, *, ctx=None, cache=None,
+                 pos_offset=0, mask_mode="causal"):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    if kind in ("attn", "local", "xattn"):
+        h, nc = attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                          kind=("attn" if kind == "xattn" else kind),
+                          pos_offset=pos_offset,
+                          cache=(cache.get("kv") if cache else None),
+                          mask_mode=mask_mode)
+        x = x + h
+        if kind == "xattn":
+            hx, _ = attention(p["xattn"], rmsnorm(p["lnx"], x, cfg.norm_eps),
+                              cfg, kind="attn", ctx=ctx)
+            x = x + hx
+        if cfg.moe is not None:
+            h, aux = moe_mlp(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        else:
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        x = x + h
+        if cache is not None:
+            new_cache = dict(cache, kv=nc)
+    elif kind == "rglru":
+        h, ns = rglru_block(p["rglru"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, state=(cache.get("state") if cache else None))
+        x = x + h
+        if cfg.moe is not None:
+            h, aux = moe_mlp(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        else:
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        x = x + h
+        if cache is not None:
+            new_cache = dict(cache, state=ns)
+    elif kind == "ssm":
+        h, ns = ssm_block(p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                          state=(cache.get("state") if cache else None))
+        x = x + h
+        if cache is not None:
+            new_cache = dict(cache, state=ns)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Full parameter tree. Layer params stacked [n_cycles, ...] per pattern
+    position ('p0', 'p1', ...). Use jax.eval_shape for abstract init."""
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    params = {
+        "embed": _init(keys[0], (cfg.vocab, cfg.d_model), scale=0.02,
+                       dtype=dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(keys[1], (cfg.d_model, cfg.vocab),
+                                  scale=0.02, dtype=dtype)
+    cyc = {}
+    for pi in range(cfg.pattern_period):
+        kind = cfg.block_pattern[pi]
+        per_cycle = [
+            _layer_init(keys[4 + c * cfg.pattern_period + pi], cfg, kind)
+            for c in range(cfg.n_cycles)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_cycle)
+        # weights (stacked ndim >= 3) go to the compute dtype; norms/biases
+        # and other small 1D vectors stay f32
+        cyc[f"p{pi}"] = jax.tree.map(
+            lambda a: a.astype(dtype) if a.ndim >= 3 else a, stacked)
+    params["cycle"] = cyc
+    if cfg.tail_kinds:
+        tail_keys = jax.random.split(keys[3], len(cfg.tail_kinds))
+        params["tail"] = {
+            f"t{i}": jax.tree.map(
+                lambda a: a.astype(dtype) if a.ndim >= 2 else a,
+                _layer_init(tail_keys[i], cfg, kind))
+            for i, kind in enumerate(cfg.tail_kinds)}
+    if cfg.encoder is not None:
+        enc_keys = jax.random.split(keys[2], cfg.encoder.n_layers)
+        enc_layers = [_layer_init(k, cfg, "attn") for k in enc_keys]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers)
+        params["encoder"] = {
+            "layers": jax.tree.map(
+                lambda a: a.astype(dtype) if a.ndim >= 3 else a, stacked),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+def _sinusoid(S, D):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, D, 2)[None, :] / D
+    ang = pos / (10000 ** dim)
+    out = np.zeros((S, D), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def run_encoder(params, frames, cfg: ModelConfig, remat_policy=None,
+                unroll=False):
+    """Whisper-style encoder over precomputed frame embeddings [B, T, D]."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def enc_layer(x, p):
+        x, _, _ = _apply_layer(p, x, cfg, "attn", mask_mode="bidir")
+        return x, None
+
+    body = enc_layer
+    if remat_policy is not None:
+        body = jax.checkpoint(enc_layer, policy=remat_policy)
+    if unroll:
+        n = jax.tree.leaves(params["encoder"]["layers"])[0].shape[0]
+        for c in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[c],
+                                        params["encoder"]["layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _one_layer_cache(cfg: ModelConfig, kind: str, batch: int, ctx_len: int,
+                     dtype):
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "xattn"):
+        return {"kv": {
+            "k": jnp.zeros((batch, KV, ctx_len, dh), dtype),
+            "v": jnp.zeros((batch, KV, ctx_len, dh), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}}
+    if kind == "local":
+        w = min(ctx_len, cfg.local_window)
+        return {"kv": {
+            "k": jnp.zeros((batch, KV, w, dh), dtype),
+            "v": jnp.zeros((batch, KV, w, dh), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}}
+    if kind == "rglru":
+        return {"state": rglru_state_init(cfg, batch, dtype)}
+    if kind == "ssm":
+        return {"state": ssm_state_init(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def build_caches(cfg: ModelConfig, batch: int, ctx_len: int, dtype=jnp.bfloat16):
+    """Decode caches: {'cycle': stacked per pattern position, 'tail': ...}."""
+    n = cfg.n_cycles
+    cycle = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        one = _one_layer_cache(cfg, kind, batch, ctx_len, dtype)
+        cycle[f"p{pi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).astype(a.dtype), one)
+    tail = {f"t{i}": _one_layer_cache(cfg, kind, batch, ctx_len, dtype)
+            for i, kind in enumerate(cfg.tail_kinds)}
+    return {"cycle": cycle, "tail": tail}
+
+
+def set_cache_pos(caches, pos):
+    """Mark all kv caches as holding ``pos`` tokens (decode position)."""
+    def setp(tree):
+        if isinstance(tree, dict) and "pos" in tree:
+            new = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                   tree["pos"].shape)
+            return dict(tree, pos=new)
+        if isinstance(tree, dict):
+            return {k: setp(v) for k, v in tree.items()}
+        return tree
+    return setp(caches)
+
+
+def forward_logits(params, tokens, cfg: ModelConfig, *, ctx=None,
+                   caches=None, pos_offset=0, remat_policy=None,
+                   activation_hook=None, unroll=False):
+    """tokens: [B, S] int32 -> logits [B, S, V] (f32).
+
+    caches: stacked decode caches (S must be 1). ctx: cross-attn context
+    (VLM patches / whisper encoder output). activation_hook(x, where) lets
+    the sharding layer constrain layer-boundary activations (SP).
+    ``unroll=True`` replaces the cycle scan with a Python loop — used by the
+    dry-run's FLOP-probe lowers (XLA cost analysis counts while-loop bodies
+    once, so scanned cells are corrected via unrolled 1/2-cycle probes).
+    """
+    hook = activation_hook or (lambda x, where: x)
+    emb = params["embed"]
+    x = emb[tokens] * jnp.asarray(np.sqrt(cfg.d_model), emb.dtype)
+    x = hook(x, "embed")
+
+    def cycle_fn(carry, xs):
+        x = carry
+        cyc_params, cyc_caches = xs
+        new_caches = {} if cyc_caches is not None else None
+        aux_total = jnp.zeros((), jnp.float32)
+        for pi, kind in enumerate(cfg.block_pattern):
+            cache = cyc_caches[f"p{pi}"] if cyc_caches is not None else None
+            x, nc, aux = _apply_layer(
+                cyc_params[f"p{pi}"], x, cfg, kind, ctx=ctx, cache=cache,
+                pos_offset=pos_offset)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches[f"p{pi}"] = nc
+            x = hook(x, "layer")
+        return x, (new_caches, aux_total)
+
+    body = cycle_fn
+    if remat_policy is not None:
+        body = jax.checkpoint(cycle_fn, policy=remat_policy)
+    cycle_caches = caches.get("cycle") if caches is not None else None
+    if unroll:
+        nc_acc, aux_acc = [], []
+        for c in range(cfg.n_cycles):
+            cyc_p = jax.tree.map(lambda a: a[c], params["cycle"])
+            cyc_c = (jax.tree.map(lambda a: a[c], cycle_caches)
+                     if cycle_caches is not None else None)
+            x, (nc, aux) = body(x, (cyc_p, cyc_c))
+            nc_acc.append(nc)
+            aux_acc.append(aux)
+        new_cycle = (jax.tree.map(lambda *xs: jnp.stack(xs), *nc_acc)
+                     if cycle_caches is not None else None)
+        auxs = jnp.stack(aux_acc)
+    else:
+        x, (new_cycle, auxs) = jax.lax.scan(
+            body, x, (params["cycle"], cycle_caches))
+
+    # unscanned tail layers (n_layers % pattern_period remainder)
+    new_tail = {} if caches is not None else None
+    aux_tail = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.tail_kinds):
+        tc = caches["tail"][f"t{i}"] if caches is not None else None
+        x, nc, aux = _apply_layer(params["tail"][f"t{i}"], x, cfg, kind,
+                                  ctx=ctx, cache=tc, pos_offset=pos_offset)
+        aux_tail = aux_tail + aux
+        if new_tail is not None:
+            new_tail[f"t{i}"] = nc
+        x = hook(x, "layer")
+
+    new_caches = (None if caches is None
+                  else {"cycle": new_cycle, "tail": new_tail})
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = hook(x, "final")
+
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = hook(logits, "logits")
+    aux = jnp.sum(auxs) + aux_tail
+    return logits, new_caches, aux

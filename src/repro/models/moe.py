@@ -1,0 +1,103 @@
+"""Capacity-based top-k Mixture-of-Experts layer (GShard/Switch style).
+
+Dispatch is sort-based (no [T, E] one-hot matmuls): token->expert assignments
+are argsorted by expert id, positions within an expert computed from the
+sorted order, tokens scattered into an [E, C, D] buffer, experts run as one
+batched einsum (EP: expert axis sharded over 'model'), and results gathered
+back with gate-weighted combine. Overflowing tokens beyond capacity C are
+dropped (standard capacity-factor semantics); the router adds the usual
+load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d, E), scale=0.02),
+        "w1": _init(ks[1], (E, d, f)),
+        "w3": _init(ks[2], (E, d, f)),
+        "w2": _init(ks[3], (E, f, d), scale=1.0 / np.sqrt(f)),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(np.ceil(n_tokens * m.top_k * m.capacity_factor / m.num_experts))
+    return max(8, ((c + 7) // 8) * 8)   # sublane-aligned
+
+
+def moe_mlp(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    With ``dispatch_groups = G > 1`` tokens are ranked and scattered within
+    G independent groups (G = data-axis size in distributed runs): the
+    dispatch buffer becomes [G, E, C/G, D], shardable (data, model, ...), so
+    no cross-data-shard scatter exists and GSPMD lowers dispatch to the
+    intended all-to-all instead of a buffer-wide all-reduce.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    G = max(1, m.dispatch_groups)
+    assert T % G == 0, (T, G)
+    Tl = T // G
+    C = moe_capacity(cfg, Tl)
+
+    xg = x.reshape(G, Tl, D)
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [G,Tl,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                        # [G,Tl,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch): E * sum_e f_e * p_e  (global)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)) / (T * K)
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+
+    # per-group: sort assignments by expert; rank within (group, expert)
+    flat_e = gate_idx.reshape(G, Tl * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tl), K)[None], (G, Tl * K))
+    flat_g = gate_vals.reshape(G, Tl * K)
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    first = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(E), side="left"))(se)           # [G,E]
+    rank = jnp.arange(Tl * K)[None] - jnp.take_along_axis(first, se, axis=1)
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)        # overflow -> dropped
+
+    gathered = jnp.take_along_axis(xg, st[..., None], axis=1)  # [G,TlK,D]
+    gathered = gathered * keep[..., None].astype(x.dtype)
+    buf = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].add(v))(buf, slot, gathered)
+    buf = buf[:, :-1].reshape(G, E, C, D)
+
+    # expert compute (EP over 'model', groups over 'data'); swiglu
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w1"].astype(x.dtype))) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["w3"].astype(x.dtype))
+    y = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(x.dtype))
+
+    # combine: gather each kept assignment's output, weight by gate
+    yf = y.reshape(G, E * C, D)
+    contrib = jnp.take_along_axis(
+        yf, jnp.minimum(slot, E * C - 1)[..., None], axis=1)
+    contrib = contrib * (sg * keep.astype(jnp.float32))[..., None].astype(x.dtype)
+    out = jnp.zeros((G, Tl, D), x.dtype)
+    out = jax.vmap(lambda o, s, v: o.at[s].add(v))(out, st, contrib)
+    return out.reshape(B, S, D), aux

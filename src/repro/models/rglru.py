@@ -1,0 +1,70 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma-2b).
+
+Block = gated dual branch: GeLU(gate) ⊙ (conv1d -> RG-LRU), projected back.
+RG-LRU: r_t = σ(W_r x), i_t = σ(W_i x), a_t = a^{c·r_t} with a = σ(Λ),
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t). Diagonal recurrence →
+associative scan for training, O(1) carry for decode (hence long_500k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init
+from .ssm import _causal_conv
+
+C_COEF = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = cfg.d_model           # recurrent width = d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": _init(ks[0], (d, dr)),
+        "in_g": _init(ks[1], (d, dr)),
+        "conv_w": _init(ks[2], (4, dr), scale=0.2),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_r": _init(ks[3], (dr, dr)),
+        "w_i": _init(ks[4], (dr, dr)),
+        "lam": jnp.full((dr,), 2.0, jnp.float32),   # σ(2)^8 ≈ .35 decay
+        "out": _init(ks[5], (dr, d)),
+    }
+
+
+def rglru_block(p, x, cfg: ModelConfig, state=None):
+    """x: [B, S, D]; state: None or {h: [B,DR] f32, conv: [B,3,DR]}."""
+    B, S, D = x.shape
+    g = jax.nn.gelu(x @ p["in_g"].astype(x.dtype))
+    xr = x @ p["in_x"].astype(x.dtype)
+    conv_state = state["conv"] if state is not None else None
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid((xr @ p["w_r"].astype(x.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xr @ p["w_i"].astype(x.dtype)).astype(jnp.float32))
+    log_a = -C_COEF * jax.nn.softplus(p["lam"]) * r       # log a_t  [B,S,DR]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * xr.astype(jnp.float32)
+
+    if state is None:
+        def combine(c1, c2):
+            a1, u1 = c1
+            a2, u2 = c2
+            return a1 * a2, u1 * a2 + u2
+        _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        new_h = None
+    else:
+        h = a[:, 0] * state["h"] + gated[:, 0]
+        new_h = h
+        h = h[:, None, :]
+    y = (h.astype(x.dtype) * g) @ p["out"].astype(x.dtype)
+    new_state = None if state is None else {"h": new_h, "conv": new_conv}
+    return y, new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    dr = cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, 3, dr), dtype)}

@@ -1,0 +1,67 @@
+"""Serving steps: prefill (full forward) and single-token decode with
+stacked KV caches / recurrent states."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .model import build_caches, forward_logits, run_encoder, set_cache_pos
+
+
+def make_prefill_step(cfg: ModelConfig, activation_hook=None, unroll=False):
+    def prefill_step(params, batch):
+        ctx = None
+        if cfg.encoder is not None:
+            ctx = run_encoder(params, batch["frames"], cfg, unroll=unroll)
+        elif cfg.n_patch_tokens:
+            ctx = batch["patches"]
+        logits, _, _ = forward_logits(params, batch["tokens"], cfg, ctx=ctx,
+                                      activation_hook=activation_hook,
+                                      unroll=unroll)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, activation_hook=None, unroll=False):
+    """decode_step(params, caches, batch) -> (logits [B, V], new_caches).
+
+    batch: {'tokens': [B, 1], 'pos': scalar int32 (current KV length),
+    optional 'frames'/'patches' ctx}.
+    """
+    def decode_step(params, caches, batch):
+        ctx = None
+        if cfg.encoder is not None:
+            ctx = run_encoder(params, batch["frames"], cfg, unroll=unroll)
+        elif cfg.n_patch_tokens:
+            ctx = batch["patches"]
+        caches = set_cache_pos(caches, batch["pos"])
+        logits, new_caches, _ = forward_logits(
+            params, batch["tokens"], cfg, ctx=ctx, caches=caches,
+            pos_offset=batch["pos"], activation_hook=activation_hook,
+            unroll=unroll)
+        return logits[:, 0, :], new_caches
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, steps: int,
+                    ctx_capacity: int | None = None, batch_extra=None):
+    """Host-loop greedy decoding (examples/tests): prefill via repeated
+    decode for simplicity."""
+    B, S0 = prompt.shape
+    cap = ctx_capacity or (S0 + steps)
+    caches = build_caches(cfg, B, cap, dtype=jnp.float32)
+    decode = jax.jit(make_decode_step(cfg))
+    toks = prompt
+    out = []
+    for t in range(S0 + steps - 1):
+        batch = {"tokens": toks[:, t: t + 1],
+                 "pos": jnp.asarray(t, jnp.int32)}
+        if batch_extra:
+            batch.update(batch_extra)
+        logits, caches = decode(params, caches, batch)
+        nxt = jnp.argmax(logits, axis=-1)[:, None]
+        if t >= S0 - 1:
+            out.append(nxt)
+            toks = jnp.concatenate([toks, nxt], axis=1)
+    return jnp.concatenate(out, axis=1) if out else jnp.zeros((B, 0), jnp.int32)

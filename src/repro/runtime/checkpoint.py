@@ -1,0 +1,170 @@
+"""Fault-tolerant checkpointing: sharded-to-host npy shards + manifest,
+atomic directory commit, async save, crc32 integrity, keep-last-K GC,
+restore with arbitrary re-sharding (elastic restarts).
+
+Format:
+    <dir>/step_<N>.tmp/...   (in-flight write, never read)
+    <dir>/step_<N>/manifest.json   {step, leaves: {name: {shape, dtype,
+                                    crc32}}, time, extra}
+    <dir>/step_<N>/<leaf>.npy
+    <dir>/LATEST               (text file, committed last)
+
+Leaves are addressed by their pytree key-path string, so any tree of arrays
+(params, optimizer state, data-pipeline cursors, partition progress) can be
+checkpointed. Restore returns host numpy arrays — the caller device_puts
+them under the *current* mesh's shardings, which is exactly what an elastic
+restart with a different device count needs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "tree_to_flat", "flat_to_tree"]
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k)))))
+    return "/".join(out)
+
+
+def tree_to_flat(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(path)] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def flat_to_tree(flat: dict, like):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves:
+        key = _path_str(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None,
+             block: bool = False):
+        """Snapshot to host, then write (async by default)."""
+        flat = tree_to_flat(tree)   # device->host copy happens HERE (sync)
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, flat, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, extra: dict):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "extra": extra,
+                    "leaves": {}}
+        for name, arr in flat.items():
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)                       # atomic commit
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp") \
+                    and os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            s = int(open(latest).read().strip())
+            if os.path.exists(os.path.join(self.dir, f"step_{s}",
+                                           "manifest.json")):
+                return s
+        steps = self.all_steps()   # fall back: scan (LATEST lost/corrupt)
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, verify: bool = True):
+        """Returns (step, flat dict of numpy arrays, extra) or None."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = os.path.join(self.dir, f"step_{step}")
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        flat = {}
+        for name, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != meta["crc32"]:
+                    raise IOError(f"checksum mismatch in {name} @ step {step}")
+            flat[name] = arr
+        return manifest["step"], flat, manifest.get("extra", {})
+
+    def restore_tree(self, like, step: int | None = None):
+        """Restore into the structure of ``like`` (host numpy leaves)."""
+        res = self.restore(step)
+        if res is None:
+            return None
+        step, flat, extra = res
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        arrs = []
+        for path, leaf in leaves:
+            key = _path_str(path)
+            if key not in flat:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arrs.append(flat[key])
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), arrs)
+        return step, tree, extra

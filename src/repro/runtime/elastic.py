@@ -1,0 +1,97 @@
+"""Elastic scaling + straggler mitigation utilities.
+
+``remesh_tree`` re-lays a host (numpy) tree onto a NEW mesh — the core of an
+elastic restart: after node loss the launcher rebuilds a smaller mesh,
+restores the latest checkpoint (host arrays are global, so shardings of the
+dead mesh are irrelevant) and device_puts under the new mesh's specs.
+
+``StragglerMonitor`` tracks per-step wall times with an EMA and flags steps
+exceeding ``threshold``x the running mean — on a real cluster the launcher
+re-dispatches the slow host's shard / excludes the host on repeat offenses;
+here it drives logging and the work-stealing partition queue of the
+distributed spatial join.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["remesh_tree", "make_mesh_from_devices", "StragglerMonitor",
+           "WorkQueue"]
+
+
+def make_mesh_from_devices(devices, n_model: int, axis_names=("data", "model")):
+    """Largest (data, model) mesh buildable from surviving devices."""
+    n = len(devices)
+    n_model = min(n_model, n)
+    n_data = n // n_model
+    devs = np.asarray(devices[: n_data * n_model]).reshape(n_data, n_model)
+    return Mesh(devs, axis_names)
+
+
+def remesh_tree(host_tree, mesh: Mesh, spec_tree):
+    """device_put a host tree under ``mesh`` with PartitionSpec tree."""
+    return jax.tree.map(
+        lambda arr, spec: jax.device_put(arr, NamedSharding(mesh, spec)),
+        host_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ema: float = 0.9):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.mean = None
+        self.flagged: list[tuple[int, float]] = []
+        self._t0 = None
+        self.step_idx = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record a step; returns True if it was a straggler."""
+        dt = time.perf_counter() - self._t0
+        slow = self.mean is not None and dt > self.threshold * self.mean
+        self.mean = dt if self.mean is None else \
+            self.ema_coef * self.mean + (1 - self.ema_coef) * dt
+        if slow:
+            self.flagged.append((self.step_idx, dt))
+        self.step_idx += 1
+        return slow
+
+
+class WorkQueue:
+    """Work-stealing queue over join partitions (straggler mitigation for
+    the distributed spatial join): items are leased with a deadline; expired
+    leases return to the queue so a healthy worker re-runs them. Results are
+    idempotent (pure filter verdicts), so double-execution is safe."""
+
+    def __init__(self, items, lease_seconds: float = 60.0):
+        self.pending = list(items)
+        self.leases: dict[object, float] = {}
+        self.done: set = set()
+        self.lease_seconds = lease_seconds
+
+    def acquire(self):
+        now = time.time()
+        expired = [k for k, t in self.leases.items() if t < now]
+        for k in expired:
+            del self.leases[k]
+            self.pending.append(k)
+        if not self.pending:
+            return None
+        item = self.pending.pop(0)
+        self.leases[item] = now + self.lease_seconds
+        return item
+
+    def complete(self, item):
+        self.leases.pop(item, None)
+        self.done.add(item)
+
+    @property
+    def finished(self) -> bool:
+        return not self.pending and not self.leases

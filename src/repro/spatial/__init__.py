@@ -1,0 +1,5 @@
+from .mbr_join import mbr_join  # noqa: F401
+from .pipeline import (  # noqa: F401
+    JoinStats, spatial_intersection_join, spatial_within_join,
+    polygon_linestring_join, selection_queries,
+)

@@ -1,0 +1,65 @@
+"""Dry-run machinery regression: lower+compile+analyze a smoke-scale cell on
+an 8-device mesh in a subprocess (the real 512-device sweep runs offline via
+repro.launch.dryrun; this guards the plumbing)."""
+import subprocess
+import sys
+import textwrap
+
+
+def test_dryrun_cell_smoke():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, jax, jax.numpy as jnp
+        import repro.launch.dryrun as dr
+        import repro.launch.mesh as mesh_mod
+
+        # shrink the production mesh for the test
+        mesh_mod.make_production_mesh = \\
+            lambda multi_pod=False: jax.make_mesh((4, 2), ("data", "model"))
+        dr.make_production_mesh = mesh_mod.make_production_mesh
+
+        from repro.configs import get_config
+        cfg = dataclasses.replace(get_config("gemma2-2b", smoke=True))
+
+        lowered, cfg2, mesh, mode = dr.lower_model_cell(
+            "gemma2-2b", "train_4k", False, cfg=dataclasses.replace(
+                cfg, vocab=512))
+        res = dr.analyze(lowered, arch="gemma2-2b", shape_name="train_4k",
+                         mesh=mesh, cfg=cfg2)
+        assert res["flops_per_chip"] > 0
+        assert res["bytes_per_chip"] > 0
+        assert res["bottleneck"] in ("compute", "memory", "collective")
+        assert res["memory_per_chip_bytes"] > 0
+        corrected = dr.probe_metrics("gemma2-2b", "train_4k", False, cfg=cfg)
+        assert corrected["flops"] > 0
+        # collective parser must see the mesh collectives
+        assert sum(res["coll_breakdown"].values()) > 0
+        print("DRYRUN_SMOKE_OK", res["bottleneck"])
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DRYRUN_SMOKE_OK" in r.stdout
+
+
+def test_collective_parser():
+    from repro.launch.roofline import collective_bytes, shape_bytes
+    hlo = '''
+      %ag = bf16[8,128]{1,0} all-gather(bf16[1,128] %x), dimensions={0}
+      %ar.1 = f32[256]{0} all-reduce(f32[256] %y), to_apply=%sum
+      %t = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16] %a, f32[16,16] %b)
+      %cp = u32[64]{0} collective-permute(u32[64] %z), source_target_pairs={{0,1}}
+      %rs = bf16[2,128]{1,0} reduce-scatter(bf16[16,128] %w), dimensions={0}
+      %dot = f32[128,128]{1,0} dot(f32[128,8] %p, f32[8,128] %q)
+    '''
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["all-to-all"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"] == 64 * 4
+    assert out["reduce-scatter"] == 2 * 128 * 2
+    assert "dot" not in out
+    assert shape_bytes("bf16[2,3]") == 12

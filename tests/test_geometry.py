@@ -1,0 +1,66 @@
+import numpy as np
+
+from repro.core import geometry
+
+
+SQUARE = np.array([[0.2, 0.2], [0.8, 0.2], [0.8, 0.8], [0.2, 0.8]])
+
+
+def test_points_in_polygon_square():
+    pts = np.array([[0.5, 0.5], [0.1, 0.1], [0.79, 0.79], [0.9, 0.5]])
+    got = geometry.points_in_polygon(pts, SQUARE)
+    np.testing.assert_array_equal(got, [True, False, True, False])
+
+
+def test_points_in_polygons_batch():
+    tri = np.array([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0], [0.0, 0.0]])
+    verts = np.stack([np.pad(SQUARE, ((0, 0), (0, 0))), tri])
+    nverts = np.array([4, 3])
+    pts = np.array([[[0.5, 0.5], [0.9, 0.9]], [[0.1, 0.1], [0.9, 0.9]]])
+    got = geometry.points_in_polygons_batch(pts, verts, nverts)
+    np.testing.assert_array_equal(got, [[True, False], [True, False]])
+
+
+def test_segments_intersect():
+    a0 = np.array([0.0, 0.0]); a1 = np.array([1.0, 1.0])
+    b0 = np.array([0.0, 1.0]); b1 = np.array([1.0, 0.0])
+    assert geometry.segments_intersect(a0, a1, b0, b1)
+    assert not geometry.segments_intersect(a0, a1, b0 + 2, b1 + 2)
+    # touching at endpoint
+    assert geometry.segments_intersect(a0, a1, a1, np.array([2.0, 0.0]))
+    # collinear overlap
+    assert geometry.segments_intersect(
+        np.array([0.0, 0.0]), np.array([1.0, 0.0]),
+        np.array([0.5, 0.0]), np.array([2.0, 0.0]))
+
+
+def test_polygons_intersect_cases():
+    sq2 = SQUARE + 0.5   # overlaps corner
+    assert geometry.polygons_intersect(SQUARE, 4, sq2, 4)
+    sq3 = SQUARE + 2.0   # disjoint
+    assert not geometry.polygons_intersect(SQUARE, 4, sq3, 4)
+    inner = np.array([[0.4, 0.4], [0.6, 0.4], [0.6, 0.6], [0.4, 0.6]])
+    # containment (no boundary crossing)
+    assert geometry.polygons_intersect(SQUARE, 4, inner, 4)
+    assert geometry.polygons_intersect(inner, 4, SQUARE, 4)
+
+
+def test_polygon_within():
+    inner = np.array([[0.4, 0.4], [0.6, 0.4], [0.6, 0.6], [0.4, 0.6]])
+    assert geometry.polygon_within(inner, 4, SQUARE, 4)
+    assert not geometry.polygon_within(SQUARE, 4, inner, 4)
+    shifted = inner + 0.5
+    assert not geometry.polygon_within(shifted, 4, SQUARE, 4)
+
+
+def test_area_and_mbr():
+    assert np.isclose(geometry.polygon_area(SQUARE), 0.36)
+    mbrs = geometry.polygon_mbrs(SQUARE[None], np.array([4]))
+    np.testing.assert_allclose(mbrs[0], [0.2, 0.2, 0.8, 0.8])
+
+
+def test_clip_polygon_to_box():
+    clipped = geometry.clip_polygon_to_box(SQUARE, (0.5, 0.5, 1.0, 1.0))
+    assert np.isclose(geometry.polygon_area(clipped), 0.09)
+    empty = geometry.clip_polygon_to_box(SQUARE, (0.9, 0.9, 1.0, 1.0))
+    assert len(empty) == 0

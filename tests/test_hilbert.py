@@ -1,0 +1,65 @@
+import numpy as np
+import pytest
+
+from repro.core import hilbert
+
+
+@pytest.mark.parametrize("n_order", [1, 2, 3, 5, 8, 16])
+def test_roundtrip(n_order):
+    rng = np.random.default_rng(0)
+    G = 1 << n_order
+    x = rng.integers(0, G, size=512)
+    y = rng.integers(0, G, size=512)
+    d = hilbert.xy2d(n_order, x, y)
+    assert d.max() < (1 << (2 * n_order))
+    x2, y2 = hilbert.d2xy(n_order, d)
+    np.testing.assert_array_equal(x, x2.astype(np.int64))
+    np.testing.assert_array_equal(y, y2.astype(np.int64))
+
+
+def test_bijection_small():
+    n_order = 4
+    G = 1 << n_order
+    X, Y = np.meshgrid(np.arange(G), np.arange(G), indexing="ij")
+    d = hilbert.xy2d(n_order, X.ravel(), Y.ravel())
+    assert len(np.unique(d)) == G * G
+    assert d.min() == 0 and d.max() == G * G - 1
+
+
+def test_adjacency():
+    """Consecutive Hilbert ids are spatially adjacent cells (the property the
+    one-step intervalization proof relies on)."""
+    n_order = 6
+    G = 1 << n_order
+    d = np.arange(G * G, dtype=np.uint64)
+    x, y = hilbert.d2xy(n_order, d)
+    dx = np.abs(np.diff(x.astype(np.int64)))
+    dy = np.abs(np.diff(y.astype(np.int64)))
+    assert np.all(dx + dy == 1)
+
+
+def test_jnp_matches_numpy():
+    import jax.numpy as jnp
+    n_order = 16
+    rng = np.random.default_rng(1)
+    G = 1 << n_order
+    x = rng.integers(0, G, size=256)
+    y = rng.integers(0, G, size=256)
+    d_np = hilbert.xy2d(n_order, x, y)
+    d_j = np.asarray(hilbert.xy2d_jnp(n_order, jnp.asarray(x, jnp.uint32),
+                                      jnp.asarray(y, jnp.uint32)))
+    np.testing.assert_array_equal(d_np.astype(np.uint32), d_j)
+    x2, y2 = hilbert.d2xy_jnp(n_order, jnp.asarray(d_j))
+    np.testing.assert_array_equal(np.asarray(x2), x.astype(np.uint32))
+    np.testing.assert_array_equal(np.asarray(y2), y.astype(np.uint32))
+
+
+def test_biased_i32_order_preserving():
+    rng = np.random.default_rng(2)
+    u = rng.integers(0, 2**32, size=1000, dtype=np.uint64).astype(np.uint32)
+    b = hilbert.u32_to_biased_i32(u)
+    assert b.dtype == np.int32
+    order_u = np.argsort(u, kind="stable")
+    order_b = np.argsort(b, kind="stable")
+    np.testing.assert_array_equal(u[order_u], u[order_b])
+    np.testing.assert_array_equal(hilbert.biased_i32_to_u32(b), u)

@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+
+from repro.core import intervalize, rasterize
+from repro.core.intervalize import ids_in_intervals, intervals_from_ids
+from repro.datagen import make_dataset
+
+
+def test_intervals_from_ids_roundtrip():
+    ids = np.array([1, 2, 3, 7, 9, 10, 25], dtype=np.uint64)
+    ints = intervals_from_ids(ids)
+    np.testing.assert_array_equal(
+        ints, np.array([[1, 4], [7, 8], [9, 11], [25, 26]], np.uint64))
+    np.testing.assert_array_equal(ids_in_intervals(ints), ids)
+
+
+@pytest.mark.parametrize("method", ["batched", "pips", "neighbors"])
+def test_onestep_matches_full_raster(method):
+    """One-step intervalization (all variants) must equal the §6.1
+    full-rasterization path exactly — the paper's central construction claim."""
+    ds = make_dataset("T1", seed=11, count=14)
+    n_order = 7
+    for i in range(len(ds)):
+        v, n = ds.verts[i], int(ds.nverts[i])
+        partial = rasterize.dda_partial_cells(v, n, n_order)
+        full = rasterize.scanline_full_cells(v, n, partial, n_order)
+        a_ref, f_ref = intervalize.april_from_cells(partial, full, n_order)
+        a_got, f_got = intervalize.onestep(v, n, n_order, method=method)
+        np.testing.assert_array_equal(a_got, a_ref, err_msg=f"A poly {i}")
+        np.testing.assert_array_equal(f_got, f_ref, err_msg=f"F poly {i}")
+
+
+def test_onestep_f_subset_a():
+    ds = make_dataset("T2", seed=12, count=10)
+    for i in range(len(ds)):
+        a, f = intervalize.onestep(ds.verts[i], int(ds.nverts[i]), 7)
+        a_ids = set(ids_in_intervals(a).tolist())
+        f_ids = set(ids_in_intervals(f).tolist())
+        assert f_ids <= a_ids
+        # A/F lists are sorted + disjoint
+        for ints in (a, f):
+            flat = ints.reshape(-1)
+            assert np.all(flat[1:] >= flat[:-1])
+            assert np.all(ints[:, 1] > ints[:, 0])
+
+
+def test_corner_covering_polygon():
+    """Polygon covering the Hilbert-curve origin cell (robustness fix)."""
+    v = np.array([[0.0, 0.0], [0.4, 0.0], [0.4, 0.4], [0.0, 0.4]]) + 1e-9
+    n_order = 5
+    partial = rasterize.dda_partial_cells(v, 4, n_order)
+    full = rasterize.scanline_full_cells(v, 4, partial, n_order)
+    a_ref, f_ref = intervalize.april_from_cells(partial, full, n_order)
+    a_got, f_got = intervalize.onestep(v, 4, n_order, method="batched")
+    np.testing.assert_array_equal(a_got, a_ref)
+    np.testing.assert_array_equal(f_got, f_ref)
+    # id 0 must be covered (corner is inside the polygon)
+    assert a_got[0, 0] == 0

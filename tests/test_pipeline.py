@@ -1,0 +1,76 @@
+"""End-to-end pipeline: every intermediate filter must return the EXACT same
+result set (they differ only in how much refinement they avoid)."""
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import (polygon_linestring_join, selection_queries,
+                           spatial_intersection_join, spatial_within_join)
+
+N_ORDER = 7
+
+
+@pytest.fixture(scope="module")
+def rs():
+    return (make_dataset("T1", seed=41, count=70),
+            make_dataset("T2", seed=42, count=100))
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).tolist()))
+
+
+def test_all_methods_same_results(rs):
+    R, S = rs
+    ref, stats_none = spatial_intersection_join(R, S, method="none")
+    ref_set = _pairs_set(ref)
+    assert len(ref_set) > 5
+    for method in ("april", "april-c", "ri", "ra", "5cch"):
+        got, stats = spatial_intersection_join(R, S, method=method,
+                                               n_order=N_ORDER)
+        assert _pairs_set(got) == ref_set, f"{method} changed join results"
+        assert stats.n_candidates == stats_none.n_candidates
+
+
+def test_april_beats_none_on_refinement(rs):
+    R, S = rs
+    _, st_none = spatial_intersection_join(R, S, method="none")
+    _, st_april = spatial_intersection_join(R, S, method="april", n_order=N_ORDER)
+    assert st_april.n_indecisive < st_none.n_indecisive
+    h, g, i = st_april.rates()
+    assert h > 0 and g > 0
+
+
+def test_april_jnp_path_matches(rs):
+    R, S = rs
+    a, _ = spatial_intersection_join(R, S, method="april", n_order=N_ORDER)
+    b, _ = spatial_intersection_join(R, S, method="april", n_order=N_ORDER,
+                                     use_jnp=True)
+    assert _pairs_set(a) == _pairs_set(b)
+
+
+def test_within_join(rs):
+    R, _ = rs
+    S = make_dataset("T10", seed=43, count=40)
+    ref, _ = spatial_within_join(R, S, method="none")
+    got, stats = spatial_within_join(R, S, method="april", n_order=N_ORDER)
+    assert _pairs_set(got) == _pairs_set(ref)
+
+
+def test_linestring_join(rs):
+    _, S = rs
+    L = make_linestrings(seed=44, count=120)
+    ref, _ = polygon_linestring_join(S, L, method="none")
+    got, stats = polygon_linestring_join(S, L, method="april", n_order=N_ORDER)
+    assert _pairs_set(got) == _pairs_set(ref)
+    assert stats.n_indecisive < stats.n_candidates
+
+
+def test_selection_queries(rs):
+    R, _ = rs
+    Q = make_dataset("T3", seed=45, count=6)
+    ref, _ = selection_queries(R, Q, method="none")
+    got, stats = selection_queries(R, Q, method="april", n_order=N_ORDER)
+    for a, b in zip(ref, got):
+        assert set(a.tolist()) == set(b.tolist())
+    assert stats.n_true_hits > 0 or stats.n_true_negs > 0

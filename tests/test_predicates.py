@@ -1,0 +1,165 @@
+"""Within joins (§4.3.2), linestring joins (§4.3.3), mixed granularity (§5.3),
+and partitioning (§5.2)."""
+import numpy as np
+import pytest
+
+from repro.core import geometry, granularity, join, partition, rasterize
+from repro.core.april import build_april, build_april_polygon
+from repro.core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+from repro.datagen import make_dataset, make_linestrings
+
+N_ORDER = 7
+
+
+@pytest.fixture(scope="module")
+def data():
+    R = make_dataset("T1", seed=31, count=60)
+    S = make_dataset("T10", seed=32, count=40)   # larger objects: within-hits
+    ar = build_april(R, N_ORDER)
+    as_ = build_april(S, N_ORDER)
+    pairs = []
+    for i in range(len(R)):
+        for j in range(len(S)):
+            mr, ms = R.mbrs[i], S.mbrs[j]
+            if mr[0] <= ms[2] and ms[0] <= mr[2] and mr[1] <= ms[3] and ms[1] <= mr[3]:
+                pairs.append((i, j))
+    return R, S, ar, as_, pairs
+
+
+def test_within_soundness(data):
+    R, S, ar, as_, pairs = data
+    n_hit = 0
+    for i, j in pairs:
+        v = join.within_verdict_pair(ar.a_list(i), ar.f_list(i),
+                                     as_.a_list(j), as_.f_list(j))
+        truth = geometry.polygon_within(R.verts[i], R.nverts[i],
+                                        S.verts[j], S.nverts[j])
+        if v == TRUE_HIT:
+            assert truth, (i, j)
+            n_hit += 1
+        elif v == TRUE_NEG:
+            # AA-disjoint => r cannot be within s
+            assert not truth, (i, j)
+    assert n_hit > 0, "fixture should contain some definite within-pairs"
+
+
+def test_linestring_soundness(data):
+    R, S, ar, as_, _ = data
+    L = make_linestrings(seed=33, count=150)
+    n_hit = n_neg = 0
+    for j in range(len(S)):
+        for k in range(len(L)):
+            ml, ms = (geometry.polygon_mbrs(L.verts[k: k + 1], L.nverts[k: k + 1])[0],
+                      S.mbrs[j])
+            if not (ml[0] <= ms[2] and ms[0] <= ml[2]
+                    and ml[1] <= ms[3] and ms[1] <= ml[3]):
+                continue
+            cells = rasterize.dda_partial_cells(
+                L.verts[k], int(L.nverts[k]), N_ORDER, closed=False)
+            ids = rasterize.cells_to_hilbert(cells, N_ORDER)
+            v = join.linestring_verdict_pair(as_.a_list(j), as_.f_list(j), ids)
+            truth = _line_poly_intersect(L.verts[k], int(L.nverts[k]),
+                                         S.verts[j], int(S.nverts[j]))
+            if v == TRUE_HIT:
+                assert truth, (j, k)
+                n_hit += 1
+            elif v == TRUE_NEG:
+                assert not truth, (j, k)
+                n_neg += 1
+    assert n_hit > 0 and n_neg > 0
+
+
+def _line_poly_intersect(lv, ln, pv, pn):
+    line = np.asarray(lv, np.float64)[:ln]
+    poly = np.asarray(pv, np.float64)[:pn]
+    a0, a1 = line[:-1], line[1:]
+    b0 = poly; b1 = np.roll(poly, -1, axis=0)
+    if bool(geometry.segments_intersect(
+            a0[:, None, :], a1[:, None, :], b0[None, :, :], b1[None, :, :]).any()):
+        return True
+    return bool(geometry.points_in_polygon(line[:1], poly)[0])
+
+
+def test_mixed_granularity(data):
+    R, S, ar, as_, pairs = data
+    n_coarse = N_ORDER - 2
+    as_c = build_april(S, n_coarse)
+    n_checked = 0
+    for i, j in pairs:
+        v = granularity.mixed_order_verdict_pair(
+            ar.a_list(i), ar.f_list(i), N_ORDER,
+            as_c.a_list(j), as_c.f_list(j), n_coarse)
+        truth = geometry.polygons_intersect(
+            R.verts[i], R.nverts[i], S.verts[j], S.nverts[j])
+        if v == TRUE_HIT:
+            assert truth, (i, j)
+        elif v == TRUE_NEG:
+            assert not truth, (i, j)
+        n_checked += 1
+    assert n_checked > 0
+
+
+def test_scale_intervals_superset():
+    ints = np.array([[5, 9], [12, 13], [40, 44]], np.uint64)
+    out = granularity.scale_intervals(ints, 4, 2)
+    # every original cell's scaled id must be covered
+    from repro.core.intervalize import ids_in_intervals
+    orig = ids_in_intervals(ints) >> np.uint64(4)
+    cover = set(ids_in_intervals(out).tolist())
+    assert set(orig.tolist()) <= cover
+    flat = out.reshape(-1).astype(np.int64)
+    assert np.all(np.diff(flat.reshape(-1, 2), axis=1) > 0)
+
+
+def test_partitioning_verdicts_consistent(data):
+    """Partitioned APRIL (own grid per partition) must stay sound, and the
+    reference-point rule must assign each candidate pair exactly one owner."""
+    R, S, ar, as_, pairs = data
+    parting = partition.partition_space([R, S], parts_per_dim=2)
+    stores_r = parting.build_april(R, N_ORDER)
+    stores_s = parting.build_april(S, N_ORDER)
+    n_checked = 0
+    for i, j in pairs[:80]:
+        p = partition.reference_partition(2, R.mbrs[i], S.mbrs[j])
+        part = parting.partitions[p]
+        ridx = part.obj_idx["T1"]; sidx = part.obj_idx["T10"]
+        li = np.nonzero(ridx == i)[0]
+        lj = np.nonzero(sidx == j)[0]
+        assert len(li) == 1 and len(lj) == 1, "owner partition must contain both"
+        sr, ss = stores_r[p], stores_s[p]
+        v = join.april_verdict_pair(
+            sr.a_list(int(li[0])), sr.f_list(int(li[0])),
+            ss.a_list(int(lj[0])), ss.f_list(int(lj[0])))
+        truth = geometry.polygons_intersect(
+            R.verts[i], R.nverts[i], S.verts[j], S.nverts[j])
+        if v == TRUE_HIT:
+            assert truth
+        elif v == TRUE_NEG:
+            assert not truth
+        n_checked += 1
+    assert n_checked > 0
+
+
+def test_partition_improves_resolution(data):
+    """Per-partition grids refine the approximation: indecisive rate must not
+    increase with partitioning (paper Tables 8-9 trend)."""
+    R, S, ar, as_, pairs = data
+    base = [join.april_verdict_pair(ar.a_list(i), ar.f_list(i),
+                                    as_.a_list(j), as_.f_list(j))
+            for i, j in pairs]
+    parting = partition.partition_space([R, S], parts_per_dim=3)
+    stores_r = parting.build_april(R, N_ORDER)
+    stores_s = parting.build_april(S, N_ORDER)
+    part_v = []
+    for i, j in pairs:
+        p = partition.reference_partition(3, R.mbrs[i], S.mbrs[j])
+        part = parting.partitions[p]
+        li = np.nonzero(part.obj_idx["T1"] == i)[0]
+        lj = np.nonzero(part.obj_idx["T10"] == j)[0]
+        sr, ss = stores_r[p], stores_s[p]
+        part_v.append(join.april_verdict_pair(
+            sr.a_list(int(li[0])), sr.f_list(int(li[0])),
+            ss.a_list(int(lj[0])), ss.f_list(int(lj[0]))))
+    ind_base = sum(1 for v in base if v == INDECISIVE)
+    ind_part = sum(1 for v in part_v if v == INDECISIVE)
+    assert ind_part <= ind_base

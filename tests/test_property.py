@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compress, geometry, granularity, hilbert, join
+from repro.core.april import build_april_polygon
+from repro.core.intervalize import ids_in_intervals, intervals_from_ids
+from repro.core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+
+
+# --- strategies -----------------------------------------------------------
+
+@st.composite
+def sorted_unique_ids(draw, max_id=2**20, max_len=64):
+    vals = draw(st.lists(st.integers(0, max_id), min_size=0, max_size=max_len,
+                         unique=True))
+    return np.asarray(sorted(vals), np.uint64)
+
+
+@st.composite
+def interval_list(draw, max_id=2**20, max_len=32):
+    """Sorted disjoint half-open intervals."""
+    pts = draw(st.lists(st.integers(0, max_id), min_size=0, max_size=2 * max_len,
+                        unique=True))
+    pts = sorted(pts)
+    if len(pts) % 2:
+        pts = pts[:-1]
+    arr = np.asarray(pts, np.uint64).reshape(-1, 2)
+    return arr
+
+
+@st.composite
+def polygon(draw):
+    """Random star polygon in [0.05, 0.95]^2."""
+    nv = draw(st.integers(4, 24))
+    cx = draw(st.floats(0.2, 0.8))
+    cy = draw(st.floats(0.2, 0.8))
+    r = draw(st.floats(0.01, 0.15))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ang = np.sort(rng.uniform(0, 2 * np.pi, nv)) + np.linspace(0, 1e-4, nv)
+    rad = r * (1 + 0.5 * rng.uniform(-1, 1, nv))
+    pts = np.stack([cx + rad * np.cos(ang), cy + rad * np.sin(ang)], axis=1)
+    return np.clip(pts, 0.01, 0.99)
+
+
+# --- invariants -----------------------------------------------------------
+
+@given(sorted_unique_ids())
+@settings(max_examples=60, deadline=None)
+def test_intervalize_roundtrip(ids):
+    ints = intervals_from_ids(ids)
+    np.testing.assert_array_equal(ids_in_intervals(ints), ids)
+    if len(ints):
+        # disjoint + sorted + non-empty
+        flat = ints.reshape(-1).astype(np.int64)
+        assert np.all(ints[:, 1] > ints[:, 0])
+        assert np.all(flat[2::2] > flat[1:-1:2])
+
+
+@given(interval_list(), interval_list())
+@settings(max_examples=60, deadline=None)
+def test_merge_join_equals_bruteforce(X, Y):
+    got = join.interval_join_pair(X, Y)
+    xs = set(ids_in_intervals(X).tolist())
+    ys = set(ids_in_intervals(Y).tolist())
+    assert got == bool(xs & ys)
+
+
+@given(interval_list(), interval_list())
+@settings(max_examples=60, deadline=None)
+def test_batched_join_equals_sequential(X, Y):
+    class FakeStore:
+        """CSR-convention store with a single polygon (see AprilStore)."""
+        def __init__(self, ints):
+            self.a_ints = ints
+            self.a_off = np.asarray([0, len(ints)], np.int64)
+            self.f_ints = ints
+            self.f_off = self.a_off
+        def a_list(self, i):
+            return self.a_ints
+        def f_list(self, i):
+            return self.f_ints
+    sx, sy = FakeStore(X), FakeStore(Y)
+    from repro.core.join import pack_lists, batch_overlap_np
+    xs, xl, nx = pack_lists(sx, [0], "A")
+    ys, yl, ny = pack_lists(sy, [0], "A")
+    got = batch_overlap_np(xs, xl, nx, ys, yl, ny)[0]
+    assert bool(got) == join.interval_join_pair(X, Y)
+
+
+@given(interval_list())
+@settings(max_examples=40, deadline=None)
+def test_vbyte_roundtrip(ints):
+    buf, cnt = compress.compress_intervals(ints)
+    back = compress.decompress_intervals(buf, cnt)
+    np.testing.assert_array_equal(back, ints.reshape(-1, 2))
+
+
+@given(interval_list(), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_scaling_covers(ints, dn):
+    n_from, n_to = 12, 12 - dn
+    out = granularity.scale_intervals(ints, n_from, n_to)
+    orig = set((ids_in_intervals(ints) >> np.uint64(2 * dn)).tolist())
+    cover = set(ids_in_intervals(out).tolist())
+    assert orig <= cover
+
+
+@given(st.integers(1, 8), st.data())
+@settings(max_examples=40, deadline=None)
+def test_hilbert_roundtrip_property(n_order, data):
+    G = 1 << n_order
+    x = np.asarray(data.draw(st.lists(st.integers(0, G - 1), min_size=1,
+                                      max_size=32)), np.int64)
+    y = np.asarray(data.draw(st.lists(st.integers(0, G - 1), min_size=len(x),
+                                      max_size=len(x))), np.int64)
+    d = hilbert.xy2d(n_order, x, y)
+    x2, y2 = hilbert.d2xy(n_order, d)
+    np.testing.assert_array_equal(x, x2.astype(np.int64))
+    np.testing.assert_array_equal(y, y2.astype(np.int64))
+
+
+@given(polygon(), polygon())
+@settings(max_examples=25, deadline=None)
+def test_filter_soundness_property(pa, pb):
+    """For ANY pair of random polygons, the APRIL verdict never contradicts
+    the exact geometry predicate."""
+    n_order = 6
+    aa, fa = build_april_polygon(pa, len(pa), n_order)
+    ab, fb = build_april_polygon(pb, len(pb), n_order)
+    v = join.april_verdict_pair(aa, fa, ab, fb)
+    truth = geometry.polygons_intersect(pa, len(pa), pb, len(pb))
+    if v == TRUE_HIT:
+        assert truth
+    elif v == TRUE_NEG:
+        assert not truth
