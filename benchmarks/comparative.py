@@ -1,12 +1,13 @@
 """Fig. 13: comparative study — None / 5C+CH / RA / RI / APRIL / APRIL-C
-filter effectiveness, filter cost and end-to-end join cost.
+filter effectiveness, filter cost and end-to-end join cost, all through the
+`JoinPlan` session API (one batched verdicts pass per method).
 
 Grid order 10 keeps the polygon-diameter / cell-size ratio close to the
 paper's N=16 regime (see benchmarks/common.py): at coarser grids Strong-
 Strong cells dominate and RI's extra hit detection is overstated."""
 from __future__ import annotations
 
-from repro.spatial import spatial_intersection_join
+from repro.spatial import JoinPlan
 
 from .common import ds, row
 
@@ -16,8 +17,9 @@ def run():
     for pair in (("T1", "T2"), ("O5", "O6")):
         R, S = ds(pair[0]), ds(pair[1])
         for m in ("none", "5cch", "ra", "ri", "april", "april-c"):
-            _, st = spatial_intersection_join(R, S, method=m, n_order=10,
-                                              max_ra_cells=256)
+            plan = JoinPlan(R, S, filter=m, n_order=10,
+                            build_opts={"max_cells": 256} if m == "ra" else None)
+            _, st = plan.build().execute("intersects")
             h, g, i = st.rates()
             out.append(row(
                 f"fig13_{pair[0]}x{pair[1]}_{m}", st.t_filter * 1e6,

@@ -1,0 +1,68 @@
+"""BENCH_filter: per-method intermediate-filter throughput (pairs/s),
+sequential per-pair reference vs batched `verdicts`, on one >=10k-candidate
+MBR batch. Seeds the perf trajectory for the batched filter redesign;
+`benchmarks/run.py` persists the result as BENCH_filter.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.datagen import make_dataset
+from repro.spatial import get_filter
+from repro.spatial.mbr_join import mbr_join
+
+from .common import row
+
+N_ORDER = 10
+METHODS = ("none", "april", "april-c", "ri", "ra", "5cch")
+
+
+def bench_filters(min_pairs: int = 10_000):
+    R = make_dataset("T1", seed=1, count=800)
+    S = make_dataset("T2", seed=2, count=1600)
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    assert len(pairs) >= min_pairs, len(pairs)
+    out = {"dataset": "T1 x T2", "n_pairs": int(len(pairs)),
+           "n_order": N_ORDER, "methods": {}}
+    for m in METHODS:
+        filt = get_filter(m)
+        build_opts = {"max_cells": 256} if m == "ra" else {}
+        t0 = time.perf_counter()
+        ar = filt.build(R, n_order=N_ORDER, side="r", **build_opts)
+        as_ = filt.build(S, n_order=N_ORDER, side="s", **build_opts)
+        t_build = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        v_seq = filt.verdicts_seq(ar, as_, pairs)
+        t_seq = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        v_bat = filt.verdicts(ar, as_, pairs)
+        t_bat = time.perf_counter() - t0
+        assert (v_seq == v_bat).all(), f"{m}: batched verdicts diverged"
+
+        out["methods"][m] = {
+            "t_build_s": round(t_build, 4),
+            "t_seq_s": round(t_seq, 4),
+            "t_batch_s": round(t_bat, 6),
+            "seq_pairs_per_s": round(len(pairs) / max(t_seq, 1e-9), 1),
+            "batch_pairs_per_s": round(len(pairs) / max(t_bat, 1e-9), 1),
+            "speedup": round(t_seq / max(t_bat, 1e-9), 2),
+        }
+    return out
+
+
+def run():
+    res = bench_filters()
+    with open("BENCH_filter.json", "w") as f:
+        json.dump(res, f, indent=2)
+    out = []
+    for m, r in res["methods"].items():
+        out.append(row(
+            f"filter_throughput_{m}",
+            1e6 * r["t_batch_s"] / max(res["n_pairs"], 1),
+            f"pairs={res['n_pairs']};seq_pairs_per_s={r['seq_pairs_per_s']};"
+            f"batch_pairs_per_s={r['batch_pairs_per_s']};"
+            f"speedup={r['speedup']}"))
+    return out

@@ -9,8 +9,9 @@ import sys
 import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
-               granularity, join_order, kernel_bench, linestring,
-               partitioning, selection, size_variance, space, within_join)
+               filter_throughput, granularity, join_order, kernel_bench,
+               linestring, partitioning, selection, size_variance, space,
+               within_join)
 
 SUITES = {
     "table4_space": space,
@@ -26,6 +27,8 @@ SUITES = {
     "fig13_comparative": comparative,
     "beyond_adaptive_order": adaptive_order,
     "kernels": kernel_bench,
+    # emits BENCH_filter.json: sequential vs batched verdict throughput
+    "filter_throughput": filter_throughput,
 }
 
 

@@ -1,7 +1,8 @@
-"""Table 16: spatial within joins (r within s)."""
+"""Table 16: spatial within joins (r within s) — every registered filter,
+through `JoinPlan` (the within predicate is no longer APRIL-only)."""
 from __future__ import annotations
 
-from repro.spatial import spatial_within_join
+from repro.spatial import JoinPlan
 
 from .common import ds, row
 
@@ -10,8 +11,9 @@ def run():
     out = []
     for pair in (("T2", "T10"), ("T1", "T3"), ("T2", "T3")):
         R, S = ds(pair[0]), ds(pair[1])
-        for m in ("none", "april"):
-            _, st = spatial_within_join(R, S, method=m, n_order=9)
+        for m in ("none", "april", "ri"):
+            plan = JoinPlan(R, S, filter=m, n_order=9)
+            _, st = plan.build().execute("within")
             h, g, i = st.rates()
             out.append(row(
                 f"table16_{pair[0]}in{pair[1]}_{m}", st.t_filter * 1e6,

@@ -1,5 +1,8 @@
 """Distributed spatial join across all local devices (shard_map), with
-partition-level checkpointing. Run with more virtual devices via:
+partition-level checkpointing. The launcher accepts any registered
+intermediate filter; APRIL ships packed batches through the device mesh,
+the others run their batched verdicts per partition. Run with more virtual
+devices via:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_join.py
@@ -12,13 +15,17 @@ from repro.launch.spatial_join import run_join
 def main():
     print(f"devices: {jax.device_count()}")
     results, totals = run_join("T1", "T2", n_order=9, parts=2,
-                               count_r=400, count_s=600,
+                               count_r=400, count_s=600, method="april",
+                               backend="jnp",
                                ckpt_dir="/tmp/april_join_ckpt")
     print(f"join results: {len(results)} pairs")
     print(f"filter verdict counts: {totals}")
     print("re-running resumes from the partition checkpoint:")
     run_join("T1", "T2", n_order=9, parts=2, count_r=400, count_s=600,
              ckpt_dir="/tmp/april_join_ckpt")
+    print("the same launcher with the RI filter on the host backend:")
+    run_join("T1", "T2", n_order=9, parts=2, count_r=400, count_s=600,
+             method="ri", backend="numpy")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Quickstart: build APRIL approximations and run a spatial intersection
-join end-to-end, comparing intermediate filters.
+join end-to-end with the `JoinPlan` session API, comparing intermediate
+filters.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import numpy as np
 from repro.core.april import build_april_polygon
 from repro.core.join import april_verdict_pair, INDECISIVE, TRUE_HIT, TRUE_NEG
 from repro.datagen import make_dataset
-from repro.spatial import spatial_intersection_join
+from repro.spatial import JoinPlan, available_filters
 
 
 def main():
@@ -25,14 +26,16 @@ def main():
           f"(8x8..256x256 Hilbert grid)")
 
     # --- full pipeline on synthetic landmark/water layers ------------------
+    print(f"registered intermediate filters: {available_filters()}")
     R = make_dataset("T1", count=300)
     S = make_dataset("T2", count=500)
-    for method in ("none", "april"):
-        results, stats = spatial_intersection_join(R, S, method=method,
-                                                   n_order=9)
+    for method in ("none", "april", "ri"):
+        plan = JoinPlan(R, S, filter=method, n_order=9)
+        plan.build()                       # preprocessing, reusable
+        results, stats = plan.execute("intersects")
         print(stats.row())
-    print("both methods return the SAME join result; APRIL just refines "
-          "far fewer pairs.")
+    print("all methods return the SAME join result; the filters just "
+          "refine far fewer pairs.")
 
 
 if __name__ == "__main__":

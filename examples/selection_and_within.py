@@ -1,28 +1,36 @@
-"""APRIL beyond intersection joins (§4.3): polygonal selection queries,
-within joins, and polygon x linestring joins.
+"""Beyond intersection joins (§4.3) with the `JoinPlan` session API:
+polygonal selection queries, within joins, and polygon x linestring joins —
+for any registered intermediate filter, with approximations built once and
+reused across predicates.
 
     PYTHONPATH=src python examples/selection_and_within.py
 """
 from repro.datagen import make_dataset, make_linestrings
-from repro.spatial import (polygon_linestring_join, selection_queries,
-                           spatial_within_join)
+from repro.spatial import JoinPlan, selection_queries
 
 
 def main():
     data = make_dataset("T1", count=400)
     counties = make_dataset("T3", count=10)
 
+    # selection via the grouping wrapper (returns one array per query)
     results, st = selection_queries(data, counties, method="april", n_order=9)
     print("selection:", st.row())
     print(f"  e.g. query 0 returned {len(results[0])} landmark polygons")
 
     small = make_dataset("T2", count=400)
-    res, st = spatial_within_join(small, counties, method="april", n_order=9)
+    plan = JoinPlan(small, counties, filter="ri", n_order=9)
+    plan.build()
+    res, st = plan.execute("within")
     print("within:   ", st.row())
+    # the same built approximations serve another predicate for free
+    res, st = plan.execute("intersects")
+    print("intersect:", st.row())
 
     roads = make_linestrings(count=300)
-    res, st = polygon_linestring_join(counties, roads, method="april",
-                                      n_order=9)
+    lplan = JoinPlan(roads, counties, filter="april", n_order=9,
+                     r_kind="line")
+    res, st = lplan.build().execute("linestring")
     print("linestring:", st.row())
 
 

@@ -15,7 +15,9 @@ import numpy as np
 
 from ..core.join import INDECISIVE, TRUE_NEG
 
-__all__ = ["FiveCCH", "build_5cch", "fivecch_verdict_pair", "convex_hull"]
+__all__ = ["FiveCCH", "build_5cch", "build_5cch_lines",
+           "fivecch_verdict_pair", "fivecch_filter_batch",
+           "fivecch_within_verdict_pair", "convex_hull"]
 
 # 5 fixed outward normals (72-degree steps)
 _ANG = np.pi / 2 + 2 * np.pi * np.arange(5) / 5
@@ -116,3 +118,70 @@ def fivecch_verdict_pair(store_r: FiveCCH, i: int, store_s: FiveCCH, j: int) -> 
     if len(ha) >= 3 and len(hb) >= 3 and convex_disjoint(ha, hb):
         return TRUE_NEG
     return INDECISIVE
+
+
+def fivecch_within_verdict_pair(store_r: FiveCCH, i: int, store_s: FiveCCH,
+                                j: int) -> int:
+    """Within filter: conservative approximations can only certify TRUE_NEG
+    (disjoint approximations => r is not within s); never a hit."""
+    return fivecch_verdict_pair(store_r, i, store_s, j)
+
+
+def build_5cch_lines(dataset) -> FiveCCH:
+    """5C+CH store for open linestrings (the pentagon/hull of the chain's
+    vertices encloses the chain, so disjointness stays conservative)."""
+    return build_5cch(dataset)
+
+
+# ---------------------------------------------------------------------------
+# Batched 5C+CH filtering (DESIGN.md §3): the separating-axis test runs as
+# one padded einsum pass over the whole candidate batch.
+# ---------------------------------------------------------------------------
+
+def _sat_disjoint_batch(A: np.ndarray, B: np.ndarray) -> np.ndarray:
+    """Vectorized separating-axis test: A, B [N, V, 2] (padded convex rings;
+    padding must repeat a real vertex so extra edges are zero-length and the
+    wrap-around edge stays the true closing edge). Returns [N] bool."""
+    out = np.zeros(len(A), bool)
+    for h0, h1 in ((A, B), (B, A)):
+        edges = np.roll(h0, -1, axis=1) - h0
+        normals = np.stack([-edges[..., 1], edges[..., 0]], axis=-1)  # [N,V,2]
+        p0 = np.einsum("npc,nec->npe", h0, normals)
+        p1 = np.einsum("npc,nec->npe", h1, normals)
+        sep = ((p1.max(axis=1) < p0.min(axis=1))
+               | (p1.min(axis=1) > p0.max(axis=1)))
+        out |= sep.any(axis=1)
+    return out
+
+
+def _pad_hulls(store: FiveCCH, idx: np.ndarray):
+    """Gather hulls ``idx`` into a padded [B, H, 2] array (repeat-last-vertex
+    padding) plus the real vertex counts [B]."""
+    idx = np.asarray(idx, np.int64)
+    lo = store.hull_off[idx]
+    counts = (store.hull_off[idx + 1] - lo).astype(np.int64)
+    B = len(idx)
+    H = int(max(1, counts.max() if B else 1))
+    col = np.arange(H)[None, :]
+    src = lo[:, None] + np.minimum(col, np.maximum(counts[:, None] - 1, 0))
+    return store.hull_pts[src], counts
+
+
+def fivecch_filter_batch(store_r: FiveCCH, store_s: FiveCCH,
+                         pairs: np.ndarray) -> np.ndarray:
+    """Vectorized 5C+CH filter; verdict-identical to
+    :func:`fivecch_verdict_pair` per pair (TRUE_NEG / INDECISIVE only)."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    neg = _sat_disjoint_batch(store_r.pent[pairs[:, 0]],
+                              store_s.pent[pairs[:, 1]])
+    live = np.nonzero(~neg)[0]
+    if len(live):
+        ha, na = _pad_hulls(store_r, pairs[live, 0])
+        hb, nb = _pad_hulls(store_s, pairs[live, 1])
+        ok = (na >= 3) & (nb >= 3)      # degenerate hulls skip the CH stage
+        hull_neg = _sat_disjoint_batch(ha, hb) & ok
+        neg[live] |= hull_neg
+    return np.where(neg, TRUE_NEG, INDECISIVE).astype(np.int8)

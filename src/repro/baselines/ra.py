@@ -24,7 +24,8 @@ from ..core import rasterize
 from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
 from ..core.rasterize import Extent
 
-__all__ = ["RAStore", "build_ra", "ra_verdict_pair"]
+__all__ = ["RAStore", "build_ra", "build_ra_lines", "ra_verdict_pair",
+           "ra_filter_batch", "ra_within_verdict_pair", "ra_within_batch"]
 
 EMPTY, WEAK, STRONG, FULL = 0, 1, 2, 3
 _MID = np.array([0.0, 0.25, 0.75, 1.0])
@@ -53,6 +54,22 @@ class RAStore:
         return sum((c.size + 3) // 4 for c in self.cells) + 24 * len(self.cells)
 
 
+def _fit_grid(mbr, max_cells: int, omega: float):
+    """Smallest aligned grid scale with cell count <= max_cells:
+    (k, side, ox, oy, nx, ny)."""
+    k = 0
+    while True:
+        side = omega * (1 << k)
+        nx = int(np.floor(mbr[2] / side)) - int(np.floor(mbr[0] / side)) + 1
+        ny = int(np.floor(mbr[3] / side)) - int(np.floor(mbr[1] / side)) + 1
+        if nx * ny <= max_cells or side > 1.0:
+            break
+        k += 1
+    ox = np.floor(mbr[0] / side) * side
+    oy = np.floor(mbr[1] / side) * side
+    return k, side, ox, oy, nx, ny
+
+
 def build_ra(dataset, max_cells: int = 750, omega: float = 1.0 / (1 << 16)) -> RAStore:
     P = len(dataset)
     ks = np.zeros(P, np.int64)
@@ -61,22 +78,7 @@ def build_ra(dataset, max_cells: int = 750, omega: float = 1.0 / (1 << 16)) -> R
     grids: list[np.ndarray] = []
     for i in range(P):
         v = dataset.polygon(i)
-        mbr = dataset.mbrs[i]
-        w = mbr[2] - mbr[0]; h = mbr[3] - mbr[1]
-        # smallest k with cell count <= max_cells
-        k = 0
-        while True:
-            side = omega * (1 << k)
-            nx = int(np.floor(mbr[2] / side)) - int(np.floor(mbr[0] / side)) + 1
-            ny = int(np.floor(mbr[3] / side)) - int(np.floor(mbr[1] / side)) + 1
-            if nx * ny <= max_cells or side > 1.0:
-                break
-            k += 1
-        side = omega * (1 << k)
-        ox = np.floor(mbr[0] / side) * side
-        oy = np.floor(mbr[1] / side) * side
-        nx = int(np.floor(mbr[2] / side)) - int(np.floor(mbr[0] / side)) + 1
-        ny = int(np.floor(mbr[3] / side)) - int(np.floor(mbr[1] / side)) + 1
+        k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells, omega)
         # coverage fractions for all cells in the window
         cxs = np.arange(nx); cys = np.arange(ny)
         CX, CY = np.meshgrid(cxs, cys, indexing="xy")
@@ -130,6 +132,225 @@ def _upscale_to(store: RAStore, i: int, k_to: int):
         k += 1
         side *= 2
     return (ox, oy), grid
+
+
+def build_ra_lines(dataset, max_cells: int = 750,
+                   omega: float = 1.0 / (1 << 16)) -> RAStore:
+    """RA store for open linestrings: cells crossed by the chain are Weak
+    (zero area => never Strong/Full), the rest Empty. Table 1 still applies:
+    Weak x Full certifies a hit, Weak x Weak/Strong stays indecisive."""
+    P = len(dataset)
+    ks = np.zeros(P, np.int64)
+    origins = np.zeros((P, 2))
+    shapes = np.zeros((P, 2), np.int64)
+    grids: list[np.ndarray] = []
+    for i in range(P):
+        v = dataset.polygon(i)
+        k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells, omega)
+        # rasterize the chain on a power-of-two grid covering the window
+        n_ord = max(1, int(np.ceil(np.log2(max(nx, ny)))))
+        ext = Extent(ox, oy, side * (1 << n_ord))
+        cells = rasterize.dda_partial_cells(v, len(v), n_ord, ext, closed=False)
+        grid = np.full((ny, nx), EMPTY, np.int8)
+        if len(cells):
+            keep = (cells[:, 0] < nx) & (cells[:, 1] < ny)
+            grid[cells[keep, 1], cells[keep, 0]] = WEAK
+        ks[i] = k
+        origins[i] = (ox, oy)
+        shapes[i] = (nx, ny)
+        grids.append(grid)
+    return RAStore(omega=omega, k=ks, origin=origins, shape=shapes, cells=grids)
+
+
+# ---------------------------------------------------------------------------
+# Batched RA filtering (DESIGN.md §3): per-object pyramids are memoized, the
+# per-pair overlay + Table-1 lookup is one padded vectorized gather.
+# ---------------------------------------------------------------------------
+
+def _upscaled(store: RAStore, i: int, k: int, cache: dict | None):
+    """Memoized :func:`_upscale_to`: (int origin x/y at scale k, flat grid,
+    nx, ny)."""
+    key = (i, k)
+    if cache is not None and key in cache:
+        return cache[key]
+    (ox, oy), grid = _upscale_to(store, i, k)
+    side = store.omega * (1 << k)
+    entry = (int(round(ox / side)), int(round(oy / side)),
+             np.ascontiguousarray(grid).ravel(), grid.shape[1], grid.shape[0])
+    if cache is not None:
+        cache[key] = entry
+    return entry
+
+
+def _pair_grids(store_r, store_s, pairs, cache_r, cache_s):
+    """Upscale both sides of every pair to the pair's coarser scale and
+    return flat-concatenated grids plus per-pair geometry arrays."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    kk = np.maximum(store_r.k[pairs[:, 0]], store_s.k[pairs[:, 1]]).astype(np.int64)
+
+    def side_arrays(store, idx, cache):
+        uniq = {}
+        rows = []
+        for i, k in zip(idx.tolist(), kk.tolist()):
+            key = (i, k)
+            if key not in uniq:
+                uniq[key] = _upscaled(store, i, k, cache)
+            rows.append(key)
+        flat_chunks = []
+        base = {}
+        pos = 0
+        for key, (x0, y0, flat, nx, ny) in uniq.items():
+            base[key] = pos
+            flat_chunks.append(flat)
+            pos += len(flat)
+        flat_all = (np.concatenate(flat_chunks) if flat_chunks
+                    else np.zeros(0, np.int8))
+        x0 = np.asarray([uniq[k][0] for k in rows], np.int64)
+        y0 = np.asarray([uniq[k][1] for k in rows], np.int64)
+        bs = np.asarray([base[k] for k in rows], np.int64)
+        nx = np.asarray([uniq[k][3] for k in rows], np.int64)
+        ny = np.asarray([uniq[k][4] for k in rows], np.int64)
+        return flat_all, x0, y0, bs, nx, ny
+
+    r = side_arrays(store_r, pairs[:, 0], cache_r)
+    s = side_arrays(store_s, pairs[:, 1], cache_s)
+    return kk, r, s
+
+
+def ra_filter_batch(store_r: RAStore, store_s: RAStore, pairs: np.ndarray,
+                    cache_r: dict | None = None, cache_s: dict | None = None,
+                    chunk_elems: int = 1 << 24) -> np.ndarray:
+    """Vectorized RA intersection filter; verdict-identical to
+    :func:`ra_verdict_pair` per pair."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    _, (fr, rx0, ry0, rb, rnx, rny), (fs, sx0, sy0, sb, snx, sny) = \
+        _pair_grids(store_r, store_s, pairs, cache_r, cache_s)
+    x0 = np.maximum(rx0, sx0); y0 = np.maximum(ry0, sy0)
+    x1 = np.minimum(rx0 + rnx, sx0 + snx)
+    y1 = np.minimum(ry0 + rny, sy0 + sny)
+    ww = np.maximum(x1 - x0, 0); wh = np.maximum(y1 - y0, 0)
+    out = np.full(N, TRUE_NEG, np.int8)
+    live = np.nonzero((ww > 0) & (wh > 0))[0]
+    i0 = 0
+    while i0 < len(live):
+        Hm = int(wh[live[i0:]].max()); Wm = int(ww[live[i0:]].max())
+        rows = max(1, int(chunk_elems // max(1, Hm * Wm)))
+        sel = live[i0: i0 + rows]
+        Hm = int(wh[sel].max()); Wm = int(ww[sel].max())
+        yy = np.arange(Hm)[None, :, None]
+        xx = np.arange(Wm)[None, None, :]
+        valid = (yy < wh[sel, None, None]) & (xx < ww[sel, None, None])
+
+        def gather(flat, bs, gx0, gy0, nx):
+            idx = (bs[sel, None, None]
+                   + (y0[sel, None, None] - gy0[sel, None, None] + yy) * nx[sel, None, None]
+                   + (x0[sel, None, None] - gx0[sel, None, None] + xx))
+            return np.where(valid,
+                            flat[np.clip(idx, 0, max(len(flat) - 1, 0))], EMPTY)
+
+        cr = gather(fr, rb, rx0, ry0, rnx)
+        cs = gather(fs, sb, sx0, sy0, snx)
+        t = _TABLE[cr, cs]
+        hit = np.any((t == 1) & valid, axis=(1, 2))
+        maybe = np.any((t == 0) & valid, axis=(1, 2))
+        out[sel] = np.where(hit, TRUE_HIT,
+                            np.where(maybe, INDECISIVE, TRUE_NEG))
+        i0 += len(sel)
+    return out
+
+
+def ra_within_verdict_pair(store_r: RAStore, i: int, store_s: RAStore,
+                           j: int) -> int:
+    """RA within filter (r within s?), sequential reference.
+
+    Sound rules at the pair's coarser scale k: any non-Empty r cell that is
+    Empty in s (or outside s's grid) kills the pair; r Full requires s Full;
+    r Strong vs s Weak kills only when s is at its native scale (an upscaled
+    Weak is not a <=50% upper bound). TRUE_HIT iff every non-Empty r cell is
+    Full in s. Never contradicts the geometry (class combination is
+    conservative, see :func:`_upscale_to`).
+    """
+    k = max(int(store_r.k[i]), int(store_s.k[j]))
+    (oxr, oyr), gr = _upscale_to(store_r, i, k)
+    (oxs, oys), gs = _upscale_to(store_s, j, k)
+    side = store_r.omega * (1 << k)
+    rx0 = int(round(oxr / side)); ry0 = int(round(oyr / side))
+    sx0 = int(round(oxs / side)); sy0 = int(round(oys / side))
+    s_native = k == int(store_s.k[j])
+    all_full = True
+    nonempty = False
+    for y in range(gr.shape[0]):
+        for x in range(gr.shape[1]):
+            cr = gr[y, x]
+            if cr == EMPTY:
+                continue
+            nonempty = True
+            gx = rx0 + x - sx0
+            gy = ry0 + y - sy0
+            if gx < 0 or gy < 0 or gx >= gs.shape[1] or gy >= gs.shape[0]:
+                return TRUE_NEG
+            cs = gs[gy, gx]
+            if cs == EMPTY:
+                return TRUE_NEG
+            if cr == FULL and cs != FULL:
+                return TRUE_NEG
+            if s_native and cr == STRONG and cs == WEAK:
+                return TRUE_NEG
+            if cs != FULL:
+                all_full = False
+    if not nonempty:
+        return TRUE_HIT
+    return TRUE_HIT if all_full else INDECISIVE
+
+
+def ra_within_batch(store_r: RAStore, store_s: RAStore, pairs: np.ndarray,
+                    cache_r: dict | None = None, cache_s: dict | None = None,
+                    chunk_elems: int = 1 << 24) -> np.ndarray:
+    """Vectorized RA within filter; verdict-identical to
+    :func:`ra_within_verdict_pair` per pair."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    kk, (fr, rx0, ry0, rb, rnx, rny), (fs, sx0, sy0, sb, snx, sny) = \
+        _pair_grids(store_r, store_s, pairs, cache_r, cache_s)
+    s_native = kk == store_s.k[pairs[:, 1]].astype(np.int64)
+    out = np.empty(N, np.int8)
+    i0 = 0
+    order = np.arange(N)
+    while i0 < N:
+        Hm = int(rny[order[i0:]].max()); Wm = int(rnx[order[i0:]].max())
+        rows = max(1, int(chunk_elems // max(1, Hm * Wm)))
+        sel = order[i0: i0 + rows]
+        Hm = int(rny[sel].max()); Wm = int(rnx[sel].max())
+        yy = np.arange(Hm)[None, :, None]
+        xx = np.arange(Wm)[None, None, :]
+        valid = (yy < rny[sel, None, None]) & (xx < rnx[sel, None, None])
+        idx_r = rb[sel, None, None] + yy * rnx[sel, None, None] + xx
+        cr = np.where(valid, fr[np.clip(idx_r, 0, max(len(fr) - 1, 0))], EMPTY)
+        gx = rx0[sel, None, None] + xx - sx0[sel, None, None]
+        gy = ry0[sel, None, None] + yy - sy0[sel, None, None]
+        inside = ((gx >= 0) & (gy >= 0) & (gx < snx[sel, None, None])
+                  & (gy < sny[sel, None, None]))
+        idx_s = sb[sel, None, None] + gy * snx[sel, None, None] + gx
+        cs = np.where(valid & inside,
+                      fs[np.clip(idx_s, 0, max(len(fs) - 1, 0))], EMPTY)
+        ne = valid & (cr != EMPTY)
+        neg_cell = ne & ((~inside) | (cs == EMPTY)
+                         | ((cr == FULL) & (cs != FULL))
+                         | (s_native[sel, None, None]
+                            & (cr == STRONG) & (cs == WEAK)))
+        notfull = ne & (cs != FULL)
+        neg = np.any(neg_cell, axis=(1, 2))
+        any_ne = np.any(ne, axis=(1, 2))
+        nf = np.any(notfull, axis=(1, 2))
+        out[sel] = np.where(neg, TRUE_NEG,
+                            np.where(~any_ne | ~nf, TRUE_HIT, INDECISIVE))
+        i0 += len(sel)
+    return out
 
 
 def ra_verdict_pair(store_r: RAStore, i: int, store_s: RAStore, j: int) -> int:

@@ -14,6 +14,8 @@ benchmarks and the streaming host join.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
@@ -21,7 +23,7 @@ from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
 __all__ = [
     "vbyte_encode", "vbyte_decode", "compress_intervals",
     "decompress_intervals", "DecompressingCursor", "interval_join_compressed",
-    "april_verdict_compressed",
+    "april_verdict_compressed", "CompressedAprilStore", "compress_april",
 ]
 
 
@@ -131,3 +133,57 @@ def april_verdict_compressed(ar, fr, as_, fs) -> int:
     if interval_join_compressed(fr, as_):
         return TRUE_HIT
     return INDECISIVE
+
+
+@dataclass
+class CompressedAprilStore:
+    """APRIL-C approximations for one dataset: per-object VByte buffers.
+
+    The streaming per-pair join (:func:`april_verdict_compressed`) consumes
+    the buffers directly; the batched/device path decompresses the objects of
+    a candidate batch on host first (DESIGN.md §3) via :meth:`decompress`.
+    """
+    n_order: int
+    extent: object
+    a_bufs: list          # per object: (bytes, count)
+    f_bufs: list
+
+    def __len__(self) -> int:
+        return len(self.a_bufs)
+
+    def a_list(self, i: int) -> np.ndarray:
+        return decompress_intervals(*self.a_bufs[i])
+
+    def f_list(self, i: int) -> np.ndarray:
+        return decompress_intervals(*self.f_bufs[i])
+
+    def size_bytes(self) -> int:
+        return (sum(len(b) for b, _ in self.a_bufs)
+                + sum(len(b) for b, _ in self.f_bufs))
+
+    def decompress(self, idx: np.ndarray | None = None):
+        """Decompress objects ``idx`` (all when None) into an
+        :class:`~repro.core.april.AprilStore` with rows renumbered 0..B-1."""
+        from .april import AprilStore
+        idx = np.arange(len(self)) if idx is None else np.asarray(idx, np.int64)
+        a_off = [0]; f_off = [0]
+        a_chunks = []; f_chunks = []
+        for i in idx:
+            a = self.a_list(int(i)); f = self.f_list(int(i))
+            a_chunks.append(a); f_chunks.append(f)
+            a_off.append(a_off[-1] + len(a))
+            f_off.append(f_off[-1] + len(f))
+        cat = lambda ch: (np.concatenate(ch, axis=0) if ch
+                          else np.zeros((0, 2), np.uint64))
+        return AprilStore(
+            n_order=self.n_order, extent=self.extent,
+            a_off=np.asarray(a_off, np.int64), a_ints=cat(a_chunks),
+            f_off=np.asarray(f_off, np.int64), f_ints=cat(f_chunks))
+
+
+def compress_april(store) -> CompressedAprilStore:
+    """Compress an AprilStore into per-object VByte buffers (§5.1)."""
+    a_bufs = [compress_intervals(store.a_list(i)) for i in range(len(store))]
+    f_bufs = [compress_intervals(store.f_list(i)) for i in range(len(store))]
+    return CompressedAprilStore(n_order=store.n_order, extent=store.extent,
+                                a_bufs=a_bufs, f_bufs=f_bufs)

@@ -32,9 +32,10 @@ except Exception:  # pragma: no cover
 __all__ = [
     "TRUE_NEG", "TRUE_HIT", "INDECISIVE",
     "interval_join_pair", "april_verdict_pair", "within_verdict_pair",
-    "linestring_verdict_pair", "pack_lists", "batch_overlap_np",
-    "batch_overlap_jnp", "april_filter_batch", "containment_join_pair",
-    "adaptive_order",
+    "linestring_verdict_pair", "pack_lists", "pack_csr_intervals",
+    "batch_overlap_np", "batch_overlap_jnp", "april_filter_batch",
+    "within_filter_batch", "linestring_filter_batch",
+    "containment_join_pair", "adaptive_order",
 ]
 
 TRUE_NEG, TRUE_HIT, INDECISIVE = 0, 1, 2
@@ -147,8 +148,10 @@ def linestring_verdict_pair(Ap, Fp, cell_ids: np.ndarray) -> int:
 # Vectorized batched joins (TPU-adapted; numpy reference + jnp device)
 # ---------------------------------------------------------------------------
 
-def pack_lists(store, idx: np.ndarray, kind: str, pad_to: int | None = None):
-    """Pack interval lists store[kind][idx] into padded biased-int32 arrays.
+def pack_csr_intervals(off: np.ndarray, ints: np.ndarray, idx: np.ndarray,
+                       pad_to: int | None = None):
+    """Pack CSR interval lists ``ints[off[i]:off[i+1]]`` for rows ``idx`` into
+    padded biased-int32 arrays.
 
     Returns (starts [B, I], lasts [B, I], counts [B]) where I is the max (or
     ``pad_to``) interval count; padding slots hold I32_MAX. Endpoints are
@@ -157,8 +160,6 @@ def pack_lists(store, idx: np.ndarray, kind: str, pad_to: int | None = None):
     path of every device batch).
     """
     idx = np.asarray(idx, np.int64)
-    off = store.a_off if kind == "A" else store.f_off
-    ints = store.a_ints if kind == "A" else store.f_ints
     lo = off[idx]
     counts = (off[idx + 1] - lo).astype(np.int32)
     B = len(idx)
@@ -174,6 +175,13 @@ def pack_lists(store, idx: np.ndarray, kind: str, pad_to: int | None = None):
         starts[mask] = u32_to_biased_i32(ints[src, 0])
         lasts[mask] = u32_to_biased_i32(ints[src, 1] - np.uint64(1))
     return starts, lasts, counts
+
+
+def pack_lists(store, idx: np.ndarray, kind: str, pad_to: int | None = None):
+    """Pack interval lists store[kind][idx]; see :func:`pack_csr_intervals`."""
+    off = store.a_off if kind == "A" else store.f_off
+    ints = store.a_ints if kind == "A" else store.f_ints
+    return pack_csr_intervals(off, ints, idx, pad_to=pad_to)
 
 
 def batch_overlap_np(xs, xl, nx, ys, yl, ny) -> np.ndarray:
@@ -229,6 +237,76 @@ def _containment_batch_np(xs, xl, nx, fs, fl, nf) -> np.ndarray:
         out[b] = bool(np.all(ok & (fs[b, jj] <= xs[b, :nxb])
                              & (xl[b, :nxb] <= fl[b, jj])))
     return out
+
+
+def batch_containment_jnp(xs, xl, nx, fs, fl, nf):
+    """jnp device version of :func:`_containment_batch_np`."""
+    assert jnp is not None
+
+    def one(xs_r, xl_r, nx_r, fs_r, fl_r, nf_r):
+        I = xs_r.shape[0]
+        j = jnp.searchsorted(fl_r, xl_r, side="left")
+        ok = j < nf_r
+        jj = jnp.minimum(j, jnp.maximum(nf_r - 1, 0))
+        fs_at = jnp.take(fs_r, jj)
+        fl_at = jnp.take(fl_r, jj)
+        valid_x = jnp.arange(I, dtype=jnp.int32) < nx_r
+        inside = ok & (fs_at <= xs_r) & (xl_r <= fl_at)
+        return jnp.all(jnp.where(valid_x, inside, True)) & (nx_r > 0) & (nf_r > 0)
+
+    return jax.vmap(one)(xs, xl, nx, fs, fl, nf)
+
+
+def within_filter_batch(store_r, store_s, pairs: np.ndarray,
+                        use_jnp: bool = False) -> np.ndarray:
+    """Vectorized APRIL within filter (§4.3.2) over candidate pairs [N,2].
+
+    Verdict-identical to :func:`within_verdict_pair` applied per pair:
+    AA disjoint -> TRUE_NEG; every A(r) interval inside an F(s) interval ->
+    TRUE_HIT; else INDECISIVE.
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
+    contain = batch_containment_jnp if (use_jnp and jnp is not None) \
+        else _containment_batch_np
+    xs, xl, nx = pack_lists(store_r, pairs[:, 0], "A")
+    ys, yl, ny = pack_lists(store_s, pairs[:, 1], "A")
+    aa = np.asarray(overlap(xs, xl, nx, ys, yl, ny))
+    fs, fl, nf = pack_lists(store_s, pairs[:, 1], "F")
+    cont = np.asarray(contain(xs, xl, nx, fs, fl, nf))
+    return np.where(~aa, TRUE_NEG,
+                    np.where((nx > 0) & cont, TRUE_HIT,
+                             INDECISIVE)).astype(np.int8)
+
+
+def linestring_filter_batch(store_s, line_off: np.ndarray,
+                            line_ids: np.ndarray, pairs: np.ndarray,
+                            use_jnp: bool = False) -> np.ndarray:
+    """Vectorized polygon x linestring filter (§4.3.3).
+
+    ``pairs`` rows are (line_idx, poly_idx); the linestring side is a CSR
+    array of sorted Partial cell ids treated as unit intervals (start = last
+    = id in inclusive-last space). Verdict-identical to
+    :func:`linestring_verdict_pair`.
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
+    # pack the line side as unit intervals (inclusive-last == start)
+    cells = np.stack([line_ids, line_ids + np.uint64(1)], axis=1) \
+        if len(line_ids) else np.zeros((0, 2), np.uint64)
+    cs, cl, counts = pack_csr_intervals(line_off, cells, pairs[:, 0])
+    as_, al, na = pack_lists(store_s, pairs[:, 1], "A")
+    aa = np.asarray(overlap(as_, al, na, cs, cl, counts))
+    fs_, fl, nf = pack_lists(store_s, pairs[:, 1], "F")
+    fhit = np.asarray(overlap(fs_, fl, nf, cs, cl, counts))
+    return np.where(~aa, TRUE_NEG,
+                    np.where(fhit, TRUE_HIT, INDECISIVE)).astype(np.int8)
 
 
 def april_filter_batch(

@@ -53,6 +53,23 @@ class Partitioning:
             out.append(build_april(sub, n_order, part.extent, method))
         return out
 
+    def build_approx(self, filt, dataset, n_order: int, side: str = "r",
+                     **build_opts) -> list:
+        """Per-partition approximations through an
+        :class:`~repro.spatial.filters.IntermediateFilter` (None where the
+        dataset has no objects). Generalizes :meth:`build_april` to every
+        registered filter — each partition gets its own raster extent."""
+        out = []
+        for part in self.partitions:
+            idx = part.obj_idx.get(dataset.name, np.zeros(0, np.int64))
+            if len(idx) == 0:
+                out.append(None)
+                continue
+            sub = _subset(dataset, idx)
+            out.append(filt.build(sub, n_order=n_order, extent=part.extent,
+                                  side=side, **build_opts))
+        return out
+
 
 def _subset(dataset, idx):
     from ..datagen.synthetic import PolygonDataset

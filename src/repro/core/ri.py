@@ -31,7 +31,8 @@ from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
 from .rasterize import Extent, GLOBAL_EXTENT
 
 __all__ = [
-    "RIStore", "build_ri", "ri_verdict_pair", "ri_within_verdict_pair",
+    "RIStore", "build_ri", "build_ri_lines", "ri_verdict_pair",
+    "ri_within_verdict_pair", "ri_filter_batch", "ri_within_batch",
     "CODE_R", "CODE_S", "XOR_MASK", "FULL", "STRONG", "WEAK",
 ]
 
@@ -97,15 +98,12 @@ def _classify_cells(verts, n, n_order, extent):
     return ids[order], cls[order]
 
 
-def build_ri(
-    dataset, n_order: int, extent: Extent = GLOBAL_EXTENT, encoding: str = "R",
-) -> RIStore:
+def _pack_store(objects, n_order: int, extent: Extent, encoding: str) -> RIStore:
+    """Assemble an RIStore from per-object (sorted ids, classes) pairs."""
     code_tab = CODE_R if encoding == "R" else CODE_S
     off = [0]; bit_off = [0]
     int_chunks = []; bit_chunks = []
-    for i in range(len(dataset)):
-        ids, cls = _classify_cells(
-            dataset.verts[i], int(dataset.nverts[i]), n_order, extent)
+    for ids, cls in objects:
         ints = intervals_from_ids(ids)
         int_chunks.append(ints)
         off.append(off[-1] + len(ints))
@@ -127,6 +125,32 @@ def build_ri(
         off=np.asarray(off, np.int64), ints=ints,
         bit_off=np.asarray(bit_off, np.int64), bits=bits,
     )
+
+
+def build_ri(
+    dataset, n_order: int, extent: Extent = GLOBAL_EXTENT, encoding: str = "R",
+) -> RIStore:
+    return _pack_store(
+        (_classify_cells(dataset.verts[i], int(dataset.nverts[i]), n_order,
+                         extent)
+         for i in range(len(dataset))),
+        n_order, extent, encoding)
+
+
+def build_ri_lines(
+    dataset, n_order: int, extent: Extent = GLOBAL_EXTENT, encoding: str = "R",
+) -> RIStore:
+    """RI store for open linestrings: every touched cell is Weak (a line has
+    no interior, so it can never certify a hit from its own side — but Weak
+    against a Full polygon cell still ANDs non-zero, §3.3)."""
+    def gen():
+        for i in range(len(dataset)):
+            cells = rasterize.dda_partial_cells(
+                dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
+                closed=False)
+            ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
+            yield ids, np.full(len(ids), WEAK, np.int8)
+    return _pack_store(gen(), n_order, extent, encoding)
 
 
 def _aligned_and(xbits, xs, ybits, ys, lo, hi, xor_y: bool) -> bool:
@@ -197,6 +221,287 @@ def _cell_class(store: RIStore, i: int, k: int, off: int, table) -> int:
 
 def _cell_class_at(store: RIStore, j: int, k: int, off: int, table) -> int:
     return _cell_class(store, j, k, off, table)
+
+
+# ---------------------------------------------------------------------------
+# Batched RI filtering (DESIGN.md §3): fragment extraction is a vectorized
+# CSR sweep; the ALIGNEDAND over all fragments runs either as a numpy bit
+# pass or through the Pallas `kernels/ri_and` word kernel.
+# ---------------------------------------------------------------------------
+
+_U64_MAX = np.uint64(np.iinfo(np.uint64).max)
+
+# 3-bit code (b0*4 + b1*2 + b2) -> class id, per encoding; -1 = invalid
+_DECODE_ARR = {}
+for _enc, _tab in (("R", CODE_R), ("S", CODE_S)):
+    _arr = np.full(8, -1, np.int8)
+    for _cls, (_b0, _b1, _b2) in _tab.items():
+        _arr[4 * _b0 + 2 * _b1 + _b2] = _cls
+    _DECODE_ARR[_enc] = _arr
+
+_MASK3 = np.asarray(XOR_MASK, np.uint8)
+
+
+def _pad_intervals(store: RIStore, idx: np.ndarray):
+    """Padded per-pair interval endpoints: (starts [B,W], ends [B,W],
+    counts [B], first_global [B]). Padding slots hold uint64 max."""
+    idx = np.asarray(idx, np.int64)
+    lo = store.off[idx]
+    counts = (store.off[idx + 1] - lo).astype(np.int64)
+    B = len(idx)
+    W = int(max(1, counts.max() if B else 1))
+    starts = np.full((B, W), _U64_MAX, np.uint64)
+    ends = np.full((B, W), _U64_MAX, np.uint64)
+    if len(store.ints) and B:
+        col = np.arange(W)[None, :]
+        mask = col < counts[:, None]
+        src = (lo[:, None] + col)[mask]
+        starts[mask] = store.ints[src, 0]
+        ends[mask] = store.ints[src, 1]
+    return starts, ends, counts, lo
+
+
+def _flat_intervals(store: RIStore, idx: np.ndarray):
+    """Per-pair flattened interval lists: (row-of-slot [T], local-pos [T],
+    global-interval [T], segment offsets [B+1])."""
+    idx = np.asarray(idx, np.int64)
+    lo = store.off[idx]
+    counts = (store.off[idx + 1] - lo).astype(np.int64)
+    T = int(counts.sum())
+    b_of = np.repeat(np.arange(len(idx)), counts)
+    seg = np.concatenate([[0], np.cumsum(counts)])
+    pos = np.arange(T) - np.repeat(seg[:-1], counts)
+    return b_of, pos, lo[b_of] + pos, seg
+
+
+def _pair_fragments(store_x: RIStore, store_y: RIStore, pairs: np.ndarray):
+    """All overlapping interval pairs ("fragments") of the candidate batch.
+
+    Returns (b, ax, gx, gy, lo, hi): pair row, local x-interval index, global
+    interval ids into each store, and the shared cell run [lo, hi). Fully
+    vectorized: per x-interval, the overlapping y-intervals form a contiguous
+    run (Y lists are sorted + disjoint) found with two flat searchsorted
+    passes over row-keyed endpoints (row index in the high bits keeps each
+    pair's segment separate; Hilbert ids use at most 2*N <= 32 bits).
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    bx_of, posx, gx_flat, _ = _flat_intervals(store_x, pairs[:, 0])
+    by_of, posy, gy_flat, yseg = _flat_intervals(store_y, pairs[:, 1])
+    if len(gx_flat) == 0 or len(gy_flat) == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z, z, z.astype(np.uint64), z.astype(np.uint64)
+    SHIFT = np.uint64(33)
+    xkey_b = bx_of.astype(np.uint64) << SHIFT
+    ykey = (by_of.astype(np.uint64) << SHIFT)
+    ys_keys = ykey + store_y.ints[gy_flat, 0]
+    ye_keys = ykey + store_y.ints[gy_flat, 1]
+    xs_flat = store_x.ints[gx_flat, 0]
+    xe_flat = store_x.ints[gx_flat, 1]
+    seg0 = yseg[:-1][bx_of]
+    # first y with ye > xs ; one past last y with ys < xe
+    lo_idx = np.searchsorted(ye_keys, xkey_b + xs_flat, side="right") - seg0
+    hi_idx = np.searchsorted(ys_keys, xkey_b + xe_flat, side="left") - seg0
+    n_frag = np.maximum(hi_idx - lo_idx, 0)
+    total = int(n_frag.sum())
+    if total == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z, z, z.astype(np.uint64), z.astype(np.uint64)
+    rep = np.repeat(np.arange(len(n_frag)), n_frag)
+    k = np.arange(total) - np.repeat(np.cumsum(n_frag) - n_frag, n_frag)
+    b = bx_of[rep]
+    ax = posx[rep]
+    gx = gx_flat[rep]
+    gy = store_y.off[pairs[b, 1]] + np.repeat(lo_idx, n_frag) + k
+    lo = np.maximum(store_x.ints[gx, 0], store_y.ints[gy, 0])
+    hi = np.minimum(store_x.ints[gx, 1], store_y.ints[gy, 1])
+    return b, ax, gx, gy, lo, hi
+
+
+def _fragment_hits_np(store_x: RIStore, store_y: RIStore, gx, gy, lo, hi,
+                      xor_y: bool, chunk_elems: int = 1 << 24) -> np.ndarray:
+    """ALIGNEDAND over all fragments, numpy bit-level path -> [F] bool."""
+    F = len(gx)
+    nbits = (3 * (hi - lo)).astype(np.int64)
+    xo = store_x.bit_off[gx] + 3 * (lo - store_x.ints[gx, 0]).astype(np.int64)
+    yo = store_y.bit_off[gy] + 3 * (lo - store_y.ints[gy, 0]).astype(np.int64)
+    hits = np.zeros(F, bool)
+    bx = store_x.bits; by = store_y.bits
+    # power-of-two size buckets bound padding waste to 2x; rows per chunk
+    # bound the padded working set
+    for sel in _size_buckets(nbits, chunk_elems):
+        L = int(nbits[sel].max())
+        pos = np.arange(L)
+        keep = pos[None, :] < nbits[sel, None]
+        xi = np.clip(xo[sel, None] + pos[None, :], 0, max(len(bx) - 1, 0))
+        yi = np.clip(yo[sel, None] + pos[None, :], 0, max(len(by) - 1, 0))
+        xv = bx[xi]
+        yv = by[yi]
+        if xor_y:
+            yv = yv ^ _MASK3[pos % 3][None, :]
+        hits[sel] = np.any((xv & yv) & keep, axis=1)
+    return hits
+
+
+def _size_buckets(sizes: np.ndarray, chunk_elems: int):
+    """Yield index chunks grouped by power-of-two size class (padding waste
+    <= 2x), each chunk's padded element count bounded by ``chunk_elems``."""
+    sizes = np.asarray(sizes, np.int64)
+    nz = np.nonzero(sizes > 0)[0]
+    if len(nz) == 0:
+        return
+    cls = np.ceil(np.log2(sizes[nz].astype(np.float64))).astype(np.int64)
+    for c in np.unique(cls):
+        sel = nz[cls == c]
+        L = int(sizes[sel].max())
+        rows = max(1, int(chunk_elems // max(1, L)))
+        for r0 in range(0, len(sel), rows):
+            yield sel[r0: r0 + rows]
+
+
+def _interval_words(store: RIStore, g: np.ndarray, W: int) -> np.ndarray:
+    """Pack the full bitcodes of intervals ``g`` into [F, W] uint32 words,
+    LSB-first (the layout `kernels/ri_and` consumes)."""
+    F = len(g)
+    nb = (store.bit_off[g + 1] - store.bit_off[g]).astype(np.int64)
+    pos = np.arange(32 * W)
+    bi = store.bit_off[g][:, None] + pos[None, :]
+    valid = pos[None, :] < nb[:, None]
+    src = np.clip(bi, 0, max(len(store.bits) - 1, 0))
+    vals = np.where(valid, store.bits[src], 0).astype(np.uint32)
+    sh = vals.reshape(F, W, 32) << np.arange(32, dtype=np.uint32)[None, None, :]
+    return np.bitwise_or.reduce(sh, axis=-1)
+
+
+def _fragment_hits_pallas(store_x: RIStore, store_y: RIStore, gx, gy, lo, hi,
+                          xor_y: bool, interpret: bool | None = None,
+                          chunk_elems: int = 1 << 22) -> np.ndarray:
+    """ALIGNEDAND over fragments through the Pallas `ri_and` word kernel."""
+    import jax
+    from ..kernels.ri_and.ops import batch_aligned_and, xor_mask_words
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    F = len(gx)
+    nbits = (3 * (hi - lo)).astype(np.int64)
+    xo = (3 * (lo - store_x.ints[gx, 0])).astype(np.int64)
+    yo = (3 * (lo - store_y.ints[gy, 0])).astype(np.int64)
+    ibits = np.maximum(store_x.bit_off[gx + 1] - store_x.bit_off[gx],
+                       store_y.bit_off[gy + 1] - store_y.bit_off[gy])
+    hits = np.zeros(F, bool)
+    for sel in _size_buckets(ibits, chunk_elems):
+        W = max(1, (int(ibits[sel].max()) + 31) // 32)
+        xw = _interval_words(store_x, gx[sel], W)
+        yw = _interval_words(store_y, gy[sel], W)
+        meta = np.stack([xo[sel], yo[sel], nbits[sel],
+                         np.full(len(sel), int(xor_y))], axis=1).astype(np.int32)
+        hits[sel] = np.asarray(batch_aligned_and(
+            xw, yw, meta, xor_mask_words(W), interpret=interpret))
+    return hits
+
+
+def ri_filter_batch(store_x: RIStore, store_y: RIStore, pairs: np.ndarray,
+                    backend: str = "numpy") -> np.ndarray:
+    """Vectorized RI intersection filter (Algorithm 1) over pairs [N,2].
+
+    Verdict-identical to :func:`ri_verdict_pair` per pair: TRUE_HIT if any
+    shared cell run ANDs non-zero, INDECISIVE if interval ranges overlap
+    without a code hit, TRUE_NEG otherwise. ``backend``: 'numpy' (host bit
+    pass) or 'pallas'/'jnp' (packed uint32 words through kernels/ri_and).
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    xor_y = store_x.encoding == store_y.encoding
+    b, ax, gx, gy, lo, hi = _pair_fragments(store_x, store_y, pairs)
+    hit_fn = (_fragment_hits_pallas if backend in ("pallas", "jnp")
+              else _fragment_hits_np)
+    ovl_pair = np.zeros(N, bool)
+    ovl_pair[b] = True
+    hit_pair = np.zeros(N, bool)
+    # batch-level short-circuit (DESIGN.md §3): AND the k-th fragment of
+    # every undecided pair per round — a pair decided by an early fragment
+    # never pays for its remaining ones (the vectorized analogue of the
+    # sequential early exit). After a few rounds the survivors are flushed.
+    if len(b):
+        first = np.r_[True, b[1:] != b[:-1]]
+        seg = np.nonzero(first)[0]
+        rank = np.arange(len(b)) - np.repeat(seg, np.diff(np.r_[seg, len(b)]))
+        todo = np.arange(len(b))
+        r = 0
+        while len(todo):
+            todo = todo[~hit_pair[b[todo]]]
+            if len(todo) == 0:
+                break
+            if r < 4:
+                m = rank[todo] == r
+                cur = todo[m]
+                todo = todo[~m]
+            else:               # flush the tail in one pass
+                cur = todo
+                todo = todo[:0]
+            if len(cur):
+                hits = hit_fn(store_x, store_y, gx[cur], gy[cur], lo[cur],
+                              hi[cur], xor_y)
+                np.logical_or.at(hit_pair, b[cur], hits)
+            r += 1
+    return np.where(hit_pair, TRUE_HIT,
+                    np.where(ovl_pair, INDECISIVE, TRUE_NEG)).astype(np.int8)
+
+
+def ri_within_batch(store_x: RIStore, store_y: RIStore,
+                    pairs: np.ndarray) -> np.ndarray:
+    """Vectorized RI within filter (§3.4) over pairs [N,2]; verdict-identical
+    to :func:`ri_within_verdict_pair` per pair."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    cx = store_x.off[pairs[:, 0] + 1] - store_x.off[pairs[:, 0]]
+    b, ax, gx, gy, lo, hi = _pair_fragments(store_x, store_y, pairs)
+
+    # coverage: every x interval fully covered by (disjoint) y intervals
+    Wx = int(ax.max()) + 1 if len(ax) else 1
+    covered = np.zeros(N * Wx, np.int64)
+    np.add.at(covered, b * Wx + ax, (hi - lo).astype(np.int64))
+    xs_p, xe_p, cx_p, _ = _pad_intervals(store_x, pairs[:, 0])
+    Wpad = xs_p.shape[1]           # >= Wx: ax < interval count <= Wpad
+    xlen = np.where(np.arange(Wpad)[None, :] < cx_p[:, None],
+                    (xe_p - xs_p).astype(np.int64), 0)
+    uncovered = np.any(xlen[:, :Wx] > covered.reshape(N, Wx), axis=1)
+    # x intervals with no fragments at all (columns beyond Wx) are uncovered
+    uncovered |= np.any(xlen[:, Wx:] > 0, axis=1)
+
+    # per-cell class comparison over the shared runs
+    ncell = (hi - lo).astype(np.int64)
+    C = int(ncell.sum())
+    viol_pair = np.zeros(N, bool)
+    notfull_pair = np.zeros(N, bool)
+    if C:
+        f_of_c = np.repeat(np.arange(len(ncell)), ncell)
+        coff = np.arange(C) - np.repeat(np.cumsum(ncell) - ncell, ncell)
+        cell_x = (lo[f_of_c] - store_x.ints[gx[f_of_c], 0]).astype(np.int64) + coff
+        cell_y = (lo[f_of_c] - store_y.ints[gy[f_of_c], 0]).astype(np.int64) + coff
+
+        def classes(store, g, celloff):
+            o = store.bit_off[g[f_of_c]] + 3 * celloff
+            code = (store.bits[o].astype(np.int8) * 4
+                    + store.bits[o + 1].astype(np.int8) * 2
+                    + store.bits[o + 2].astype(np.int8))
+            return _DECODE_ARR[store.encoding][code]
+
+        cls_x = classes(store_x, gx, cell_x)
+        cls_y = classes(store_y, gy, cell_y)
+        viol = ((cls_x == FULL) & (cls_y != FULL)) \
+            | ((cls_x == STRONG) & (cls_y == WEAK))
+        bc = b[f_of_c]
+        np.logical_or.at(viol_pair, bc, viol)
+        np.logical_or.at(notfull_pair, bc, cls_y != FULL)
+
+    neg = uncovered | viol_pair
+    out = np.where(neg, TRUE_NEG,
+                   np.where(notfull_pair, INDECISIVE, TRUE_HIT)).astype(np.int8)
+    out[cx == 0] = TRUE_HIT
+    return out
 
 
 def ri_verdict_pair(store_x: RIStore, i: int, store_y: RIStore, j: int) -> int:

@@ -1,14 +1,17 @@
 """Distributed spatial-join launcher — the paper's system as a service run.
 
   PYTHONPATH=src python -m repro.launch.spatial_join --r T1 --s T2 \
-      --n-order 8 --parts 2 --ckpt-dir /tmp/join_ckpt
+      --n-order 8 --parts 2 --method ri --backend numpy \
+      --ckpt-dir /tmp/join_ckpt
 
 Orchestration (DESIGN.md §4): partition the map (§5.2) -> per-partition
-APRIL stores -> MBR join per partition -> bucketed pair batches -> sharded
-APRIL filter across the device mesh -> batched refinement of the indecisive
-remainder. Fault tolerance: per-partition results checkpoint through
-CheckpointManager, so a killed run resumes at partition granularity; the
-WorkQueue re-leases partitions whose workers stall (straggler mitigation).
+approximations through the `IntermediateFilter` registry (any of
+none/april/april-c/ri/ra/5cch) -> MBR join per partition -> batched filter
+verdicts, mesh-sharded for mesh-capable filters (APRIL) or host-batched for
+the rest -> batched refinement of the indecisive remainder. Fault tolerance:
+per-partition results checkpoint through CheckpointManager, so a killed run
+resumes at partition granularity; the WorkQueue re-leases partitions whose
+workers stall (straggler mitigation).
 """
 from __future__ import annotations
 
@@ -18,24 +21,26 @@ import time
 import numpy as np
 
 from ..core import partition as partition_mod
-from ..core.april import build_april
 from ..core.join import INDECISIVE, TRUE_HIT
 from ..datagen import make_dataset
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.elastic import WorkQueue
 from ..spatial import refine
-from ..spatial.distributed import (bucket_pairs, distributed_april_filter,
-                                   make_join_mesh)
+from ..spatial.distributed import distributed_filter, make_join_mesh
+from ..spatial.filters import get_filter
 from ..spatial.mbr_join import mbr_join
 
 
-def join_partition(R, S, stores_r, stores_s, parting, pidx, mesh):
+def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
+                   backend: str = "jnp"):
     """Filter + refine all candidate pairs owned by partition ``pidx``."""
     part = parting.partitions[pidx]
     ridx = part.obj_idx[R.name]
     sidx = part.obj_idx[S.name]
-    sr, ss = stores_r[pidx], stores_s[pidx]
-    if sr is None or ss is None or len(ridx) == 0 or len(sidx) == 0:
+    ar, as_ = approx_r[pidx], approx_s[pidx]
+    if len(ridx) == 0 or len(sidx) == 0:
+        return np.zeros((0, 2), np.int64), {}
+    if filt.name != "none" and (ar is None or as_ is None):
         return np.zeros((0, 2), np.int64), {}
 
     local_pairs = mbr_join(R.mbrs[ridx], S.mbrs[sidx])
@@ -50,38 +55,34 @@ def join_partition(R, S, stores_r, stores_s, parting, pidx, mesh):
     if len(local_pairs) == 0:
         return np.zeros((0, 2), np.int64), {}
 
+    verd, counts = distributed_filter(filt, ar, as_, local_pairs, mesh=mesh,
+                                      backend=backend)
     results = []
-    counts = {"true_neg": 0, "true_hit": 0, "indecisive": 0}
-    n_dev = int(np.prod(list(mesh.shape.values())))
-    for packed in bucket_pairs(sr, ss, local_pairs, n_devices=n_dev):
-        verd, c = distributed_april_filter(packed, mesh)
-        for k in counts:
-            counts[k] += c[k]
-        valid = packed.valid
-        hits = packed.pair_idx[valid & (verd == TRUE_HIT)]
-        indec = packed.pair_idx[valid & (verd == INDECISIVE)]
-        if len(indec):
-            glob = np.stack([ridx[indec[:, 0]], sidx[indec[:, 1]]], axis=1)
-            ref = refine.refine_pairs(R, S, glob)
-            results.append(glob[ref])
-        if len(hits):
-            results.append(np.stack([ridx[hits[:, 0]], sidx[hits[:, 1]]],
-                                    axis=1))
+    hits = local_pairs[verd == TRUE_HIT]
+    indec = local_pairs[verd == INDECISIVE]
+    if len(indec):
+        glob = np.stack([ridx[indec[:, 0]], sidx[indec[:, 1]]], axis=1)
+        ref = refine.refine_pairs(R, S, glob)
+        results.append(glob[ref])
+    if len(hits):
+        results.append(np.stack([ridx[hits[:, 0]], sidx[hits[:, 1]]], axis=1))
     out = (np.concatenate(results, axis=0) if results
            else np.zeros((0, 2), np.int64))
     return out, counts
 
 
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
-             seed=0, count_r=None, count_s=None, mesh=None):
+             seed=0, count_r=None, count_s=None, mesh=None, method="april",
+             backend="jnp"):
+    filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
     mesh = mesh or make_join_mesh()
 
     t0 = time.perf_counter()
     parting = partition_mod.partition_space([R, S], parts_per_dim=parts)
-    stores_r = parting.build_april(R, n_order)
-    stores_s = parting.build_april(S, n_order)
+    approx_r = parting.build_approx(filt, R, n_order, side="r")
+    approx_s = parting.build_approx(filt, S, n_order, side="s")
     t_build = time.perf_counter() - t0
 
     mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
@@ -102,7 +103,8 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
         p = queue.acquire()
         if p is None:
             break
-        res, counts = join_partition(R, S, stores_r, stores_s, parting, p, mesh)
+        res, counts = join_partition(R, S, approx_r, approx_s, parting, p,
+                                     mesh, filt, backend=backend)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -129,10 +131,14 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--count-r", type=int, default=None)
     ap.add_argument("--count-s", type=int, default=None)
+    ap.add_argument("--method", default="april",
+                    help="intermediate filter: none/april/april-c/ri/ra/5cch")
+    ap.add_argument("--backend", default="jnp",
+                    help="verdict backend: numpy/jnp/pallas")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
-             count_s=args.count_s)
+             count_s=args.count_s, method=args.method, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
 from .mbr_join import mbr_join  # noqa: F401
+from .filters import (  # noqa: F401
+    Approximation, IntermediateFilter, available_filters, get_filter,
+    register_filter,
+)
+from .plan import JoinPlan, JoinStats  # noqa: F401
 from .pipeline import (  # noqa: F401
-    JoinStats, spatial_intersection_join, spatial_within_join,
+    spatial_intersection_join, spatial_within_join,
     polygon_linestring_join, selection_queries,
 )

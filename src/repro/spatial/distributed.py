@@ -1,4 +1,4 @@
-"""Distributed APRIL spatial join (shard_map over the device mesh).
+"""Distributed spatial-join filtering (shard_map over the device mesh).
 
 The join is partition-parallel (paper §5.2 + DESIGN.md §4): candidate pairs
 are packed into padded, *bucketed* batches (bucketing by interval-list width
@@ -6,6 +6,12 @@ bounds padding waste and is the primary load-balance/straggler lever), then
 dispatched across the mesh's data axes with ``shard_map``. Each device runs
 the three interval joins as one fused, branch-free vectorized pass. Counts
 are reduced with ``psum``; verdicts stay sharded for the refinement stage.
+
+:func:`distributed_filter` is the filter-agnostic entry point: filters that
+declare ``supports_mesh`` (APRIL) ship their packed batches through the mesh
+kernel; every other registered filter runs its batched ``verdicts`` on host
+— so the distributed launcher works for all of
+``none/april/april-c/ri/ra/5cch``.
 
 The same step function lowers on the production meshes (16x16 and 2x16x16)
 — exercised by ``launch/dryrun.py --arch april_join``.
@@ -21,11 +27,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # stable alias, jax >= 0.6
+    shard_map = jax.shard_map
+except AttributeError:                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
 from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG, pack_lists
 
 __all__ = [
     "PackedPairs", "pack_pair_batch", "bucket_pairs",
-    "april_filter_kernel_jnp", "distributed_april_filter", "make_join_mesh",
+    "april_filter_kernel_jnp", "distributed_april_filter",
+    "distributed_filter", "make_join_mesh",
 ]
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
@@ -149,7 +161,7 @@ def distributed_april_filter(packed: PackedPairs, mesh: Mesh | None = None):
     batch = packed.arrays()
     valid = packed.valid
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+    @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
              out_specs=(P("data"), P()))
     def step(b, v):
         verd = april_filter_kernel_jnp(b)
@@ -165,3 +177,28 @@ def distributed_april_filter(packed: PackedPairs, mesh: Mesh | None = None):
     return (np.asarray(verd),
             {"true_neg": int(counts[0]), "true_hit": int(counts[1]),
              "indecisive": int(counts[2])})
+
+
+def distributed_filter(filt, approx_r, approx_s, pairs: np.ndarray,
+                       mesh: Mesh | None = None, backend: str = "numpy",
+                       predicate: str = "intersects"):
+    """Filter a candidate batch through any registered intermediate filter.
+
+    Mesh-capable filters (``filt.supports_mesh``) run sharded across the
+    device mesh; the rest run their batched host ``verdicts``. Returns
+    (verdicts [N] np.int8, counts dict).
+    """
+    from .filters import get_filter
+    filt = get_filter(filt)
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    # the mesh kernel evaluates the intersects trichotomy only; other
+    # predicates run the filter's batched host path
+    if (filt.supports_mesh and backend in ("jnp", "pallas")
+            and predicate == "intersects"):
+        return filt.verdicts_mesh(approx_r, approx_s, pairs, mesh=mesh)
+    verd = filt.verdicts(approx_r, approx_s, pairs, predicate=predicate,
+                         backend=backend)
+    counts = {"true_neg": int(np.sum(verd == TRUE_NEG)),
+              "true_hit": int(np.sum(verd == TRUE_HIT)),
+              "indecisive": int(np.sum(verd == INDECISIVE))}
+    return verd, counts

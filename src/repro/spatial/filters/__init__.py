@@ -1,0 +1,14 @@
+"""Pluggable intermediate filters (DESIGN.md §2).
+
+Importing this package registers the six built-in filters:
+``none / april / april-c / ri / ra / 5cch``.
+"""
+from .base import (  # noqa: F401
+    BACKENDS, PREDICATES, Approximation, IntermediateFilter,
+    available_filters, get_filter, register_filter, unregister_filter,
+)
+from .none_filter import NoneFilter  # noqa: F401
+from .april_filter import AprilCompressedFilter, AprilFilter  # noqa: F401
+from .ri_filter import RIFilter  # noqa: F401
+from .ra_filter import RAFilter  # noqa: F401
+from .fivecch_filter import FiveCCHFilter  # noqa: F401

@@ -1,0 +1,187 @@
+"""APRIL and APRIL-C intermediate filters (paper §4, §5.1).
+
+The batched paths run the three interval joins (AA/AF/FA) as masked
+vectorized passes (`core.join.april_filter_batch`) on numpy or jnp device
+arrays; APRIL additionally has a mesh-sharded path (spatial/distributed.py).
+APRIL-C stores VByte-compressed lists; its per-pair reference streams
+(join-while-decompress, §5.1) while its batched path decompresses the
+objects of the batch on host first (DESIGN.md §3) and reuses the APRIL
+vectorized joins — verdicts are identical either way.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ...core import compress, join, rasterize
+from ...core.april import build_april
+from ...core.rasterize import Extent, GLOBAL_EXTENT
+from .base import Approximation, IntermediateFilter, register_filter
+
+__all__ = ["LineCellStore", "build_line_cells", "AprilFilter",
+           "AprilCompressedFilter"]
+
+_DEFAULT_ORDER = ("AA", "AF", "FA")
+
+
+@dataclass
+class LineCellStore:
+    """CSR store of sorted Partial cell ids per linestring (§4.3.3): the
+    approximation of an open chain is its cell-id set, joined as unit
+    intervals."""
+    n_order: int
+    off: np.ndarray     # [P+1] int64
+    ids: np.ndarray     # [sum_K] uint64, sorted per row
+
+    def __len__(self) -> int:
+        return len(self.off) - 1
+
+    def cell_ids(self, i: int) -> np.ndarray:
+        return self.ids[self.off[i]: self.off[i + 1]]
+
+    def size_bytes(self) -> int:
+        return 4 * len(self.ids) + 8 * len(self.off)
+
+
+def build_line_cells(dataset, n_order: int,
+                     extent: Extent = GLOBAL_EXTENT) -> LineCellStore:
+    off = [0]
+    chunks = []
+    for i in range(len(dataset)):
+        cells = rasterize.dda_partial_cells(
+            dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
+            closed=False)
+        ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
+        chunks.append(ids)
+        off.append(off[-1] + len(ids))
+    ids = np.concatenate(chunks) if chunks else np.zeros(0, np.uint64)
+    return LineCellStore(n_order=n_order, off=np.asarray(off, np.int64),
+                         ids=ids)
+
+
+@register_filter("april")
+class AprilFilter(IntermediateFilter):
+
+    supports_mesh = True
+
+    def build(self, dataset, *, n_order: int = 10,
+              extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
+              side: str = "r", method: str = "batched", **opts
+              ) -> Approximation:
+        if kind == "line":
+            store = build_line_cells(dataset, n_order, extent)
+        else:
+            store = build_april(dataset, n_order, extent, method)
+        return Approximation(filter=self.name, store=store, n_order=n_order,
+                             extent=extent, kind=kind)
+
+    # both sides as AprilStores (APRIL-C overrides to decompress the batch)
+    def _stores(self, approx_r, approx_s, pairs):
+        return approx_r.store, approx_s.store, pairs
+
+    def verdicts(self, approx_r, approx_s, pairs, *,
+                 predicate: str = "intersects", backend: str = "numpy",
+                 order: tuple[str, ...] = _DEFAULT_ORDER, **opts
+                 ) -> np.ndarray:
+        self._check(predicate, backend)
+        e = self._empty(pairs)
+        if e is not None:
+            return e
+        use_jnp = backend in ("jnp", "pallas")
+        if predicate == "linestring":
+            line: LineCellStore = approx_r.store
+            _, store_s, pairs = self._stores(approx_r, approx_s, pairs)
+            return join.linestring_filter_batch(
+                store_s, line.off, line.ids, pairs, use_jnp=use_jnp)
+        store_r, store_s, pairs = self._stores(approx_r, approx_s, pairs)
+        if predicate == "within":
+            return join.within_filter_batch(store_r, store_s, pairs,
+                                            use_jnp=use_jnp)
+        return join.april_filter_batch(store_r, store_s, pairs, order=order,
+                                       use_jnp=use_jnp)
+
+    def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
+                     order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:
+        sr, ss = approx_r.store, approx_s.store
+        if predicate == "linestring":
+            return join.linestring_verdict_pair(ss.a_list(j), ss.f_list(j),
+                                                sr.cell_ids(i))
+        if predicate == "within":
+            return join.within_verdict_pair(sr.a_list(i), sr.f_list(i),
+                                            ss.a_list(j), ss.f_list(j))
+        return join.april_verdict_pair(sr.a_list(i), sr.f_list(i),
+                                       ss.a_list(j), ss.f_list(j), order=order)
+
+    def verdicts_mesh(self, approx_r, approx_s, pairs, *, mesh=None, **opts):
+        from ..distributed import (bucket_pairs, distributed_april_filter,
+                                   make_join_mesh)
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        mesh = mesh or make_join_mesh()
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        # fail safe: a slot the scatter never writes (e.g. a duplicated
+        # pair) gets refined rather than dropped as a certified negative
+        from ...core.join import INDECISIVE
+        verdicts = np.full(len(pairs), INDECISIVE, np.int8)
+        counts = {"true_neg": 0, "true_hit": 0, "indecisive": 0}
+        # vectorized scatter of bucketed results back to batch order
+        keys = (pairs[:, 0] << 32) | pairs[:, 1]
+        order = np.argsort(keys)
+        sorted_keys = keys[order]
+        for packed in bucket_pairs(approx_r.store, approx_s.store, pairs,
+                                   n_devices=n_dev):
+            verd, c = distributed_april_filter(packed, mesh)
+            for k in counts:
+                counts[k] += c[k]
+            pidx = packed.pair_idx[packed.valid]
+            vkeys = (pidx[:, 0] << 32) | pidx[:, 1]
+            verdicts[order[np.searchsorted(sorted_keys, vkeys)]] = \
+                verd[packed.valid]
+        return verdicts, counts
+
+
+@register_filter("april-c")
+class AprilCompressedFilter(AprilFilter):
+
+    supports_mesh = False
+
+    def build(self, dataset, *, n_order: int = 10,
+              extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
+              side: str = "r", method: str = "batched", **opts
+              ) -> Approximation:
+        if kind == "line":
+            # the line side has no interval lists to compress; reuse the
+            # uncompressed cell-id store
+            store = build_line_cells(dataset, n_order, extent)
+        else:
+            store = compress.compress_april(
+                build_april(dataset, n_order, extent, method))
+        return Approximation(filter=self.name, store=store, n_order=n_order,
+                             extent=extent, kind=kind)
+
+    def _stores(self, approx_r, approx_s, pairs):
+        """Host-decompress the objects touched by the batch (DESIGN.md §3)
+        and renumber the pairs into the temporary stores."""
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        new_pairs = pairs.copy()
+        store_r = approx_r.store
+        if isinstance(store_r, compress.CompressedAprilStore):
+            uniq, inv = np.unique(pairs[:, 0], return_inverse=True)
+            store_r = store_r.decompress(uniq)
+            new_pairs[:, 0] = inv
+        store_s = approx_s.store
+        if isinstance(store_s, compress.CompressedAprilStore):
+            uniq, inv = np.unique(pairs[:, 1], return_inverse=True)
+            store_s = store_s.decompress(uniq)
+            new_pairs[:, 1] = inv
+        return store_r, store_s, new_pairs
+
+    def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
+                     order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:
+        sr, ss = approx_r.store, approx_s.store
+        if predicate in ("intersects", "selection"):
+            # streaming join-while-decompress (§5.1)
+            return compress.april_verdict_compressed(
+                sr.a_bufs[i], sr.f_bufs[i], ss.a_bufs[j], ss.f_bufs[j])
+        return super()._verdict_one(approx_r, approx_s, i, j,
+                                    predicate=predicate, order=order, **opts)

@@ -1,0 +1,181 @@
+"""The `IntermediateFilter` protocol + registry (DESIGN.md §2).
+
+The paper's pipeline is MBR filter -> *intermediate filter* -> refinement
+(Fig. 1). This module makes the intermediate step a first-class, pluggable
+abstraction:
+
+* :class:`Approximation` — a built, reusable, sizeable store for one dataset
+  (what used to be the ad-hoc ``prebuilt: tuple | None``).
+* :class:`IntermediateFilter` — ``build(dataset, *, n_order, extent, ...)``
+  produces an Approximation; ``verdicts(approx_r, approx_s, pairs, *,
+  predicate, backend)`` classifies a whole candidate batch into the paper's
+  trichotomy (TRUE_NEG / TRUE_HIT / INDECISIVE) in one vectorized pass.
+  ``verdicts_seq`` is the faithful per-pair reference the batched path must
+  be verdict-identical to (asserted by tests/test_filter_protocol.py).
+* a name-based registry — :func:`register_filter` / :func:`get_filter` —
+  backing ``none / april / april-c / ri / ra / 5cch``.
+
+Predicates: ``intersects`` | ``within`` | ``linestring`` | ``selection``.
+``selection`` (polygonal range queries, §4.3.1) is the intersects test with
+query polygons as the S side; ``linestring`` (§4.3.3) expects the R side
+built with ``kind='line'``.
+
+Backends: ``numpy`` (host, default), ``jnp`` (vmapped device arrays),
+``pallas`` (TPU kernels where available). Filters without a device path for
+a given predicate fall back to their vectorized numpy path — backend choice
+never changes verdicts.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ...core.join import INDECISIVE
+from ...core.rasterize import Extent, GLOBAL_EXTENT
+
+__all__ = [
+    "PREDICATES", "BACKENDS", "Approximation", "IntermediateFilter",
+    "register_filter", "unregister_filter", "get_filter", "available_filters",
+]
+
+PREDICATES = ("intersects", "within", "linestring", "selection")
+BACKENDS = ("numpy", "jnp", "pallas")
+
+
+@dataclass
+class Approximation:
+    """A built intermediate-filter store for one dataset.
+
+    ``store`` is filter-specific (AprilStore, RIStore, RAStore, FiveCCH,
+    CompressedAprilStore, or None for the 'none' filter); ``kind`` records
+    what was approximated ('polygon' or 'line'); ``meta`` holds reusable
+    caches (e.g. RA upscale pyramids) that survive across ``verdicts`` calls
+    and predicates.
+    """
+    filter: str
+    store: object
+    n_order: int | None = None
+    extent: Extent | None = None
+    kind: str = "polygon"
+    meta: dict = field(default_factory=dict)
+
+    def size_bytes(self) -> int:
+        return int(self.store.size_bytes()) if self.store is not None else 0
+
+    def __len__(self) -> int:
+        return len(self.store) if self.store is not None else 0
+
+
+class IntermediateFilter(abc.ABC):
+    """One intermediate filter method (paper §2-§5)."""
+
+    name: str = "?"
+    #: filters with a mesh-sharded device path (see spatial/distributed.py)
+    supports_mesh: bool = False
+
+    # -- preprocessing ------------------------------------------------------
+    @abc.abstractmethod
+    def build(self, dataset, *, n_order: int = 10,
+              extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
+              side: str = "r", **opts) -> Approximation:
+        """Build the approximation store for ``dataset``.
+
+        ``kind``: 'polygon' or 'line' (open chains, §4.3.3). ``side`` is a
+        hint ('r'/'s') for filters whose encoding differs per join side (RI).
+        """
+
+    # -- filtering ----------------------------------------------------------
+    @abc.abstractmethod
+    def verdicts(self, approx_r: Approximation, approx_s: Approximation,
+                 pairs: np.ndarray, *, predicate: str = "intersects",
+                 backend: str = "numpy", **opts) -> np.ndarray:
+        """Batched verdicts [N] int8 for candidate ``pairs`` [N, 2]."""
+
+    def verdicts_seq(self, approx_r: Approximation, approx_s: Approximation,
+                     pairs: np.ndarray, *, predicate: str = "intersects",
+                     **opts) -> np.ndarray:
+        """Faithful per-pair reference loop (the paper's algorithms).
+
+        Subclasses override :meth:`_verdict_one`; this loop is the semantic
+        contract the batched path is tested against.
+        """
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        self._check(predicate, "numpy")
+        return np.asarray(
+            [self._verdict_one(approx_r, approx_s, int(i), int(j),
+                               predicate=predicate, **opts)
+             for i, j in pairs], np.int8)
+
+    def _verdict_one(self, approx_r, approx_s, i: int, j: int, *,
+                     predicate: str, **opts) -> int:
+        raise NotImplementedError
+
+    # -- optional mesh path (overridden by filters with a device kernel) ----
+    def verdicts_mesh(self, approx_r, approx_s, pairs, *, mesh=None,
+                      **opts) -> tuple[np.ndarray, dict]:
+        raise NotImplementedError(
+            f"filter {self.name!r} has no mesh-sharded path")
+
+    # -- helpers ------------------------------------------------------------
+    @staticmethod
+    def _check(predicate: str, backend: str) -> None:
+        if predicate not in PREDICATES:
+            raise ValueError(f"unknown predicate {predicate!r}; "
+                             f"expected one of {PREDICATES}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+
+    @staticmethod
+    def _empty(pairs: np.ndarray) -> np.ndarray | None:
+        pairs = np.asarray(pairs)
+        if pairs.size == 0:
+            return np.zeros(0, np.int8)
+        return None
+
+    @staticmethod
+    def _all_indecisive(pairs: np.ndarray) -> np.ndarray:
+        n = len(np.asarray(pairs).reshape(-1, 2))
+        return np.full(n, INDECISIVE, np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[IntermediateFilter]] = {}
+
+
+def register_filter(name: str, cls: type[IntermediateFilter] | None = None):
+    """Register a filter class under ``name``. Usable as a decorator::
+
+        @register_filter("april")
+        class AprilFilter(IntermediateFilter): ...
+    """
+    def _do(c):
+        c.name = name
+        _REGISTRY[name] = c
+        return c
+    return _do(cls) if cls is not None else _do
+
+
+def unregister_filter(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_filter(name: str | IntermediateFilter) -> IntermediateFilter:
+    """Look up a registered filter by name; instances pass through."""
+    if isinstance(name, IntermediateFilter):
+        return name
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown intermediate filter {name!r}; "
+            f"available: {sorted(_REGISTRY)}") from None
+
+
+def available_filters() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

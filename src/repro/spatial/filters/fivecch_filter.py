@@ -1,0 +1,49 @@
+"""5C+CH (Brinkhoff) intermediate filter (§2).
+
+Conservative-only: certifies TRUE negatives, never hits — for every
+predicate (disjoint approximations rule out intersection, containment, and
+line crossing alike). The batched path runs the separating-axis tests as
+padded einsum passes over the whole candidate batch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...baselines import fivec_ch
+from ...core.rasterize import Extent, GLOBAL_EXTENT
+from .base import Approximation, IntermediateFilter, register_filter
+
+__all__ = ["FiveCCHFilter"]
+
+
+@register_filter("5cch")
+class FiveCCHFilter(IntermediateFilter):
+
+    def build(self, dataset, *, n_order: int = 10,
+              extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
+              side: str = "r", **opts) -> Approximation:
+        # n_order is unused: 5C+CH is raster-free
+        if kind == "line":
+            store = fivec_ch.build_5cch_lines(dataset)
+        else:
+            store = fivec_ch.build_5cch(dataset)
+        return Approximation(filter=self.name, store=store, n_order=None,
+                             extent=extent, kind=kind)
+
+    def verdicts(self, approx_r, approx_s, pairs, *,
+                 predicate: str = "intersects", backend: str = "numpy",
+                 **opts) -> np.ndarray:
+        self._check(predicate, backend)
+        e = self._empty(pairs)
+        if e is not None:
+            return e
+        return fivec_ch.fivecch_filter_batch(approx_r.store, approx_s.store,
+                                             pairs)
+
+    def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
+                     **opts) -> int:
+        if predicate == "within":
+            return fivec_ch.fivecch_within_verdict_pair(approx_r.store, i,
+                                                        approx_s.store, j)
+        return fivec_ch.fivecch_verdict_pair(approx_r.store, i,
+                                             approx_s.store, j)

@@ -1,0 +1,32 @@
+"""The 'none' filter: no intermediate step — every MBR candidate is
+forwarded to refinement (the paper's baseline column)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.join import INDECISIVE
+from ...core.rasterize import Extent, GLOBAL_EXTENT
+from .base import Approximation, IntermediateFilter, register_filter
+
+__all__ = ["NoneFilter"]
+
+
+@register_filter("none")
+class NoneFilter(IntermediateFilter):
+
+    def build(self, dataset, *, n_order: int = 10,
+              extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
+              side: str = "r", **opts) -> Approximation:
+        # nothing to build — and nothing is (spatial_within_join used to
+        # waste t_build constructing APRIL stores it never consulted)
+        return Approximation(filter=self.name, store=None, n_order=n_order,
+                             extent=extent, kind=kind)
+
+    def verdicts(self, approx_r, approx_s, pairs, *,
+                 predicate: str = "intersects", backend: str = "numpy",
+                 **opts) -> np.ndarray:
+        self._check(predicate, backend)
+        return self._all_indecisive(pairs)
+
+    def _verdict_one(self, approx_r, approx_s, i, j, *, predicate, **opts):
+        return INDECISIVE

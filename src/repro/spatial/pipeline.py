@@ -1,5 +1,15 @@
-"""End-to-end spatial join pipeline: MBR filter -> intermediate filter ->
-refinement (paper Fig. 1), with pluggable intermediate filters:
+"""Deprecation shims over the `JoinPlan` session API (DESIGN.md §2).
+
+The original entry points — ``spatial_intersection_join(method=...)`` and
+the within/linestring/selection variants — are kept as thin wrappers so
+existing call sites continue to work. New code should use::
+
+    from repro.spatial import JoinPlan
+    plan = JoinPlan(R, S, filter="ri", backend="jnp", n_order=10)
+    plan.build()
+    results, stats = plan.execute("intersects")
+
+with pluggable intermediate filters (the registry in ``spatial.filters``):
 
     'none'    no intermediate step (refine everything)
     'april'   APRIL A/F interval lists (Algorithm 2)          [this paper]
@@ -8,63 +18,42 @@ refinement (paper Fig. 1), with pluggable intermediate filters:
     'ra'      Zimbrao & de Souza raster approximation [58]
     '5cch'    Brinkhoff 5-corner + convex hull [9]
 
-Returns full statistics (true hit/neg/indecisive %, per-stage wall times) —
-the shape of the paper's Tables 5/13/16/17 and Fig. 13.
+Every filter evaluates whole candidate batches for every predicate
+(intersects / within / linestring / selection); statistics keep the shape
+of the paper's Tables 5/13/16/17 and Fig. 13.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-
 import numpy as np
 
-from ..baselines import fivec_ch, ra as ra_mod
-from ..core import compress, join, rasterize, ri as ri_mod
-from ..core.april import build_april
-from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
-from . import refine
-from .mbr_join import mbr_intersect_mask, mbr_join as _mbr_join
+from ..core.april import AprilStore
+from ..core.compress import compress_april
+from .plan import JoinPlan, JoinStats
 
 __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
            "polygon_linestring_join", "selection_queries"]
 
 
-@dataclass
-class JoinStats:
-    method: str
-    n_candidates: int = 0
-    n_true_hits: int = 0
-    n_true_negs: int = 0
-    n_indecisive: int = 0
-    n_results: int = 0
-    t_mbr: float = 0.0
-    t_filter: float = 0.0
-    t_refine: float = 0.0
-    t_build: float = 0.0
-    approx_bytes: int = 0
-    extra: dict = field(default_factory=dict)
-
-    @property
-    def t_total(self) -> float:
-        return self.t_mbr + self.t_filter + self.t_refine
-
-    def rates(self) -> tuple[float, float, float]:
-        n = max(1, self.n_candidates)
-        return (self.n_true_hits / n, self.n_true_negs / n,
-                self.n_indecisive / n)
-
-    def row(self) -> str:
-        h, g, i = self.rates()
-        return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
-                f"mbr={self.t_mbr:.3f}s filter={self.t_filter:.3f}s "
-                f"refine={self.t_refine:.3f}s total={self.t_total:.3f}s "
-                f"results={self.n_results}")
+def _plan(R, S, method, n_order, *, backend="numpy", mbr_grid=32,
+          max_ra_cells=None, order=None, r_kind="polygon"):
+    build_opts = {}
+    filter_opts = {}
+    if method == "ra" and max_ra_cells is not None:
+        build_opts["max_cells"] = max_ra_cells
+    if order is not None and method in ("april", "april-c"):
+        filter_opts["order"] = order
+    return JoinPlan(R, S, filter=method, backend=backend, n_order=n_order,
+                    mbr_grid=mbr_grid, r_kind=r_kind, build_opts=build_opts,
+                    filter_opts=filter_opts)
 
 
-def _apply_verdicts(stats: JoinStats, verdicts: np.ndarray):
-    stats.n_true_hits = int(np.sum(verdicts == TRUE_HIT))
-    stats.n_true_negs = int(np.sum(verdicts == TRUE_NEG))
-    stats.n_indecisive = int(np.sum(verdicts == INDECISIVE))
+def _adopt(method: str, store):
+    """Adapt legacy prebuilt stores: APRIL-C call sites used to pass raw
+    AprilStores and compress inside the pipeline."""
+    if store is not None and method == "april-c" \
+            and isinstance(store, AprilStore):
+        return compress_april(store)
+    return store
 
 
 def spatial_intersection_join(
@@ -73,238 +62,50 @@ def spatial_intersection_join(
     use_jnp: bool = False, max_ra_cells: int = 750,
     prebuilt: tuple | None = None, mbr_grid: int = 32,
 ) -> tuple[np.ndarray, JoinStats]:
-    """Run the full pipeline; returns (result pairs [K,2], JoinStats)."""
-    stats = JoinStats(method=method)
+    """Deprecated shim: run the full pipeline; returns (pairs [K,2], stats).
 
-    t0 = time.perf_counter()
-    pairs = _mbr_join(R.mbrs, S.mbrs, grid=mbr_grid)
-    stats.t_mbr = time.perf_counter() - t0
-    stats.n_candidates = len(pairs)
-    if len(pairs) == 0:
-        return np.zeros((0, 2), np.int64), stats
-
-    # ---- build approximations (preprocessing; timed separately) ----
-    t0 = time.perf_counter()
+    Prefer ``JoinPlan(R, S, filter=method).build().execute("intersects")``.
+    """
+    plan = _plan(R, S, method, n_order, backend="jnp" if use_jnp else "numpy",
+                 mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order)
     if prebuilt is not None:
-        built = prebuilt
-    elif method in ("april", "april-c"):
-        built = (build_april(R, n_order), build_april(S, n_order))
-    elif method == "ri":
-        built = (ri_mod.build_ri(R, n_order, encoding="R"),
-                 ri_mod.build_ri(S, n_order, encoding="S"))
-    elif method == "ra":
-        built = (ra_mod.build_ra(R, max_cells=max_ra_cells),
-                 ra_mod.build_ra(S, max_cells=max_ra_cells))
-    elif method == "5cch":
-        built = (fivec_ch.build_5cch(R), fivec_ch.build_5cch(S))
-    else:
-        built = (None, None)
-    stats.t_build = time.perf_counter() - t0
-
-    # ---- intermediate filter ----
-    t0 = time.perf_counter()
-    if method == "none":
-        verdicts = np.full(len(pairs), INDECISIVE, np.int8)
-    elif method == "april":
-        ar, as_ = built
-        stats.approx_bytes = ar.size_bytes() + as_.size_bytes()
-        verdicts = join.april_filter_batch(ar, as_, pairs, order=order,
-                                           use_jnp=use_jnp)
-    elif method == "april-c":
-        ar, as_ = built
-        bufs_r = _compress_store(ar)
-        bufs_s = _compress_store(as_)
-        stats.approx_bytes = _bufs_bytes(bufs_r) + _bufs_bytes(bufs_s)
-        t0 = time.perf_counter()   # exclude compression from filter time
-        verdicts = np.asarray([
-            compress.april_verdict_compressed(
-                bufs_r[0][i], bufs_r[1][i], bufs_s[0][j], bufs_s[1][j])
-            for i, j in pairs], np.int8)
-    elif method == "ri":
-        rir, ris = built
-        stats.approx_bytes = rir.size_bytes() + ris.size_bytes()
-        verdicts = np.asarray([
-            ri_mod.ri_verdict_pair(rir, int(i), ris, int(j))
-            for i, j in pairs], np.int8)
-    elif method == "ra":
-        rar, ras = built
-        stats.approx_bytes = rar.size_bytes() + ras.size_bytes()
-        verdicts = np.asarray([
-            ra_mod.ra_verdict_pair(rar, int(i), ras, int(j))
-            for i, j in pairs], np.int8)
-    elif method == "5cch":
-        cr, cs = built
-        stats.approx_bytes = cr.size_bytes() + cs.size_bytes()
-        verdicts = np.asarray([
-            fivec_ch.fivecch_verdict_pair(cr, int(i), cs, int(j))
-            for i, j in pairs], np.int8)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    stats.t_filter = time.perf_counter() - t0
-    _apply_verdicts(stats, verdicts)
-
-    # ---- refinement ----
-    t0 = time.perf_counter()
-    indec = pairs[verdicts == INDECISIVE]
-    ref = refine.refine_pairs(R, S, indec) if len(indec) else np.zeros(0, bool)
-    stats.t_refine = time.perf_counter() - t0
-
-    results = np.concatenate([
-        pairs[verdicts == TRUE_HIT], indec[ref]], axis=0) \
-        if len(pairs) else np.zeros((0, 2), np.int64)
-    stats.n_results = len(results)
-    return results, stats
-
-
-def _compress_store(store):
-    a_bufs = [compress.compress_intervals(store.a_list(i)) for i in range(len(store))]
-    f_bufs = [compress.compress_intervals(store.f_list(i)) for i in range(len(store))]
-    return a_bufs, f_bufs
-
-
-def _bufs_bytes(bufs):
-    return sum(len(b) for b, _ in bufs[0]) + sum(len(b) for b, _ in bufs[1])
+        pr, ps = prebuilt
+        plan.build(prebuilt=(_adopt(method, pr), _adopt(method, ps)))
+    return plan.execute("intersects")
 
 
 def spatial_within_join(
     R, S, method: str = "april", n_order: int = 10,
     prebuilt: tuple | None = None,
 ) -> tuple[np.ndarray, JoinStats]:
-    """Within join (§4.3.2): pairs (r, s) with r within s."""
-    stats = JoinStats(method=method)
-    t0 = time.perf_counter()
-    # filter step for within: MBR(r) within MBR(s)
-    mr, ms = R.mbrs, S.mbrs
-    inside = ((mr[:, None, 0] >= ms[None, :, 0]) & (mr[:, None, 1] >= ms[None, :, 1])
-              & (mr[:, None, 2] <= ms[None, :, 2]) & (mr[:, None, 3] <= ms[None, :, 3]))
-    pairs = np.stack(np.nonzero(inside), axis=1).astype(np.int64)
-    stats.t_mbr = time.perf_counter() - t0
-    stats.n_candidates = len(pairs)
-    if len(pairs) == 0:
-        return np.zeros((0, 2), np.int64), stats
-
-    t0 = time.perf_counter()
-    built = prebuilt or (build_april(R, n_order), build_april(S, n_order))
-    stats.t_build = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    if method == "none":
-        verdicts = np.full(len(pairs), INDECISIVE, np.int8)
-    else:
-        ar, as_ = built
-        verdicts = np.asarray([
-            join.within_verdict_pair(ar.a_list(int(i)), ar.f_list(int(i)),
-                                     as_.a_list(int(j)), as_.f_list(int(j)))
-            for i, j in pairs], np.int8)
-    stats.t_filter = time.perf_counter() - t0
-    _apply_verdicts(stats, verdicts)
-
-    t0 = time.perf_counter()
-    indec = pairs[verdicts == INDECISIVE]
-    ref = refine.refine_within_pairs(R, S, indec) if len(indec) else np.zeros(0, bool)
-    stats.t_refine = time.perf_counter() - t0
-    results = np.concatenate([pairs[verdicts == TRUE_HIT], indec[ref]], axis=0)
-    stats.n_results = len(results)
-    return results, stats
+    """Deprecated shim: within join (§4.3.2), pairs (r, s) with r within s."""
+    plan = _plan(R, S, method, n_order)
+    if prebuilt is not None:
+        plan.build(prebuilt=tuple(_adopt(method, p) for p in prebuilt))
+    return plan.execute("within")
 
 
 def polygon_linestring_join(
     S, L, method: str = "april", n_order: int = 10,
     prebuilt=None,
 ) -> tuple[np.ndarray, JoinStats]:
-    """Polygon x linestring intersection join (§4.3.3). Pairs are (line, poly)."""
-    stats = JoinStats(method=method)
-    t0 = time.perf_counter()
-    import repro.core.geometry as geo
-    lm = geo.polygon_mbrs(L.verts, L.nverts)
-    pairs = []
-    hit = mbr_intersect_mask(lm, S.mbrs)
-    pairs = np.stack(np.nonzero(hit), axis=1).astype(np.int64)
-    stats.t_mbr = time.perf_counter() - t0
-    stats.n_candidates = len(pairs)
-    if len(pairs) == 0:
-        return np.zeros((0, 2), np.int64), stats
-
-    t0 = time.perf_counter()
-    store = prebuilt or build_april(S, n_order)
-    line_ids = [
-        rasterize.cells_to_hilbert(
-            rasterize.dda_partial_cells(L.verts[i], int(L.nverts[i]), n_order,
-                                        closed=False), n_order)
-        for i in range(len(L))]
-    stats.t_build = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    if method == "none":
-        verdicts = np.full(len(pairs), INDECISIVE, np.int8)
-    else:
-        verdicts = np.asarray([
-            join.linestring_verdict_pair(store.a_list(int(j)),
-                                         store.f_list(int(j)), line_ids[int(i)])
-            for i, j in pairs], np.int8)
-    stats.t_filter = time.perf_counter() - t0
-    _apply_verdicts(stats, verdicts)
-
-    t0 = time.perf_counter()
-    indec = pairs[verdicts == INDECISIVE]
-    ref = refine.refine_line_poly_pairs(L, S, indec) if len(indec) else np.zeros(0, bool)
-    stats.t_refine = time.perf_counter() - t0
-    results = np.concatenate([pairs[verdicts == TRUE_HIT], indec[ref]], axis=0)
-    stats.n_results = len(results)
-    return results, stats
+    """Deprecated shim: polygon x linestring join (§4.3.3), pairs are
+    (line, poly). ``prebuilt`` is the polygon-side store."""
+    plan = _plan(L, S, method, n_order, r_kind="line")
+    if prebuilt is not None:
+        plan.build(prebuilt=(None, _adopt(method, prebuilt)))
+    return plan.execute("linestring")
 
 
 def selection_queries(
     data, queries, method: str = "april", n_order: int = 10, prebuilt=None,
 ) -> tuple[list[np.ndarray], JoinStats]:
-    """Polygonal range queries (§4.3.1): for each query polygon, the data
-    polygons intersecting it. ``queries`` is a PolygonDataset."""
-    stats = JoinStats(method=method)
-    t0 = time.perf_counter()
-    store = prebuilt or (build_april(data, n_order) if method != "none" else None)
-    stats.t_build = time.perf_counter() - t0
-
-    from ..core.april import build_april_polygon
-    results = []
-    all_verdicts = []
-    pair_list = []
-    t_mbr = t_filter = 0.0
-    for q in range(len(queries)):
-        t0 = time.perf_counter()
-        qv = queries.verts[q]; qn = int(queries.nverts[q])
-        qm = queries.mbrs[q]
-        cand = np.nonzero(
-            (data.mbrs[:, 0] <= qm[2]) & (qm[0] <= data.mbrs[:, 2])
-            & (data.mbrs[:, 1] <= qm[3]) & (qm[1] <= data.mbrs[:, 3]))[0]
-        t_mbr += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        if method == "none":
-            v = np.full(len(cand), INDECISIVE, np.int8)
-        else:
-            qa, qf = build_april_polygon(qv, qn, n_order)
-            v = np.asarray([
-                join.april_verdict_pair(store.a_list(int(i)), store.f_list(int(i)),
-                                        qa, qf) for i in cand], np.int8)
-        t_filter += time.perf_counter() - t0
-        all_verdicts.append(v)
-        pair_list.append(cand)
-    stats.t_mbr = t_mbr
-    stats.t_filter = t_filter
-
-    t0 = time.perf_counter()
-    for q, (cand, v) in enumerate(zip(pair_list, all_verdicts)):
-        indec = cand[v == INDECISIVE]
-        if len(indec):
-            ref = np.asarray([
-                refine.refine_pair(data, int(i), queries, q) for i in indec], bool)
-        else:
-            ref = np.zeros(0, bool)
-        results.append(np.concatenate([cand[v == TRUE_HIT], indec[ref]]))
-    stats.t_refine = time.perf_counter() - t0
-
-    verd = np.concatenate(all_verdicts) if all_verdicts else np.zeros(0, np.int8)
-    stats.n_candidates = len(verd)
-    _apply_verdicts(stats, verd)
-    stats.n_results = sum(len(r) for r in results)
+    """Deprecated shim: polygonal range queries (§4.3.1). Returns, per query
+    polygon, the data polygons intersecting it. ``prebuilt`` is the
+    data-side store."""
+    plan = _plan(data, queries, method, n_order)
+    if prebuilt is not None:
+        plan.build(prebuilt=(_adopt(method, prebuilt), None))
+    pairs, stats = plan.execute("selection")
+    results = [pairs[pairs[:, 1] == q, 0] for q in range(len(queries))]
     return results, stats

@@ -1,0 +1,215 @@
+"""`JoinPlan`: the session API of the spatial-join pipeline (DESIGN.md §2).
+
+Separates *preprocessing* from *execution*:
+
+    plan = JoinPlan(R, S, filter="ri", backend="numpy", n_order=9)
+    plan.build()                               # approximations, reusable
+    hits, stats = plan.execute("intersects")   # batched filter + refinement
+    within, st2 = plan.execute("within")       # same approximations, free
+
+Every execution runs MBR filter -> intermediate filter (one batched
+``verdicts`` call on the selected backend) -> refinement of the indecisive
+remainder, and returns :class:`JoinStats` with per-stage wall times — the
+shape of the paper's Tables 5/13/16/17 and Fig. 13.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+from ..core.rasterize import Extent, GLOBAL_EXTENT
+from . import refine
+from .filters import Approximation, IntermediateFilter, get_filter
+from .mbr_join import mbr_intersect_mask, mbr_join
+
+__all__ = ["JoinStats", "JoinPlan"]
+
+
+@dataclass
+class JoinStats:
+    method: str
+    predicate: str = "intersects"
+    backend: str = "numpy"
+    n_candidates: int = 0
+    n_true_hits: int = 0
+    n_true_negs: int = 0
+    n_indecisive: int = 0
+    n_results: int = 0
+    t_mbr: float = 0.0
+    t_filter: float = 0.0
+    t_refine: float = 0.0
+    t_build: float = 0.0
+    approx_bytes: int = 0
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def t_total(self) -> float:
+        return self.t_mbr + self.t_filter + self.t_refine
+
+    def rates(self) -> tuple[float, float, float]:
+        n = max(1, self.n_candidates)
+        return (self.n_true_hits / n, self.n_true_negs / n,
+                self.n_indecisive / n)
+
+    def row(self) -> str:
+        h, g, i = self.rates()
+        return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
+                f"mbr={self.t_mbr:.3f}s filter={self.t_filter:.3f}s "
+                f"refine={self.t_refine:.3f}s total={self.t_total:.3f}s "
+                f"results={self.n_results}")
+
+
+def _apply_verdicts(stats: JoinStats, verdicts: np.ndarray) -> None:
+    stats.n_true_hits = int(np.sum(verdicts == TRUE_HIT))
+    stats.n_true_negs = int(np.sum(verdicts == TRUE_NEG))
+    stats.n_indecisive = int(np.sum(verdicts == INDECISIVE))
+
+
+class JoinPlan:
+    """A reusable two-dataset join session over one intermediate filter.
+
+    ``filter`` is a registry name (``none/april/april-c/ri/ra/5cch``) or an
+    :class:`IntermediateFilter` instance; ``backend`` selects the verdict
+    execution path (``numpy`` | ``jnp`` | ``pallas``). ``r_kind``/``s_kind``
+    mark a side as 'line' (open chains) for the linestring predicate.
+    ``build_opts`` go to ``filter.build`` (e.g. ``max_cells`` for RA,
+    ``method`` for APRIL construction); ``filter_opts`` go to every
+    ``filter.verdicts`` call (e.g. ``order`` for APRIL).
+    """
+
+    def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
+                 backend: str = "numpy", n_order: int = 10,
+                 extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
+                 s_kind: str = "polygon", mbr_grid: int = 32,
+                 build_opts: dict | None = None,
+                 filter_opts: dict | None = None):
+        self.R = R
+        self.S = S
+        self.filter = get_filter(filter)
+        self.backend = backend
+        self.n_order = n_order
+        self.extent = extent
+        self.r_kind = r_kind
+        self.s_kind = s_kind
+        self.mbr_grid = mbr_grid
+        self.build_opts = dict(build_opts or {})
+        self.filter_opts = dict(filter_opts or {})
+        self.approx_r: Approximation | None = None
+        self.approx_s: Approximation | None = None
+        self._t_build = 0.0
+        self.last_stats: JoinStats | None = None
+
+    # -- preprocessing ------------------------------------------------------
+
+    def _wrap(self, store, kind: str) -> Approximation:
+        if isinstance(store, Approximation):
+            return store
+        return Approximation(filter=self.filter.name, store=store,
+                             n_order=self.n_order, extent=self.extent,
+                             kind=kind)
+
+    def build(self, prebuilt: tuple | None = None) -> "JoinPlan":
+        """Build (or adopt) both approximations; idempotent.
+
+        ``prebuilt`` may supply an (approx_r, approx_s) tuple — raw stores
+        are wrapped — with ``None`` entries meaning "build this side".
+        """
+        pre_r = pre_s = None
+        if prebuilt is not None:
+            pre_r, pre_s = prebuilt
+        t0 = time.perf_counter()
+        if self.approx_r is None:
+            self.approx_r = (self._wrap(pre_r, self.r_kind)
+                             if pre_r is not None else
+                             self.filter.build(
+                                 self.R, n_order=self.n_order,
+                                 extent=self.extent, kind=self.r_kind,
+                                 side="r", **self.build_opts))
+        if self.approx_s is None:
+            self.approx_s = (self._wrap(pre_s, self.s_kind)
+                             if pre_s is not None else
+                             self.filter.build(
+                                 self.S, n_order=self.n_order,
+                                 extent=self.extent, kind=self.s_kind,
+                                 side="s", **self.build_opts))
+        self._t_build += time.perf_counter() - t0
+        return self
+
+    # -- candidate generation (the MBR filter, per predicate) ---------------
+
+    def candidates(self, predicate: str = "intersects") -> np.ndarray:
+        R, S = self.R, self.S
+        if predicate == "within":
+            mr, ms = R.mbrs, S.mbrs
+            inside = ((mr[:, None, 0] >= ms[None, :, 0])
+                      & (mr[:, None, 1] >= ms[None, :, 1])
+                      & (mr[:, None, 2] <= ms[None, :, 2])
+                      & (mr[:, None, 3] <= ms[None, :, 3]))
+            return np.stack(np.nonzero(inside), axis=1).astype(np.int64)
+        if predicate in ("linestring", "selection"):
+            hit = mbr_intersect_mask(R.mbrs, S.mbrs)
+            return np.stack(np.nonzero(hit), axis=1).astype(np.int64)
+        return mbr_join(R.mbrs, S.mbrs, grid=self.mbr_grid)
+
+    # -- execution ----------------------------------------------------------
+
+    def _refine(self, predicate: str, pairs: np.ndarray) -> np.ndarray:
+        if len(pairs) == 0:
+            return np.zeros(0, bool)
+        if predicate == "within":
+            return refine.refine_within_pairs(self.R, self.S, pairs)
+        if predicate == "linestring":
+            return refine.refine_line_poly_pairs(self.R, self.S, pairs)
+        return refine.refine_pairs(self.R, self.S, pairs)
+
+    def execute(self, predicate: str = "intersects",
+                ) -> tuple[np.ndarray, JoinStats]:
+        """Run MBR -> filter -> refine; returns (result pairs [K,2], stats).
+
+        For ``selection``, result rows are (data index, query index) — see
+        :func:`repro.spatial.pipeline.selection_queries` for the per-query
+        grouping wrapper.
+        """
+        if predicate == "linestring" and self.r_kind != "line":
+            raise ValueError("predicate 'linestring' needs JoinPlan(..., "
+                             "r_kind='line') with the chains as R")
+        if predicate != "linestring" and self.r_kind == "line":
+            raise ValueError(
+                f"predicate {predicate!r} needs polygon approximations, but "
+                "this plan was built with r_kind='line'")
+        if self.approx_r is None or self.approx_s is None:
+            self.build()
+        stats = JoinStats(method=self.filter.name, predicate=predicate,
+                          backend=self.backend)
+        stats.t_build = self._t_build
+        stats.approx_bytes = (self.approx_r.size_bytes()
+                              + self.approx_s.size_bytes())
+
+        t0 = time.perf_counter()
+        pairs = self.candidates(predicate)
+        stats.t_mbr = time.perf_counter() - t0
+        stats.n_candidates = len(pairs)
+        if len(pairs) == 0:
+            self.last_stats = stats
+            return np.zeros((0, 2), np.int64), stats
+
+        t0 = time.perf_counter()
+        verdicts = self.filter.verdicts(
+            self.approx_r, self.approx_s, pairs, predicate=predicate,
+            backend=self.backend, **self.filter_opts)
+        stats.t_filter = time.perf_counter() - t0
+        _apply_verdicts(stats, verdicts)
+
+        t0 = time.perf_counter()
+        indec = pairs[verdicts == INDECISIVE]
+        ref = self._refine(predicate, indec)
+        stats.t_refine = time.perf_counter() - t0
+
+        results = np.concatenate([pairs[verdicts == TRUE_HIT], indec[ref]],
+                                 axis=0)
+        stats.n_results = len(results)
+        self.last_stats = stats
+        return results, stats

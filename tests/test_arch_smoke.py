@@ -4,6 +4,8 @@ consistency check (decode must reproduce full-forward logits)."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 

@@ -7,6 +7,8 @@ import textwrap
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.core.april import build_april
 from repro.core.join import april_verdict_pair
 from repro.datagen import make_dataset
@@ -84,7 +86,8 @@ MULTI_DEV_SNIPPET = textwrap.dedent("""
 def test_multi_device_subprocess(setup):
     r = subprocess.run([sys.executable, "-c", MULTI_DEV_SNIPPET],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "MULTIDEV_OK" in r.stdout

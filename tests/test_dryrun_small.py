@@ -5,6 +5,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 
 def test_dryrun_cell_smoke():
     code = textwrap.dedent("""
@@ -39,7 +43,8 @@ def test_dryrun_cell_smoke():
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-3000:]
     assert "DRYRUN_SMOKE_OK" in r.stdout

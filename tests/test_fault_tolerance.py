@@ -6,6 +6,8 @@ import os
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 
@@ -142,7 +144,8 @@ def test_elastic_remesh_subprocess():
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "ELASTIC_OK" in r.stdout

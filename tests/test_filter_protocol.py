@@ -1,0 +1,183 @@
+"""The IntermediateFilter protocol + JoinPlan session API: registry
+round-trip, approximation reuse across predicates, and — the core contract —
+batched `verdicts` must be verdict-identical to the sequential per-pair
+reference for every registered filter on every predicate."""
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import (Approximation, JoinPlan, available_filters,
+                           get_filter, register_filter)
+from repro.spatial.filters import IntermediateFilter, unregister_filter
+from repro.spatial.filters.base import PREDICATES
+
+N_ORDER = 7
+METHODS = ("none", "april", "april-c", "ri", "ra", "5cch")
+BUILD_OPTS = {"ra": {"max_cells": 128}}
+
+
+@pytest.fixture(scope="module")
+def data():
+    R = make_dataset("T1", seed=51, count=60)
+    S = make_dataset("T2", seed=52, count=90)
+    W = make_dataset("T10", seed=53, count=30)   # large: within-hits vs R
+    L = make_linestrings(seed=54, count=60)
+    return R, S, W, L
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_all_methods():
+    assert set(METHODS) <= set(available_filters())
+
+
+def test_registry_roundtrip():
+    for m in METHODS:
+        filt = get_filter(m)
+        assert isinstance(filt, IntermediateFilter)
+        assert filt.name == m
+    # instances pass through unchanged
+    inst = get_filter("april")
+    assert get_filter(inst) is inst
+    with pytest.raises(ValueError, match="unknown intermediate filter"):
+        get_filter("nope")
+
+
+def test_registry_register_custom():
+    @register_filter("always-indecisive")
+    class Custom(IntermediateFilter):
+        def build(self, dataset, **opts):
+            return Approximation(filter=self.name, store=None)
+
+        def verdicts(self, ar, as_, pairs, **opts):
+            return self._all_indecisive(pairs)
+
+    try:
+        filt = get_filter("always-indecisive")
+        assert filt.name == "always-indecisive"
+        assert "always-indecisive" in available_filters()
+    finally:
+        unregister_filter("always-indecisive")
+    assert "always-indecisive" not in available_filters()
+
+
+# ---------------------------------------------------------------------------
+# JoinPlan session reuse
+# ---------------------------------------------------------------------------
+
+def test_joinplan_build_execute_reuse(data):
+    R, S, W, L = data
+    plan = JoinPlan(R, W, filter="april", n_order=N_ORDER)
+    plan.build()
+    ar, as_ = plan.approx_r, plan.approx_s
+    assert isinstance(ar, Approximation) and ar.size_bytes() > 0
+    res1, st1 = plan.execute("intersects")
+    # built approximations survive across predicates and executions
+    res2, st2 = plan.execute("within")
+    res3, st3 = plan.execute("intersects")
+    assert plan.approx_r is ar and plan.approx_s is as_
+    assert st2.t_build == st1.t_build  # build cost paid once
+    assert np.array_equal(np.sort(res1, axis=0), np.sort(res3, axis=0))
+    assert st1.predicate == "intersects" and st2.predicate == "within"
+
+
+def test_joinplan_adopts_prebuilt_stores(data):
+    R, S, _, _ = data
+    from repro.core.april import build_april
+    store_r = build_april(R, N_ORDER)
+    store_s = build_april(S, N_ORDER)
+    plan = JoinPlan(R, S, filter="april", n_order=N_ORDER)
+    plan.build(prebuilt=(store_r, store_s))
+    assert plan.approx_r.store is store_r
+    res, st = plan.execute("intersects")
+    ref, _ = JoinPlan(R, S, filter="april",
+                      n_order=N_ORDER).build().execute("intersects")
+    assert np.array_equal(np.sort(res, axis=0), np.sort(ref, axis=0))
+
+
+def test_joinplan_linestring_requires_line_kind(data):
+    R, S, _, L = data
+    plan = JoinPlan(R, S, filter="april", n_order=N_ORDER)
+    with pytest.raises(ValueError, match="r_kind"):
+        plan.execute("linestring")
+
+
+def test_none_filter_builds_nothing(data):
+    R, _, W, _ = data
+    plan = JoinPlan(R, W, filter="none")
+    plan.build()
+    assert plan.approx_r.store is None and plan.approx_s.store is None
+    _, st = plan.execute("within")
+    assert st.n_indecisive == st.n_candidates
+    assert st.approx_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# batched verdicts == sequential per-pair reference, all filters x predicates
+# ---------------------------------------------------------------------------
+
+def _plan_for(data, method, predicate):
+    R, S, W, L = data
+    build_opts = BUILD_OPTS.get(method, {})
+    if predicate == "linestring":
+        return JoinPlan(L, S, filter=method, n_order=N_ORDER, r_kind="line",
+                        build_opts=build_opts)
+    if predicate == "within":
+        return JoinPlan(R, W, filter=method, n_order=N_ORDER,
+                        build_opts=build_opts)
+    if predicate == "selection":
+        queries = make_dataset("T3", seed=55, count=5)
+        return JoinPlan(R, queries, filter=method, n_order=N_ORDER,
+                        build_opts=build_opts)
+    return JoinPlan(R, S, filter=method, n_order=N_ORDER,
+                    build_opts=build_opts)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("predicate", PREDICATES)
+def test_batched_matches_sequential(data, method, predicate):
+    plan = _plan_for(data, method, predicate)
+    plan.build()
+    pairs = plan.candidates(predicate)
+    assert len(pairs) > 5, "fixture must produce candidates"
+    v_seq = plan.filter.verdicts_seq(plan.approx_r, plan.approx_s, pairs,
+                                     predicate=predicate)
+    v_bat = plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                                 predicate=predicate)
+    assert v_bat.dtype == np.int8
+    assert np.array_equal(v_seq, v_bat), (
+        f"{method}/{predicate}: batched verdicts diverged "
+        f"(seq {np.bincount(v_seq, minlength=3)}, "
+        f"bat {np.bincount(v_bat, minlength=3)})")
+
+
+def test_backend_choice_never_changes_verdicts(data):
+    """jnp/pallas backends must agree with numpy (small batch, APRIL + RI)."""
+    R, S, _, _ = data
+    pairs = None
+    for method in ("april", "ri"):
+        plan = JoinPlan(R, S, filter=method, n_order=N_ORDER)
+        plan.build()
+        pairs = plan.candidates("intersects")[:64]
+        base = plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                                    predicate="intersects", backend="numpy")
+        for backend in ("jnp", "pallas"):
+            got = plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                                       predicate="intersects",
+                                       backend=backend)
+            assert np.array_equal(base, got), (method, backend)
+
+
+def test_unknown_predicate_and_backend_raise(data):
+    R, S, _, _ = data
+    plan = JoinPlan(R, S, filter="none")
+    plan.build()
+    pairs = np.zeros((1, 2), np.int64)
+    with pytest.raises(ValueError, match="unknown predicate"):
+        plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                             predicate="overlaps")
+    with pytest.raises(ValueError, match="unknown backend"):
+        plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                             backend="cuda")
