@@ -1,13 +1,96 @@
-"""Table 11: APRIL construction methods — RI-style full rasterization vs
-scanline vs flood fill vs one-step intervalization (PiPs / Neighbors /
-TPU-batched)."""
+"""Table 11 + BENCH_build: approximation construction cost.
+
+Two parts:
+
+* ``table11_*`` rows — the paper's construction-method comparison (scanline
+  vs flood fill vs one-step PiPs/Neighbors/batched) with PiP-test counts.
+* :func:`bench_builds` — sequential (per-polygon reference) vs batched
+  (dataset-level, DESIGN.md §6) build times for every registered filter,
+  persisted as ``BENCH_build.json``. The ISSUE-2 acceptance gate: >=10x on
+  ``build_ri`` / ``build_ra`` at order 9 on T1/T2, batched store-identical
+  to sequential.
+
+``python -m benchmarks.construction --smoke`` runs a tiny
+batched-vs-sequential equality check (the CI quick-lane smoke).
+"""
 from __future__ import annotations
 
+import json
+import sys
+
+import numpy as np
+
+from repro.core import ri
 from repro.core.april import build_april
 from repro.core.intervalize import PIP_COUNTER
-from repro.core.ri import build_ri
+from repro.datagen import make_dataset
+from repro.spatial import get_filter
 
 from .common import ds, row, timeit
+
+BENCH_ORDER = 9
+BENCH_DATASETS = ("T1", "T2")
+RA_MAX_CELLS = 256
+
+
+def _store_equal(name: str, s, b) -> bool:
+    try:
+        if name == "april":
+            return all(np.array_equal(getattr(s, f), getattr(b, f))
+                       for f in ("a_off", "a_ints", "f_off", "f_ints"))
+        if name == "april-c":
+            return s.a_bufs == b.a_bufs and s.f_bufs == b.f_bufs
+        if name == "ri":
+            return all(np.array_equal(getattr(s, f), getattr(b, f))
+                       for f in ("off", "ints", "bit_off", "bits"))
+        if name == "ra":
+            return (np.array_equal(s.k, b.k)
+                    and all(np.array_equal(x, y)
+                            for x, y in zip(s.cells, b.cells)))
+        if name == "5cch":
+            return all(np.array_equal(getattr(s, f), getattr(b, f))
+                       for f in ("pent", "hull_off", "hull_pts"))
+    except AttributeError:
+        return False
+    return False
+
+
+def bench_builds(n_order: int = BENCH_ORDER, names=BENCH_DATASETS) -> dict:
+    """Sequential vs batched builds for all five filters; BENCH_build dict."""
+    out = {"n_order": n_order, "ra_max_cells": RA_MAX_CELLS, "datasets": {}}
+    for name in names:
+        D = ds(name)
+        per = {}
+        for m in ("april", "april-c", "ri", "ra", "5cch"):
+            filt = get_filter(m)
+            opts = {"max_cells": RA_MAX_CELLS} if m == "ra" else {}
+            seq, t_seq = timeit(filt.build, D, n_order=n_order,
+                                build_backend="sequential", **opts)
+            bat, t_bat = timeit(filt.build, D, n_order=n_order,
+                                build_backend="numpy", **opts)
+            assert _store_equal(m, seq.store, bat.store), \
+                f"{m}/{name}: batched store diverged from sequential"
+            per[m] = {
+                "t_seq_s": round(t_seq, 4),
+                "t_batch_s": round(t_bat, 4),
+                "polys_per_s_seq": round(len(D) / max(t_seq, 1e-9), 1),
+                "polys_per_s_batch": round(len(D) / max(t_bat, 1e-9), 1),
+                "speedup": round(t_seq / max(t_bat, 1e-9), 2),
+            }
+        out["datasets"][name] = per
+    return out
+
+
+def smoke() -> None:
+    """CI quick-lane smoke: tiny dataset, batched == sequential stores."""
+    D = make_dataset("T1", seed=77, count=10)
+    for m in ("april", "april-c", "ri", "ra", "5cch"):
+        filt = get_filter(m)
+        opts = {"max_cells": 64} if m == "ra" else {}
+        seq = filt.build(D, n_order=6, build_backend="sequential", **opts)
+        bat = filt.build(D, n_order=6, build_backend="numpy", **opts)
+        assert _store_equal(m, seq.store, bat.store), m
+        print(f"construction smoke ok: {m}")
 
 
 def run():
@@ -24,7 +107,27 @@ def run():
                            f"total_s={dt:.3f};pip_tests={pips}"))
         # RI needs Strong/Weak labels => coverage clipping (the costly path)
         if name != "T3":  # T3 at order 9 is large; keep the bench bounded
-            _, dt = timeit(build_ri, D, 8)
+            _, dt = timeit(ri.build_ri, D, 8)
             out.append(row(f"table11_{name}_ri_full", dt / len(D) * 1e6,
                            f"total_s={dt:.3f}"))
+
+    # sequential vs batched builds -> BENCH_build.json
+    res = bench_builds()
+    with open("BENCH_build.json", "w") as f:
+        json.dump(res, f, indent=2)
+    for name, per in res["datasets"].items():
+        for m, r in per.items():
+            out.append(row(
+                f"build_{m}_{name}", 1e6 * r["t_batch_s"] / max(1, len(ds(name))),
+                f"t_seq_s={r['t_seq_s']};t_batch_s={r['t_batch_s']};"
+                f"speedup={r['speedup']}"))
     return out
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)

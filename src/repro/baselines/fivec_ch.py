@@ -73,28 +73,55 @@ def convex_hull(points: np.ndarray) -> np.ndarray:
     return np.asarray(lower[:-1] + upper[:-1])
 
 
+def _corners_from_support(m: np.ndarray) -> np.ndarray:
+    """Solve the 5 adjacent-direction 2x2 systems for support values
+    ``m [..., 5]``; explicit elementwise arithmetic so the batched and
+    per-object builds are bit-identical. Returns [..., 5, 2]."""
+    m1 = np.roll(m, -1, axis=-1)
+    inv = np.stack(_CORNER_INV)              # [5,2,2]
+    x = inv[:, 0, 0] * m + inv[:, 0, 1] * m1
+    y = inv[:, 1, 0] * m + inv[:, 1, 1] * m1
+    return np.stack([x, y], axis=-1)
+
+
 def _pentagon(verts: np.ndarray) -> np.ndarray:
     """Corners of the 5-direction DOP enclosing ``verts``."""
     m = (verts @ _DIRS.T).max(axis=0)        # [5] support values
-    corners = np.stack([
-        _CORNER_INV[k] @ np.array([m[k], m[(k + 1) % 5]]) for k in range(5)
-    ])
-    return corners
+    return _corners_from_support(m)
 
 
-def build_5cch(dataset) -> FiveCCH:
+def _pentagons_multi(verts: np.ndarray, nverts: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_pentagon` over the padded dataset: masked support
+    values, then all corner solves as one einsum. [P,5,2]."""
+    verts = np.asarray(verts, np.float64)
+    nverts = np.asarray(nverts, np.int64)
+    P, V, _ = verts.shape
+    valid = np.arange(V)[None, :] < nverts[:, None]
+    sup = np.where(valid[..., None], verts @ _DIRS.T, -np.inf).max(axis=1)
+    return _corners_from_support(sup)
+
+
+def build_5cch(dataset, backend: str = "numpy") -> FiveCCH:
+    """Build the 5C+CH store. ``backend`` 'numpy' | 'jnp' vectorize the
+    pentagon (5-DOP) stage over the whole dataset; 'sequential' is the
+    per-object reference. The convex-hull stage is per-object either way
+    (monotone chain; cheap relative to rasterizing filters)."""
     P = len(dataset)
-    pent = np.zeros((P, 5, 2))
+    if backend == "sequential":
+        pent = np.zeros((P, 5, 2))
+        for i in range(P):
+            pent[i] = _pentagon(dataset.polygon(i))
+    else:
+        pent = _pentagons_multi(dataset.verts, dataset.nverts)
     off = [0]; hulls = []
     for i in range(P):
-        v = dataset.polygon(i)
-        pent[i] = _pentagon(v)
-        h = convex_hull(v)
+        h = convex_hull(dataset.polygon(i))
         hulls.append(h)
         off.append(off[-1] + len(h))
     return FiveCCH(pent=pent,
                    hull_off=np.asarray(off, np.int64),
-                   hull_pts=np.concatenate(hulls, axis=0))
+                   hull_pts=(np.concatenate(hulls, axis=0) if hulls
+                             else np.zeros((0, 2))))
 
 
 def convex_disjoint(ha: np.ndarray, hb: np.ndarray) -> bool:
@@ -127,10 +154,10 @@ def fivecch_within_verdict_pair(store_r: FiveCCH, i: int, store_s: FiveCCH,
     return fivecch_verdict_pair(store_r, i, store_s, j)
 
 
-def build_5cch_lines(dataset) -> FiveCCH:
+def build_5cch_lines(dataset, backend: str = "numpy") -> FiveCCH:
     """5C+CH store for open linestrings (the pentagon/hull of the chain's
     vertices encloses the chain, so disjointness stays conservative)."""
-    return build_5cch(dataset)
+    return build_5cch(dataset, backend=backend)
 
 
 # ---------------------------------------------------------------------------

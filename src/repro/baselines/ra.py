@@ -70,30 +70,103 @@ def _fit_grid(mbr, max_cells: int, omega: float):
     return k, side, ox, oy, nx, ny
 
 
-def build_ra(dataset, max_cells: int = 750, omega: float = 1.0 / (1 << 16)) -> RAStore:
+def _fit_grid_multi(mbrs: np.ndarray, max_cells: int, omega: float):
+    """Vectorized :func:`_fit_grid` over all objects: escalate the scale of
+    the not-yet-fitting subset until every grid has <= max_cells cells.
+    Returns (k [P], side [P], ox [P], oy [P], nx [P], ny [P])."""
+    mbrs = np.asarray(mbrs, np.float64)
+    P = len(mbrs)
+    k = np.zeros(P, np.int64)
+    nx = np.zeros(P, np.int64)
+    ny = np.zeros(P, np.int64)
+    todo = np.arange(P)
+    while len(todo):
+        side = omega * np.exp2(k[todo])
+        cnx = (np.floor(mbrs[todo, 2] / side).astype(np.int64)
+               - np.floor(mbrs[todo, 0] / side).astype(np.int64) + 1)
+        cny = (np.floor(mbrs[todo, 3] / side).astype(np.int64)
+               - np.floor(mbrs[todo, 1] / side).astype(np.int64) + 1)
+        done = (cnx * cny <= max_cells) | (side > 1.0)
+        fin = todo[done]
+        nx[fin] = cnx[done]
+        ny[fin] = cny[done]
+        todo = todo[~done]
+        k[todo] += 1
+    side = omega * np.exp2(k)
+    ox = np.floor(mbrs[:, 0] / side) * side
+    oy = np.floor(mbrs[:, 1] / side) * side
+    return k, side, ox, oy, nx, ny
+
+
+def _grids_from_classes(cls_flat, coff, nx, ny):
+    return [cls_flat[coff[i]: coff[i + 1]].reshape(ny[i], nx[i])
+            for i in range(len(nx))]
+
+
+def build_ra(dataset, max_cells: int = 750, omega: float = 1.0 / (1 << 16),
+             backend: str = "numpy") -> RAStore:
+    """Build the RA store. ``backend``: 'numpy' | 'jnp' evaluate the coverage
+    fractions of ALL (object x window-cell) rows in one padded
+    Sutherland–Hodgman pass (DESIGN.md §6); 'sequential' is the per-object
+    reference loop with per-cell clipping."""
     P = len(dataset)
-    ks = np.zeros(P, np.int64)
-    origins = np.zeros((P, 2))
-    shapes = np.zeros((P, 2), np.int64)
-    grids: list[np.ndarray] = []
-    for i in range(P):
-        v = dataset.polygon(i)
-        k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells, omega)
-        # coverage fractions for all cells in the window
-        cxs = np.arange(nx); cys = np.arange(ny)
-        CX, CY = np.meshgrid(cxs, cys, indexing="xy")
-        cells = np.stack([CX.ravel(), CY.ravel()], axis=1)
-        ext = Extent(ox, oy, side)  # one-cell extent trick: order 0 per cell
-        frac = rasterize.coverage_fractions(v, len(v), cells, 0, ext)
-        grid = np.full(nx * ny, EMPTY, np.int8)
-        grid[(frac > 0) & (frac <= 0.5)] = WEAK
-        grid[(frac > 0.5) & (frac < 1.0 - 1e-12)] = STRONG
-        grid[frac >= 1.0 - 1e-12] = FULL
-        ks[i] = k
-        origins[i] = (ox, oy)
-        shapes[i] = (nx, ny)
-        grids.append(grid.reshape(ny, nx))
-    return RAStore(omega=omega, k=ks, origin=origins, shape=shapes, cells=grids)
+    if backend == "sequential":
+        ks = np.zeros(P, np.int64)
+        origins = np.zeros((P, 2))
+        shapes = np.zeros((P, 2), np.int64)
+        grids: list[np.ndarray] = []
+        for i in range(P):
+            v = dataset.polygon(i)
+            k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells,
+                                                omega)
+            # coverage fractions for all cells in the window
+            cxs = np.arange(nx); cys = np.arange(ny)
+            CX, CY = np.meshgrid(cxs, cys, indexing="xy")
+            cells = np.stack([CX.ravel(), CY.ravel()], axis=1)
+            ext = Extent(ox, oy, side)  # one-cell extent trick: order 0/cell
+            frac = rasterize.coverage_fractions(v, len(v), cells, 0, ext)
+            grid = np.full(nx * ny, EMPTY, np.int8)
+            grid[(frac > 0) & (frac <= 0.5)] = WEAK
+            grid[(frac > 0.5) & (frac < 1.0 - 1e-12)] = STRONG
+            grid[frac >= 1.0 - 1e-12] = FULL
+            ks[i] = k
+            origins[i] = (ox, oy)
+            shapes[i] = (nx, ny)
+            grids.append(grid.reshape(ny, nx))
+        return RAStore(omega=omega, k=ks, origin=origins, shape=shapes,
+                       cells=grids)
+
+    from ..core import geometry
+    k, side, ox, oy, nx, ny = _fit_grid_multi(dataset.mbrs, max_cells, omega)
+    ncell = nx * ny
+    coff = np.concatenate([[0], np.cumsum(ncell)])
+    cls = np.full(coff[-1], EMPTY, np.int8)
+    # object slices bound the flat (object x window-cell) transients — the
+    # per-object memory profile stays O(chunk), not O(dataset)
+    cells_per_chunk = 1 << 22
+    p0 = 0
+    while p0 < P:
+        p1 = int(np.searchsorted(coff, coff[p0] + cells_per_chunk, "right"))
+        p1 = max(p1 - 1, p0 + 1)
+        pid = np.repeat(np.arange(p0, p1), ncell[p0:p1])
+        t = np.arange(coff[p1] - coff[p0]) - (coff[p0:p1] - coff[p0])[pid - p0]
+        cx = t % nx[pid]
+        cy = t // nx[pid]
+        sp = side[pid]
+        boxes = np.stack([ox[pid] + cx * sp, oy[pid] + cy * sp,
+                          ox[pid] + (cx + 1) * sp, oy[pid] + (cy + 1) * sp],
+                         axis=1)
+        areas = geometry.box_clip_areas_rows(
+            dataset.verts, dataset.nverts, pid, boxes, backend=backend)
+        frac = np.clip(areas / (sp * sp), 0.0, 1.0)
+        seg = cls[coff[p0]: coff[p1]]
+        seg[(frac > 0) & (frac <= 0.5)] = WEAK
+        seg[(frac > 0.5) & (frac < 1.0 - 1e-12)] = STRONG
+        seg[frac >= 1.0 - 1e-12] = FULL
+        p0 = p1
+    return RAStore(omega=omega, k=k, origin=np.stack([ox, oy], axis=1),
+                   shape=np.stack([nx, ny], axis=1),
+                   cells=_grids_from_classes(cls, coff, nx, ny))
 
 
 def _upscale_to(store: RAStore, i: int, k_to: int):
@@ -135,31 +208,69 @@ def _upscale_to(store: RAStore, i: int, k_to: int):
 
 
 def build_ra_lines(dataset, max_cells: int = 750,
-                   omega: float = 1.0 / (1 << 16)) -> RAStore:
+                   omega: float = 1.0 / (1 << 16),
+                   backend: str = "numpy") -> RAStore:
     """RA store for open linestrings: cells crossed by the chain are Weak
     (zero area => never Strong/Full), the rest Empty. Table 1 still applies:
     Weak x Full certifies a hit, Weak x Weak/Strong stays indecisive."""
     P = len(dataset)
-    ks = np.zeros(P, np.int64)
-    origins = np.zeros((P, 2))
-    shapes = np.zeros((P, 2), np.int64)
-    grids: list[np.ndarray] = []
-    for i in range(P):
-        v = dataset.polygon(i)
-        k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells, omega)
-        # rasterize the chain on a power-of-two grid covering the window
-        n_ord = max(1, int(np.ceil(np.log2(max(nx, ny)))))
-        ext = Extent(ox, oy, side * (1 << n_ord))
-        cells = rasterize.dda_partial_cells(v, len(v), n_ord, ext, closed=False)
-        grid = np.full((ny, nx), EMPTY, np.int8)
-        if len(cells):
-            keep = (cells[:, 0] < nx) & (cells[:, 1] < ny)
-            grid[cells[keep, 1], cells[keep, 0]] = WEAK
-        ks[i] = k
-        origins[i] = (ox, oy)
-        shapes[i] = (nx, ny)
-        grids.append(grid)
-    return RAStore(omega=omega, k=ks, origin=origins, shape=shapes, cells=grids)
+    if backend == "sequential":
+        ks = np.zeros(P, np.int64)
+        origins = np.zeros((P, 2))
+        shapes = np.zeros((P, 2), np.int64)
+        grids: list[np.ndarray] = []
+        for i in range(P):
+            v = dataset.polygon(i)
+            k, side, ox, oy, nx, ny = _fit_grid(dataset.mbrs[i], max_cells,
+                                                omega)
+            # rasterize the chain on a power-of-two grid covering the window
+            n_ord = max(1, int(np.ceil(np.log2(max(nx, ny)))))
+            ext = Extent(ox, oy, side * (1 << n_ord))
+            cells = rasterize.dda_partial_cells(v, len(v), n_ord, ext,
+                                                closed=False)
+            grid = np.full((ny, nx), EMPTY, np.int8)
+            if len(cells):
+                keep = (cells[:, 0] < nx) & (cells[:, 1] < ny)
+                grid[cells[keep, 1], cells[keep, 0]] = WEAK
+            ks[i] = k
+            origins[i] = (ox, oy)
+            shapes[i] = (nx, ny)
+            grids.append(grid)
+        return RAStore(omega=omega, k=ks, origin=origins, shape=shapes,
+                       cells=grids)
+
+    # batched: one flat clipped traversal over all chains, each in its own
+    # per-object grid frame (per-edge grid bound G = 2^n_ord of its object)
+    from ..core.rasterize import clip_segments_to_grid, dda_traverse
+    k, side, ox, oy, nx, ny = _fit_grid_multi(dataset.mbrs, max_cells, omega)
+    n_ord = np.maximum(
+        1, np.ceil(np.log2(np.maximum(nx, ny).astype(np.float64)))
+    ).astype(np.int64)
+    G = (np.int64(1) << n_ord)
+    # grid coords mirror Extent(ox, oy, side * G).cell_size(n_ord) == side
+    h = (side * G) / G
+    verts = np.asarray(dataset.verts, np.float64)
+    nverts = np.asarray(dataset.nverts, np.int64)
+    V = verts.shape[1]
+    idx = np.arange(V)[None, :]
+    edge_valid = idx < nverts[:, None] - 1
+    pe, ve = np.nonzero(edge_valid)
+    org = np.stack([ox, oy], axis=1)
+    a = (verts[pe, ve] - org[pe]) / h[pe, None]
+    b = (verts[pe, np.minimum(ve + 1, V - 1)] - org[pe]) / h[pe, None]
+    a_c, b_c, keep = clip_segments_to_grid(a, b, G[pe].astype(np.float64))
+    pe = pe[keep]
+    eid, cells = dda_traverse(a_c[keep], b_c[keep], G[pe])
+    pid = pe[eid]
+    ncell = nx * ny
+    coff = np.concatenate([[0], np.cumsum(ncell)])
+    cls = np.full(coff[-1], EMPTY, np.int8)
+    inb = (cells[:, 0] < nx[pid]) & (cells[:, 1] < ny[pid])
+    cls[coff[:-1][pid[inb]] + cells[inb, 1] * nx[pid[inb]]
+        + cells[inb, 0]] = WEAK
+    return RAStore(omega=omega, k=k, origin=org,
+                   shape=np.stack([nx, ny], axis=1),
+                   cells=_grids_from_classes(cls, coff, nx, ny))
 
 
 # ---------------------------------------------------------------------------

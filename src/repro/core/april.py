@@ -68,9 +68,22 @@ def build_april_polygon(
 
 def build_april(
     dataset, n_order: int, extent: Extent = GLOBAL_EXTENT,
-    method: str = "batched",
+    method: str = "batched", backend: str = "numpy",
 ) -> AprilStore:
-    """Build the APRIL store for a PolygonDataset."""
+    """Build the APRIL store for a PolygonDataset.
+
+    ``backend``: 'numpy' | 'jnp' run the dataset-level batched construction
+    (one multi-polygon DDA + one PiP pass over all gap heads, DESIGN.md §6);
+    'sequential' keeps the per-polygon reference loop. Non-'batched'
+    ``method`` variants (pips / neighbors / scanline / floodfill) are
+    inherently per-polygon and always take the sequential path.
+    """
+    if method == "batched" and backend != "sequential":
+        a_off, a_ints, f_off, f_ints = intervalize.onestep_multi(
+            dataset.verts, dataset.nverts, n_order, extent, backend=backend)
+        return AprilStore(n_order=n_order, extent=extent,
+                          a_off=a_off, a_ints=a_ints,
+                          f_off=f_off, f_ints=f_ints)
     a_off = [0]; f_off = [0]
     a_chunks = []; f_chunks = []
     for i in range(len(dataset)):

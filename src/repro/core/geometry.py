@@ -22,12 +22,34 @@ __all__ = [
     "polygon_mbrs",
     "points_in_polygon",
     "points_in_polygons_batch",
+    "points_in_polygon_rows",
     "segments_intersect",
     "polygons_intersect",
     "polygon_within",
     "polygon_area",
     "clip_polygon_to_box",
+    "box_clip_areas",
+    "box_clip_areas_rows",
+    "size_buckets",
 ]
+
+
+def size_buckets(sizes: np.ndarray, chunk_elems: int = 1 << 22):
+    """Yield index chunks grouped by power-of-two size class (padding waste
+    <= 2x), each chunk's padded element count bounded by ``chunk_elems``.
+    Zero-size rows are skipped. The shared bucketing lever of every batched
+    pass (construction and joins alike, DESIGN.md §4/§6)."""
+    sizes = np.asarray(sizes, np.int64)
+    nz = np.nonzero(sizes > 0)[0]
+    if len(nz) == 0:
+        return
+    cls = np.ceil(np.log2(sizes[nz].astype(np.float64))).astype(np.int64)
+    for c in np.unique(cls):
+        sel = nz[cls == c]
+        L = int(sizes[sel].max())
+        rows = max(1, int(chunk_elems // max(1, L)))
+        for r0 in range(0, len(sel), rows):
+            yield sel[r0: r0 + rows]
 
 
 def polygon_edges(verts: np.ndarray, nverts: np.ndarray):
@@ -104,6 +126,71 @@ def points_in_polygons_batch(
     xint = x0 + t * (x1 - x0)
     cross = cond & (xint > x) & mask[:, None, :]
     return (np.sum(cross, axis=2) % 2) == 1
+
+
+def points_in_polygon_rows(
+    points: np.ndarray, poly_of_point: np.ndarray,
+    verts: np.ndarray, nverts: np.ndarray, chunk_elems: int = 1 << 22,
+) -> np.ndarray:
+    """Crossing-number test where every point tests against its OWN polygon.
+
+    points: [M,2]; poly_of_point: [M] indices into the padded polygon arrays
+    ([P,V,2] / [P]). Returns [M] bool. This is the flat form the batched
+    one-step construction uses: gap-head cells of many polygons classified in
+    one pass (DESIGN.md §6). Row-identical to :func:`points_in_polygon`.
+    """
+    points = np.asarray(points, dtype=np.float64)
+    poly_of_point = np.asarray(poly_of_point, np.int64)
+    starts, ends, mask = polygon_edges(verts, nverts)
+    M = len(points)
+    V = starts.shape[1]
+    out = np.zeros(M, dtype=bool)
+    step = max(1, int(chunk_elems // max(1, V)))
+    for i0 in range(0, M, step):
+        sl = slice(i0, min(M, i0 + step))
+        p = poly_of_point[sl]
+        x = points[sl, 0][:, None]
+        y = points[sl, 1][:, None]
+        x0, y0 = starts[p, :, 0], starts[p, :, 1]
+        x1, y1 = ends[p, :, 0], ends[p, :, 1]
+        cond = (y0 <= y) != (y1 <= y)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t = (y - y0) / np.where(y1 == y0, 1.0, y1 - y0)
+        xint = x0 + t * (x1 - x0)
+        cross = cond & (xint > x) & mask[p]
+        out[sl] = (np.sum(cross, axis=1) % 2) == 1
+    return out
+
+
+_JNP_PIP_JIT = None
+
+
+def _pip_rows_jnp_impl(points, starts, ends, mask, poly_of_point):
+    import jax.numpy as jnp
+    x = points[:, 0][:, None]
+    y = points[:, 1][:, None]
+    x0, y0 = starts[poly_of_point, :, 0], starts[poly_of_point, :, 1]
+    x1, y1 = ends[poly_of_point, :, 0], ends[poly_of_point, :, 1]
+    cond = (y0 <= y) != (y1 <= y)
+    t = (y - y0) / jnp.where(y1 == y0, 1.0, y1 - y0)
+    xint = x0 + t * (x1 - x0)
+    cross = cond & (xint > x) & mask[poly_of_point]
+    return (jnp.sum(cross, axis=1) % 2) == 1
+
+
+def points_in_polygon_rows_jnp(points, poly_of_point, verts, nverts) -> np.ndarray:
+    """jnp twin of :func:`points_in_polygon_rows` (float64 under enable_x64;
+    the crossing test is exact comparisons, so results are identical)."""
+    global _JNP_PIP_JIT
+    import jax
+    from jax.experimental import enable_x64
+    starts, ends, mask = polygon_edges(verts, nverts)
+    with enable_x64():
+        if _JNP_PIP_JIT is None:
+            _JNP_PIP_JIT = jax.jit(_pip_rows_jnp_impl)
+        out = _JNP_PIP_JIT(np.asarray(points, np.float64), starts, ends, mask,
+                           np.asarray(poly_of_point, np.int64))
+        return np.asarray(out)
 
 
 def _orient(ax, ay, bx, by, cx, cy):
@@ -230,12 +317,243 @@ def clip_polygon_to_box(verts: np.ndarray, box: tuple[float, float, float, float
         t = (y - c[1]) / (n[1] - c[1])
         return (c[0] + t * (n[0] - c[0]), y)
 
+    # y-planes first: the batched construction pass shares the two y-clips
+    # across every cell of a grid row (same band), so the sequential
+    # reference must clip in the same order to stay bit-identical.
     poly = [tuple(p) for p in np.asarray(verts, np.float64)]
-    poly = clip_half(poly, lambda p: p[0] >= xmin, lambda c, n: ix_x(c, n, xmin))
-    if poly:
-        poly = clip_half(poly, lambda p: p[0] <= xmax, lambda c, n: ix_x(c, n, xmax))
-    if poly:
-        poly = clip_half(poly, lambda p: p[1] >= ymin, lambda c, n: ix_y(c, n, ymin))
+    poly = clip_half(poly, lambda p: p[1] >= ymin, lambda c, n: ix_y(c, n, ymin))
     if poly:
         poly = clip_half(poly, lambda p: p[1] <= ymax, lambda c, n: ix_y(c, n, ymax))
+    if poly:
+        poly = clip_half(poly, lambda p: p[0] >= xmin, lambda c, n: ix_x(c, n, xmin))
+    if poly:
+        poly = clip_half(poly, lambda p: p[0] <= xmax, lambda c, n: ix_x(c, n, xmax))
     return np.asarray(poly, np.float64).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Batched box clipping (DESIGN.md §6): one padded Sutherland–Hodgman pass over
+# all (cell x edge) pairs of a construction batch. Row k clips ring k to box
+# k; the four half-plane passes and the shoelace use exactly the formulas of
+# the sequential clip_polygon_to_box/polygon_area pair, so per-row results
+# match the per-cell reference loop.
+# ---------------------------------------------------------------------------
+
+# clip sequence: (coordinate axis, box column, keep-greater-or-equal);
+# y-planes first — see clip_polygon_to_box
+_CLIP_PASSES = ((1, 1, True), (1, 3, False), (0, 0, True), (0, 2, False))
+
+
+def _clip_halfplane_batch(pts, cnt, axis, bound, keep_ge):
+    """One half-plane Sutherland–Hodgman pass over K padded rings.
+
+    pts [K,V,2], cnt [K], bound [K] (per-row clip line). Returns
+    (out [K,Vout,2], new_cnt [K]); each input vertex emits at most itself
+    plus one intersection (a non-convex ring may cross the line many times,
+    so Vout can exceed V+1 — it is sized to the actual max emission).
+    """
+    K, V, _ = pts.shape
+    if V == 0:
+        return np.zeros((K, 1, 2), np.float64), np.zeros(K, np.int64)
+    idx = np.arange(V)[None, :]
+    valid = idx < cnt[:, None]
+    rows = np.broadcast_to(np.arange(K)[:, None], (K, V))
+    # ring successor: roll, then rewrite each ring's wrap slot (cnt-1 -> 0)
+    nxt_pts = np.roll(pts, -1, axis=1)
+    nxt_pts[np.arange(K), np.maximum(cnt - 1, 0)] = pts[:, 0]
+    c = pts[..., axis]
+    n_ = nxt_pts[..., axis]
+    b = bound[:, None]
+    cin = (c >= b) if keep_ge else (c <= b)
+    nin = (n_ >= b) if keep_ge else (n_ <= b)
+    emit_cur = cin & valid
+    emit_ix = (cin != nin) & valid
+    n_emit = np.add(emit_cur, emit_ix, dtype=np.int32)
+    pos = np.cumsum(n_emit, axis=1, dtype=np.int32) - n_emit  # excl. prefix
+    new_cnt = n_emit.sum(axis=1).astype(np.int64)
+    Vout = max(1, int(new_cnt.max()) if K else 1)
+    out = np.zeros((K, Vout, 2), np.float64)
+    out[rows[emit_cur], pos[emit_cur]] = pts[emit_cur]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = (b - c) / np.where(n_ == c, 1.0, n_ - c)
+    ix = np.empty((K, V, 2), np.float64)
+    ix[..., axis] = np.broadcast_to(b, (K, V))
+    ix[..., 1 - axis] = pts[..., 1 - axis] + t * (nxt_pts[..., 1 - axis]
+                                                 - pts[..., 1 - axis])
+    pos_ix = pos + emit_cur
+    out[rows[emit_ix], pos_ix[emit_ix]] = ix[emit_ix]
+    return out, new_cnt
+
+
+def _ring_areas(pts, cnt):
+    """Absolute shoelace area of K padded rings (padding contributes 0)."""
+    K, V, _ = pts.shape
+    idx = np.arange(V)[None, :]
+    valid = idx < cnt[:, None]
+    nxt_pts = np.roll(pts, -1, axis=1)
+    nxt_pts[np.arange(K), np.maximum(cnt - 1, 0)] = pts[:, 0]
+    terms = pts[..., 0] * nxt_pts[..., 1] - nxt_pts[..., 0] * pts[..., 1]
+    return np.abs(np.where(valid, terms, 0.0).sum(axis=1)) / 2.0
+
+
+def box_clip_areas(verts, nverts, boxes) -> np.ndarray:
+    """Area of (ring ∩ axis-aligned box) for K independent rows at once.
+
+    verts [K,V,2] padded rings, nverts [K], boxes [K,4] (xmin,ymin,xmax,ymax).
+    Returns [K] float64 absolute areas; rows whose clipped ring degenerates
+    (< 3 vertices) report 0, matching the sequential reference.
+    """
+    pts = np.asarray(verts, np.float64)
+    cnt = np.asarray(nverts, np.int64)
+    boxes = np.asarray(boxes, np.float64)
+    for axis, col, keep_ge in _CLIP_PASSES:
+        pts, cnt = _clip_halfplane_batch(pts, cnt, axis, boxes[:, col], keep_ge)
+    return np.where(cnt >= 3, _ring_areas(pts, cnt), 0.0)
+
+
+_JNP_CLIP_JIT = None
+
+
+def _box_clip_areas_jnp_impl(pts, cnt, boxes):
+    import jax
+    import jax.numpy as jnp
+
+    def halfplane(pts, cnt, axis, bound, keep_ge):
+        K, V = pts.shape[0], pts.shape[1]
+        idx = jnp.arange(V)[None, :]
+        valid = idx < cnt[:, None]
+        rows = jnp.broadcast_to(jnp.arange(K)[:, None], (K, V))
+        nxt = jnp.where(valid, (idx + 1) % jnp.maximum(cnt[:, None], 1), 0)
+        nxt_pts = jnp.take_along_axis(
+            pts, jnp.broadcast_to(nxt[..., None], (K, V, 2)), axis=1)
+        c = pts[..., axis]
+        n_ = nxt_pts[..., axis]
+        b = bound[:, None]
+        cin = (c >= b) if keep_ge else (c <= b)
+        nin = (n_ >= b) if keep_ge else (n_ <= b)
+        emit_cur = cin & valid
+        emit_ix = (cin != nin) & valid
+        n_emit = emit_cur.astype(jnp.int32) + emit_ix.astype(jnp.int32)
+        pos = jnp.cumsum(n_emit, axis=1) - n_emit
+        # static worst case: every vertex emits itself + one intersection
+        # (non-convex rings can cross the line many times)
+        dump = 2 * V                               # masked writes land here
+        out = jnp.zeros((K, 2 * V + 1, 2), pts.dtype)
+        out = out.at[rows, jnp.where(emit_cur, pos, dump)].set(pts)
+        t = (b - c) / jnp.where(n_ == c, 1.0, n_ - c)
+        # barrier keeps XLA from fusing mul+add into an FMA, which would
+        # round vertices 1 ulp off the numpy path
+        step = jax.lax.optimization_barrier(
+            t * (nxt_pts[..., 1 - axis] - pts[..., 1 - axis]))
+        other = pts[..., 1 - axis] + step
+        bb = jnp.broadcast_to(b, (K, V))
+        ix = (jnp.stack([bb, other], -1) if axis == 0
+              else jnp.stack([other, bb], -1))
+        out = out.at[rows, jnp.where(emit_ix, pos + emit_cur, dump)].set(ix)
+        return out[:, : 2 * V], n_emit.sum(axis=1)
+
+    for axis, col, keep_ge in _CLIP_PASSES:
+        pts, cnt = halfplane(pts, cnt, axis, boxes[:, col], keep_ge)
+    return pts, cnt
+
+
+def box_clip_areas_jnp(verts, nverts, boxes) -> np.ndarray:
+    """jnp twin of :func:`box_clip_areas` (float64 under enable_x64).
+
+    The four half-plane passes run on device; the shoelace runs on host via
+    :func:`_ring_areas` over the same trimmed width so the reduction order
+    matches the numpy path. Caveat: XLA CPU fast-math may round individual
+    intersection vertices 1 ulp differently (despite the FMA barrier), so
+    coverage fractions can differ at the ~1e-16 level — a class flip needs a
+    fraction within ulps of a threshold, which general-position data does
+    not produce. The 'numpy' backend is the bit-identical reference.
+    """
+    global _JNP_CLIP_JIT
+    import jax
+    from jax.experimental import enable_x64
+    with enable_x64():
+        if _JNP_CLIP_JIT is None:
+            _JNP_CLIP_JIT = jax.jit(_box_clip_areas_jnp_impl)
+        pts, cnt = _JNP_CLIP_JIT(np.asarray(verts, np.float64),
+                                 np.asarray(nverts, np.int64),
+                                 np.asarray(boxes, np.float64))
+    pts = np.asarray(pts)
+    cnt = np.asarray(cnt, np.int64)
+    W = max(1, int(cnt.max()) if len(cnt) else 1)
+    return np.where(cnt >= 3, _ring_areas(pts[:, :W], cnt), 0.0)
+
+
+def box_clip_areas_rows(verts, nverts, poly_of_row, boxes,
+                        backend: str = "numpy",
+                        chunk_elems: int = 1 << 22) -> np.ndarray:
+    """Row-bucketed driver over the batched clip: row k clips polygon
+    ``poly_of_row[k]`` (padded [P,V,2]/[P]) to ``boxes[k]``.
+
+    The numpy path shares work across a construction batch: all cells of one
+    grid row of one polygon carry the exact same (ymin, ymax), so the two
+    y-plane passes run once per unique *band* and only the two x-plane
+    passes run per cell — identical results (same pass order as
+    :func:`clip_polygon_to_box`), a fraction of the work. Buckets by
+    power-of-two vertex-count class bound padding waste; chunks bound the
+    padded working set below ``chunk_elems``.
+    """
+    verts = np.asarray(verts, np.float64)
+    nverts = np.asarray(nverts, np.int64)
+    poly_of_row = np.asarray(poly_of_row, np.int64)
+    boxes = np.asarray(boxes, np.float64)
+    K = len(poly_of_row)
+    out = np.zeros(K, np.float64)
+    if K == 0:
+        return out
+
+    if backend == "jnp":
+        # generic per-row device pass (same pass order => same results); the
+        # static 2x-per-clip padding wants smaller chunks
+        nv = nverts[poly_of_row]
+        for sel in size_buckets(nv, min(chunk_elems, 1 << 18)):
+            Vb = int(nv[sel].max())
+            out[sel] = box_clip_areas_jnp(
+                verts[:, :Vb][poly_of_row[sel]], nv[sel], boxes[sel])
+        return out
+
+    # --- unique (polygon, ymin, ymax) bands ---------------------------------
+    bandkey = np.stack([poly_of_row.astype(np.float64),
+                        boxes[:, 1], boxes[:, 3]], axis=1)
+    uniq, band_of_row = np.unique(bandkey, axis=0, return_inverse=True)
+    band_of_row = band_of_row.ravel()
+    band_poly = uniq[:, 0].astype(np.int64)
+    B = len(uniq)
+
+    # y-passes once per band, bucketed by polygon vertex class
+    nvb = nverts[band_poly]
+    chunks = []                       # (band sel, pts, cnt)
+    for sel in size_buckets(nvb, chunk_elems):
+        Vb = int(nvb[sel].max())
+        pts = verts[:, :Vb][band_poly[sel]]
+        cnt = nvb[sel]
+        for axis, col, keep_ge in _CLIP_PASSES[:2]:
+            bound = uniq[sel, 1] if col == 1 else uniq[sel, 2]
+            pts, cnt = _clip_halfplane_batch(pts, cnt, axis, bound, keep_ge)
+        chunks.append((sel, pts, cnt))
+
+    # assemble the padded band-ring store
+    band_cnt = np.zeros(B, np.int64)
+    for sel, _, cnt in chunks:
+        band_cnt[sel] = cnt
+    W = max(1, int(band_cnt.max()))
+    band_pts = np.zeros((B, W, 2), np.float64)
+    for sel, pts, _ in chunks:
+        band_pts[sel, : pts.shape[1]] = pts[:, :W]
+
+    # x-passes per cell row, bucketed by band-ring size class (rows whose
+    # band clipped away entirely are skipped by the bucketing and stay 0)
+    cntr = band_cnt[band_of_row]
+    for sel in size_buckets(cntr, chunk_elems):
+        Wb = int(cntr[sel].max())
+        pts = band_pts[:, :Wb][band_of_row[sel]]
+        cnt = cntr[sel]
+        for axis, col, keep_ge in _CLIP_PASSES[2:]:
+            pts, cnt = _clip_halfplane_batch(pts, cnt, axis,
+                                             boxes[sel, col], keep_ge)
+        out[sel] = np.where(cnt >= 3, _ring_areas(pts, cnt), 0.0)
+    return out

@@ -26,6 +26,7 @@ host (ids themselves fit uint32 for N <= 16).
 from __future__ import annotations
 
 import bisect
+import threading
 
 import numpy as np
 
@@ -34,13 +35,21 @@ from .hilbert import d2xy, xy2d
 from .rasterize import Extent, GLOBAL_EXTENT
 
 __all__ = [
-    "intervals_from_ids", "april_from_cells", "onestep", "ids_in_intervals",
-    "PIP_COUNTER",
+    "intervals_from_ids", "april_from_cells", "onestep", "onestep_multi",
+    "ids_in_intervals", "runs_from_sorted", "PIP_COUNTER",
 ]
 
 # PiP-test counter (validates the paper's OneStep(Neighbors) claim of
-# 40-70% fewer PiP tests; reset/read by benchmarks/construction.py)
+# 40-70% fewer PiP tests; reset/read by benchmarks/construction.py).
+# Builds may run on partition threads (Partitioning.build_approx), so the
+# increment must not lose updates.
 PIP_COUNTER = {"count": 0}
+_PIP_LOCK = threading.Lock()
+
+
+def _count_pips(n: int) -> None:
+    with _PIP_LOCK:
+        PIP_COUNTER["count"] += n
 
 
 def intervals_from_ids(ids: np.ndarray) -> np.ndarray:
@@ -52,6 +61,21 @@ def intervals_from_ids(ids: np.ndarray) -> np.ndarray:
     starts = np.concatenate([ids[:1], ids[brk + 1]])
     ends = np.concatenate([ids[brk], ids[-1:]]) + np.uint64(1)
     return np.stack([starts, ends], axis=1)
+
+
+def runs_from_sorted(pid: np.ndarray, ids: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Maximal consecutive-id runs of a flat (polygon, id) sequence sorted
+    by (pid, id): returns (run_start, run_end, run_poly) with half-open
+    ends. Shared by one-step intervalization and RI store packing."""
+    if len(ids) == 0:
+        z = np.zeros(0, np.uint64)
+        return z, z.copy(), np.zeros(0, np.int64)
+    newpoly = np.r_[True, pid[1:] != pid[:-1]]
+    brk = newpoly | np.r_[True, ids[1:] != ids[:-1] + np.uint64(1)]
+    run_start = ids[brk]
+    run_end = ids[np.r_[brk[1:], True]] + np.uint64(1)
+    return run_start, run_end, pid[brk]
 
 
 def ids_in_intervals(intervals: np.ndarray) -> np.ndarray:
@@ -83,6 +107,14 @@ def onestep(
     cells = rasterize.dda_partial_cells(v, n, n_order, extent)
     p = rasterize.cells_to_hilbert(cells, n_order)
     if len(p) == 0:
+        # The boundary misses the grid entirely: the single virtual gap
+        # [0, 4^N) is the whole raster area — one PiP decides Full/Empty
+        # (a §5.2 partition fully covered by a large polygon).
+        n_cells_total = np.uint64(1) << np.uint64(2 * n_order)
+        if int(n) >= 3 and bool(_classify_gaps_batched(
+                v, n, n_order, extent, np.array([0], np.uint64))[0]):
+            whole = np.array([[0, n_cells_total]], np.uint64)
+            return whole, whole.copy()
         return np.zeros((0, 2), np.uint64), np.zeros((0, 2), np.uint64)
 
     # Partial runs and the R+1 gaps around them (incl. virtual lead/trail).
@@ -138,12 +170,86 @@ def _assemble(run_start, run_end, gap_start, gap_end, gap_full):
     # contiguity: next block starts where previous ends AND both in A
     joined = (bs[1:] == be[:-1]) & ba[1:] & ba[:-1]
     seg_break = ~joined
-    a_blocks_idx = np.nonzero(ba)[0]
     # A-interval starts: in-A block whose predecessor isn't joined-in-A
     starts_mask = ba & np.concatenate([[True], seg_break])
     ends_mask = ba & np.concatenate([seg_break, [True]])
     a_list = np.stack([bs[starts_mask], be[ends_mask]], axis=1).astype(np.uint64)
     return a_list, f_list
+
+
+def onestep_multi(
+    verts: np.ndarray, nverts: np.ndarray, n_order: int,
+    extent: Extent = GLOBAL_EXTENT, backend: str = "numpy",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One-step intervalization of MANY polygons in one pass (DESIGN.md §6).
+
+    The dataset-level analogue of :func:`onestep`: one multi-polygon DDA
+    traversal, then ONE vectorized PiP pass over the gap heads of *all*
+    polygons (including each polygon's virtual lead/trail gaps). Returns CSR
+    ``(a_off [P+1], a_ints [sum_Ia,2], f_off [P+1], f_ints [sum_If,2])``
+    interval-identical to per-polygon ``onestep(method='batched')`` calls.
+    ``backend``: 'numpy' or 'jnp' (device PiP pass).
+    """
+    verts = np.asarray(verts, np.float64)
+    nverts = np.asarray(nverts, np.int64)
+    P = len(nverts)
+    n_cells_total = np.uint64(1) << np.uint64(2 * n_order)
+
+    p_off, cells = rasterize.dda_partial_cells_multi(
+        verts, nverts, n_order, extent)
+    n_partial = np.diff(p_off)
+    pid = np.repeat(np.arange(P), n_partial)
+    ids = xy2d(n_order, cells[:, 0], cells[:, 1])
+    order = np.argsort(pid.astype(np.uint64) * n_cells_total + ids)
+    ids = ids[order]                       # sorted Hilbert ids per polygon
+
+    # Partial runs: breaks at id jumps or polygon boundaries.
+    run_start, run_end, run_poly = runs_from_sorted(pid, ids)
+    roff = np.zeros(P + 1, np.int64)
+    roff[1:] = np.cumsum(np.bincount(run_poly, minlength=P))
+
+    # R_p + 1 gaps per polygon, interleaved with its runs (virtual lead and
+    # trail gaps included — a polygon with no Partial cells keeps its single
+    # whole-grid gap, which handles extent-covering polygons).
+    goff = roff + np.arange(P + 1)
+    total_g = goff[-1]
+    gp = np.repeat(np.arange(P), np.diff(goff))
+    gs = np.empty(total_g, np.uint64)
+    ge = np.empty(total_g, np.uint64)
+    first = np.zeros(total_g, bool)
+    first[goff[:-1]] = True
+    last = np.zeros(total_g, bool)
+    last[goff[1:] - 1] = True
+    gs[first] = np.uint64(0)
+    gs[~first] = run_end
+    ge[last] = n_cells_total
+    ge[~last] = run_start
+
+    gap_full = np.zeros(total_g, bool)
+    idx = np.nonzero((ge > gs) & (nverts[gp] >= 3))[0]
+    if len(idx):
+        hx, hy = d2xy(n_order, gs[idx])
+        centers = rasterize.cell_centers(hx, hy, n_order, extent)
+        _count_pips(len(idx))
+        pip = (geometry.points_in_polygon_rows_jnp if backend == "jnp"
+               else geometry.points_in_polygon_rows)
+        gap_full[idx] = pip(centers, gp[idx], verts, nverts)
+
+    a_chunks, f_chunks = [], []
+    a_off = np.zeros(P + 1, np.int64)
+    f_off = np.zeros(P + 1, np.int64)
+    for p in range(P):
+        r0, r1 = roff[p], roff[p + 1]
+        g0, g1 = goff[p], goff[p + 1]
+        a, f = _assemble(run_start[r0:r1], run_end[r0:r1],
+                         gs[g0:g1], ge[g0:g1], gap_full[g0:g1])
+        a_chunks.append(a)
+        f_chunks.append(f)
+        a_off[p + 1] = a_off[p] + len(a)
+        f_off[p + 1] = f_off[p] + len(f)
+    cat = lambda ch: (np.concatenate(ch, axis=0) if ch
+                      else np.zeros((0, 2), np.uint64))
+    return a_off, cat(a_chunks), f_off, cat(f_chunks)
 
 
 def _gap_head_centers(gap_start, n_order, extent):
@@ -154,7 +260,7 @@ def _gap_head_centers(gap_start, n_order, extent):
 def _classify_gaps_batched(v, n, n_order, extent, gap_start) -> np.ndarray:
     """ALL gap heads tested in one vectorized PiP pass (TPU-adapted)."""
     centers = _gap_head_centers(gap_start, n_order, extent)
-    PIP_COUNTER["count"] += len(gap_start)
+    _count_pips(len(gap_start))
     return geometry.points_in_polygon(centers, v[: int(n)])
 
 
@@ -163,7 +269,7 @@ def _classify_gaps_pips(v, n, n_order, extent, gap_start) -> np.ndarray:
     centers = _gap_head_centers(gap_start, n_order, extent)
     out = np.zeros(len(gap_start), dtype=bool)
     poly = v[: int(n)]
-    PIP_COUNTER["count"] += len(gap_start)
+    _count_pips(len(gap_start))
     for i in range(len(gap_start)):          # deliberate sequential loop
         out[i] = bool(geometry.points_in_polygon(centers[i: i + 1], poly)[0])
     return out
@@ -207,7 +313,7 @@ def _classify_gaps_neighbors(v, n, n_order, extent, p, gap_start, gap_end) -> np
                 break
         if decided is None:
             c = rasterize.cell_centers(np.array([hx]), np.array([hy]), n_order, extent)
-            PIP_COUNTER["count"] += 1
+            _count_pips(1)
             decided = bool(geometry.points_in_polygon(c, poly)[0])
         out[g] = decided
         if decided:

@@ -15,6 +15,8 @@ Partitions are also the distribution unit for the multi-device join
 """
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
@@ -23,6 +25,17 @@ from .april import AprilStore, build_april
 from .rasterize import Extent
 
 __all__ = ["Partitioning", "partition_space", "reference_partition"]
+
+
+def _parallel_map(fn, items, parallel: bool, max_workers: int | None = None):
+    """Order-preserving map, threaded when ``parallel``. Builds are pure
+    numpy (no shared mutable state), so threads are safe and the heavy
+    vectorized passes release the GIL."""
+    if not parallel or len(items) <= 1:
+        return [fn(x) for x in items]
+    workers = max_workers or min(len(items), os.cpu_count() or 1)
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        return list(ex.map(fn, items))
 
 
 @dataclass
@@ -40,35 +53,38 @@ class Partitioning:
     def __len__(self) -> int:
         return len(self.partitions)
 
-    def build_april(self, dataset, n_order: int, method: str = "batched"
+    def build_april(self, dataset, n_order: int, method: str = "batched",
+                    parallel: bool = True, max_workers: int | None = None,
                     ) -> list[AprilStore | None]:
-        """Per-partition APRIL stores for ``dataset`` (None if empty there)."""
-        out: list[AprilStore | None] = []
-        for part in self.partitions:
+        """Per-partition APRIL stores for ``dataset`` (None if empty there).
+        Partitions build in parallel (threads) unless ``parallel=False``."""
+        def one(part):
             idx = part.obj_idx.get(dataset.name, np.zeros(0, np.int64))
             if len(idx) == 0:
-                out.append(None)
-                continue
-            sub = _subset(dataset, idx)
-            out.append(build_april(sub, n_order, part.extent, method))
-        return out
+                return None
+            return build_april(_subset(dataset, idx), n_order, part.extent,
+                               method)
+        return _parallel_map(one, self.partitions, parallel, max_workers)
 
     def build_approx(self, filt, dataset, n_order: int, side: str = "r",
+                     parallel: bool = True, max_workers: int | None = None,
                      **build_opts) -> list:
         """Per-partition approximations through an
         :class:`~repro.spatial.filters.IntermediateFilter` (None where the
         dataset has no objects). Generalizes :meth:`build_april` to every
-        registered filter — each partition gets its own raster extent."""
-        out = []
-        for part in self.partitions:
+        registered filter — each partition gets its own raster extent, and
+        partitions build in parallel (threads) unless ``parallel=False``.
+        The 'jnp' build backend forces sequential execution (JAX tracing is
+        not thread-safe)."""
+        if build_opts.get("build_backend") == "jnp":
+            parallel = False
+        def one(part):
             idx = part.obj_idx.get(dataset.name, np.zeros(0, np.int64))
             if len(idx) == 0:
-                out.append(None)
-                continue
-            sub = _subset(dataset, idx)
-            out.append(filt.build(sub, n_order=n_order, extent=part.extent,
-                                  side=side, **build_opts))
-        return out
+                return None
+            return filt.build(_subset(dataset, idx), n_order=n_order,
+                              extent=part.extent, side=side, **build_opts)
+        return _parallel_map(one, self.partitions, parallel, max_workers)
 
 
 def _subset(dataset, idx):

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from . import rasterize
-from .intervalize import intervals_from_ids
+from .intervalize import intervals_from_ids, runs_from_sorted
 from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
 from .rasterize import Extent, GLOBAL_EXTENT
 
@@ -65,11 +65,10 @@ class RIStore:
         return self.bits[self.bit_off[g]: self.bit_off[g + 1]]
 
     def size_bytes(self) -> int:
-        """Endpoints as uint32 pairs + ceil(bits/8) code bytes (paper §3.2)."""
-        code_bytes = 0
-        for g in range(len(self.ints)):
-            nbits = int(self.bit_off[g + 1] - self.bit_off[g])
-            code_bytes += (nbits + 7) // 8
+        """Endpoints as uint32 pairs + ceil(bits/8) code bytes (paper §3.2).
+        Vectorized — called per build for stats, so it must not walk every
+        interval in Python."""
+        code_bytes = int(((np.diff(self.bit_off) + 7) // 8).sum())
         return 4 * 2 * len(self.ints) + code_bytes + 8 * len(self.off)
 
     def packed_codes(self, i: int, k: int) -> np.ndarray:
@@ -98,24 +97,30 @@ def _classify_cells(verts, n, n_order, extent):
     return ids[order], cls[order]
 
 
+# class id -> 3-bit code row, per encoding (vectorized bit generation)
+_CODE_LUT = {
+    enc: np.asarray([tab[FULL], tab[STRONG], tab[WEAK]], np.uint8)
+    for enc, tab in (("R", CODE_R), ("S", CODE_S))
+}
+
+
 def _pack_store(objects, n_order: int, extent: Extent, encoding: str) -> RIStore:
     """Assemble an RIStore from per-object (sorted ids, classes) pairs."""
-    code_tab = CODE_R if encoding == "R" else CODE_S
-    off = [0]; bit_off = [0]
+    lut = _CODE_LUT[encoding]
+    off = [0]
+    bit_off_chunks = [np.zeros(1, np.int64)]
     int_chunks = []; bit_chunks = []
+    base = 0
     for ids, cls in objects:
         ints = intervals_from_ids(ids)
         int_chunks.append(ints)
         off.append(off[-1] + len(ints))
-        # per-interval concatenated 3-bit codes, in Hilbert order
-        pos = 0
-        for s, e in ints:
-            ln = int(e - s)
-            seg = cls[pos: pos + ln]
-            pos += ln
-            bits = np.asarray([code_tab[int(c)] for c in seg], np.uint8).ravel()
-            bit_chunks.append(bits)
-            bit_off.append(bit_off[-1] + 3 * ln)
+        # concatenated 3-bit codes in Hilbert order; per-interval offsets are
+        # the running 3x cell counts (cells tile the intervals consecutively)
+        lens = 3 * (ints[:, 1] - ints[:, 0]).astype(np.int64)
+        bit_off_chunks.append(base + np.cumsum(lens))
+        base += int(lens.sum())
+        bit_chunks.append(lut[cls].reshape(-1))
     ints = (np.concatenate(int_chunks, axis=0)
             if int_chunks else np.zeros((0, 2), np.uint64))
     bits = (np.concatenate(bit_chunks) if bit_chunks
@@ -123,34 +128,101 @@ def _pack_store(objects, n_order: int, extent: Extent, encoding: str) -> RIStore
     return RIStore(
         n_order=n_order, extent=extent, encoding=encoding,
         off=np.asarray(off, np.int64), ints=ints,
-        bit_off=np.asarray(bit_off, np.int64), bits=bits,
+        bit_off=np.concatenate(bit_off_chunks), bits=bits,
+    )
+
+
+def _sort_ids_by_poly(pid, ids, cls, n_order, P):
+    """Sort flat (polygon, id) cell rows into per-polygon Hilbert order;
+    returns (off [P+1], ids, cls)."""
+    n_cells_total = np.uint64(1) << np.uint64(2 * n_order)
+    order = np.argsort(pid.astype(np.uint64) * n_cells_total + ids)
+    off = np.zeros(P + 1, np.int64)
+    off[1:] = np.cumsum(np.bincount(pid, minlength=P))
+    return off, ids[order], cls[order]
+
+
+def _classify_cells_multi(verts, nverts, n_order, extent, backend="numpy"):
+    """Dataset-level :func:`_classify_cells`: one multi-polygon DDA + one
+    scanline pass + one padded coverage pass (DESIGN.md §6). Returns
+    (off [P+1], ids, cls) flat and per-polygon Hilbert-sorted."""
+    P = len(nverts)
+    p_off, p_cells = rasterize.dda_partial_cells_multi(
+        verts, nverts, n_order, extent)
+    f_off, f_cells = rasterize.scanline_full_cells_multi(
+        verts, nverts, p_off, p_cells, n_order, extent)
+    pid_p = np.repeat(np.arange(P), np.diff(p_off))
+    pid_f = np.repeat(np.arange(P), np.diff(f_off))
+    frac = rasterize.coverage_fractions_multi(
+        verts, nverts, pid_p, p_cells, n_order, extent, backend=backend)
+    p_cls = np.where(frac > 0.5, STRONG, WEAK).astype(np.int8)
+    ids = np.concatenate([
+        rasterize.xy2d(n_order, p_cells[:, 0], p_cells[:, 1]),
+        rasterize.xy2d(n_order, f_cells[:, 0], f_cells[:, 1])])
+    cls = np.concatenate([p_cls, np.full(len(pid_f), FULL, np.int8)])
+    pid = np.concatenate([pid_p, pid_f])
+    return _sort_ids_by_poly(pid, ids, cls, n_order, P)
+
+
+def _pack_store_flat(off, ids, cls, n_order, extent, encoding) -> RIStore:
+    """Vectorized :func:`_pack_store` over flat per-polygon-sorted cells."""
+    P = len(off) - 1
+    pid = np.repeat(np.arange(P), np.diff(off))
+    starts, ends, int_poly = runs_from_sorted(pid, ids)
+    store_off = np.zeros(P + 1, np.int64)
+    store_off[1:] = np.cumsum(np.bincount(int_poly, minlength=P))
+    lens = 3 * (ends - starts).astype(np.int64)
+    bit_off = np.zeros(len(starts) + 1, np.int64)
+    bit_off[1:] = np.cumsum(lens)
+    return RIStore(
+        n_order=n_order, extent=extent, encoding=encoding,
+        off=store_off, ints=np.stack([starts, ends], axis=1).astype(np.uint64),
+        bit_off=bit_off, bits=_CODE_LUT[encoding][cls].reshape(-1),
     )
 
 
 def build_ri(
     dataset, n_order: int, extent: Extent = GLOBAL_EXTENT, encoding: str = "R",
+    backend: str = "numpy",
 ) -> RIStore:
-    return _pack_store(
-        (_classify_cells(dataset.verts[i], int(dataset.nverts[i]), n_order,
-                         extent)
-         for i in range(len(dataset))),
-        n_order, extent, encoding)
+    """Build the RI store. ``backend``: 'numpy' | 'jnp' run the batched
+    dataset-level construction (DESIGN.md §6); 'sequential' is the faithful
+    per-polygon reference the batched path is store-identical to."""
+    if backend == "sequential":
+        return _pack_store(
+            (_classify_cells(dataset.verts[i], int(dataset.nverts[i]), n_order,
+                             extent)
+             for i in range(len(dataset))),
+            n_order, extent, encoding)
+    off, ids, cls = _classify_cells_multi(
+        dataset.verts, dataset.nverts, n_order, extent, backend=backend)
+    return _pack_store_flat(off, ids, cls, n_order, extent, encoding)
 
 
 def build_ri_lines(
     dataset, n_order: int, extent: Extent = GLOBAL_EXTENT, encoding: str = "R",
+    backend: str = "numpy",
 ) -> RIStore:
     """RI store for open linestrings: every touched cell is Weak (a line has
     no interior, so it can never certify a hit from its own side — but Weak
     against a Full polygon cell still ANDs non-zero, §3.3)."""
-    def gen():
-        for i in range(len(dataset)):
-            cells = rasterize.dda_partial_cells(
-                dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
-                closed=False)
-            ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
-            yield ids, np.full(len(ids), WEAK, np.int8)
-    return _pack_store(gen(), n_order, extent, encoding)
+    if backend == "sequential":
+        def gen():
+            for i in range(len(dataset)):
+                cells = rasterize.dda_partial_cells(
+                    dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
+                    closed=False)
+                ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
+                yield ids, np.full(len(ids), WEAK, np.int8)
+        return _pack_store(gen(), n_order, extent, encoding)
+    off, cells = rasterize.dda_partial_cells_multi(
+        dataset.verts, dataset.nverts, n_order, extent, closed=False)
+    pid = np.repeat(np.arange(len(dataset)), np.diff(off))
+    ids = rasterize.xy2d(n_order, cells[:, 0], cells[:, 1])
+    cls = np.full(len(ids), WEAK, np.int8)
+    return _pack_store_flat(
+        *_sort_ids_by_poly(pid, ids, cls, n_order, len(dataset)),
+        n_order, extent, encoding)
 
 
 def _aligned_and(xbits, xs, ybits, ys, lo, hi, xor_y: bool) -> bool:
@@ -342,20 +414,8 @@ def _fragment_hits_np(store_x: RIStore, store_y: RIStore, gx, gy, lo, hi,
     return hits
 
 
-def _size_buckets(sizes: np.ndarray, chunk_elems: int):
-    """Yield index chunks grouped by power-of-two size class (padding waste
-    <= 2x), each chunk's padded element count bounded by ``chunk_elems``."""
-    sizes = np.asarray(sizes, np.int64)
-    nz = np.nonzero(sizes > 0)[0]
-    if len(nz) == 0:
-        return
-    cls = np.ceil(np.log2(sizes[nz].astype(np.float64))).astype(np.int64)
-    for c in np.unique(cls):
-        sel = nz[cls == c]
-        L = int(sizes[sel].max())
-        rows = max(1, int(chunk_elems // max(1, L)))
-        for r0 in range(0, len(sel), rows):
-            yield sel[r0: r0 + rows]
+# power-of-two size-class bucketing shared with the construction paths
+_size_buckets = rasterize.size_buckets
 
 
 def _interval_words(store: RIStore, g: np.ndarray, W: int) -> np.ndarray:

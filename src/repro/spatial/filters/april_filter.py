@@ -45,19 +45,29 @@ class LineCellStore:
 
 
 def build_line_cells(dataset, n_order: int,
-                     extent: Extent = GLOBAL_EXTENT) -> LineCellStore:
-    off = [0]
-    chunks = []
-    for i in range(len(dataset)):
-        cells = rasterize.dda_partial_cells(
-            dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
-            closed=False)
-        ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
-        chunks.append(ids)
-        off.append(off[-1] + len(ids))
-    ids = np.concatenate(chunks) if chunks else np.zeros(0, np.uint64)
-    return LineCellStore(n_order=n_order, off=np.asarray(off, np.int64),
-                         ids=ids)
+                     extent: Extent = GLOBAL_EXTENT,
+                     backend: str = "numpy") -> LineCellStore:
+    if backend == "sequential":
+        off = [0]
+        chunks = []
+        for i in range(len(dataset)):
+            cells = rasterize.dda_partial_cells(
+                dataset.verts[i], int(dataset.nverts[i]), n_order, extent,
+                closed=False)
+            ids = np.sort(rasterize.cells_to_hilbert(cells, n_order))
+            chunks.append(ids)
+            off.append(off[-1] + len(ids))
+        ids = np.concatenate(chunks) if chunks else np.zeros(0, np.uint64)
+        return LineCellStore(n_order=n_order, off=np.asarray(off, np.int64),
+                             ids=ids)
+    P = len(dataset)
+    off, cells = rasterize.dda_partial_cells_multi(
+        dataset.verts, dataset.nverts, n_order, extent, closed=False)
+    ids = rasterize.xy2d(n_order, cells[:, 0], cells[:, 1])
+    pid = np.repeat(np.arange(P), np.diff(off))
+    shift = np.uint64(1) << np.uint64(2 * n_order)
+    order = np.argsort(pid.astype(np.uint64) * shift + ids)
+    return LineCellStore(n_order=n_order, off=off, ids=ids[order])
 
 
 @register_filter("april")
@@ -67,12 +77,15 @@ class AprilFilter(IntermediateFilter):
 
     def build(self, dataset, *, n_order: int = 10,
               extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
-              side: str = "r", method: str = "batched", **opts
-              ) -> Approximation:
+              side: str = "r", method: str = "batched",
+              build_backend: str = "numpy", **opts) -> Approximation:
+        self._check_build_backend(build_backend)
         if kind == "line":
-            store = build_line_cells(dataset, n_order, extent)
+            store = build_line_cells(dataset, n_order, extent,
+                                     backend=build_backend)
         else:
-            store = build_april(dataset, n_order, extent, method)
+            store = build_april(dataset, n_order, extent, method,
+                                backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=n_order,
                              extent=extent, kind=kind)
 
@@ -147,15 +160,18 @@ class AprilCompressedFilter(AprilFilter):
 
     def build(self, dataset, *, n_order: int = 10,
               extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
-              side: str = "r", method: str = "batched", **opts
-              ) -> Approximation:
+              side: str = "r", method: str = "batched",
+              build_backend: str = "numpy", **opts) -> Approximation:
+        self._check_build_backend(build_backend)
         if kind == "line":
             # the line side has no interval lists to compress; reuse the
             # uncompressed cell-id store
-            store = build_line_cells(dataset, n_order, extent)
+            store = build_line_cells(dataset, n_order, extent,
+                                     backend=build_backend)
         else:
             store = compress.compress_april(
-                build_april(dataset, n_order, extent, method))
+                build_april(dataset, n_order, extent, method,
+                            backend=build_backend))
         return Approximation(filter=self.name, store=store, n_order=n_order,
                              extent=extent, kind=kind)
 

@@ -36,12 +36,17 @@ from ...core.join import INDECISIVE
 from ...core.rasterize import Extent, GLOBAL_EXTENT
 
 __all__ = [
-    "PREDICATES", "BACKENDS", "Approximation", "IntermediateFilter",
+    "PREDICATES", "BACKENDS", "BUILD_BACKENDS", "Approximation",
+    "IntermediateFilter",
     "register_filter", "unregister_filter", "get_filter", "available_filters",
 ]
 
 PREDICATES = ("intersects", "within", "linestring", "selection")
 BACKENDS = ("numpy", "jnp", "pallas")
+#: construction backends (DESIGN.md §6): 'numpy'/'jnp' run the batched
+#: dataset-level build; 'sequential' is the per-object reference loop every
+#: batched build must be store-identical to.
+BUILD_BACKENDS = ("numpy", "jnp", "sequential")
 
 
 @dataclass
@@ -84,6 +89,9 @@ class IntermediateFilter(abc.ABC):
 
         ``kind``: 'polygon' or 'line' (open chains, §4.3.3). ``side`` is a
         hint ('r'/'s') for filters whose encoding differs per join side (RI).
+        Every built-in filter accepts ``build_backend`` (one of
+        ``BUILD_BACKENDS``): 'numpy' (default) / 'jnp' run the batched
+        dataset-level construction, 'sequential' the per-object reference.
         """
 
     # -- filtering ----------------------------------------------------------
@@ -119,6 +127,12 @@ class IntermediateFilter(abc.ABC):
             f"filter {self.name!r} has no mesh-sharded path")
 
     # -- helpers ------------------------------------------------------------
+    @staticmethod
+    def _check_build_backend(build_backend: str) -> None:
+        if build_backend not in BUILD_BACKENDS:
+            raise ValueError(f"unknown build_backend {build_backend!r}; "
+                             f"expected one of {BUILD_BACKENDS}")
+
     @staticmethod
     def _check(predicate: str, backend: str) -> None:
         if predicate not in PREDICATES:

@@ -21,12 +21,14 @@ class FiveCCHFilter(IntermediateFilter):
 
     def build(self, dataset, *, n_order: int = 10,
               extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
-              side: str = "r", **opts) -> Approximation:
+              side: str = "r", build_backend: str = "numpy", **opts
+              ) -> Approximation:
+        self._check_build_backend(build_backend)
         # n_order is unused: 5C+CH is raster-free
         if kind == "line":
-            store = fivec_ch.build_5cch_lines(dataset)
+            store = fivec_ch.build_5cch_lines(dataset, backend=build_backend)
         else:
-            store = fivec_ch.build_5cch(dataset)
+            store = fivec_ch.build_5cch(dataset, backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=None,
                              extent=extent, kind=kind)
 

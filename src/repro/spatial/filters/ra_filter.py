@@ -21,13 +21,16 @@ class RAFilter(IntermediateFilter):
 
     def build(self, dataset, *, n_order: int = 10,
               extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
-              side: str = "r", max_cells: int = 750, **opts
-              ) -> Approximation:
+              side: str = "r", max_cells: int = 750,
+              build_backend: str = "numpy", **opts) -> Approximation:
+        self._check_build_backend(build_backend)
         # n_order is unused: RA grids are per-object, sized by max_cells
         if kind == "line":
-            store = ra.build_ra_lines(dataset, max_cells=max_cells)
+            store = ra.build_ra_lines(dataset, max_cells=max_cells,
+                                      backend=build_backend)
         else:
-            store = ra.build_ra(dataset, max_cells=max_cells)
+            store = ra.build_ra(dataset, max_cells=max_cells,
+                                backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=None,
                              extent=extent, kind=kind)
 

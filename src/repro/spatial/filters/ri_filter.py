@@ -21,15 +21,18 @@ class RIFilter(IntermediateFilter):
 
     def build(self, dataset, *, n_order: int = 10,
               extent: Extent = GLOBAL_EXTENT, kind: str = "polygon",
-              side: str = "r", encoding: str | None = None, **opts
-              ) -> Approximation:
+              side: str = "r", encoding: str | None = None,
+              build_backend: str = "numpy", **opts) -> Approximation:
+        self._check_build_backend(build_backend)
         # opposite per-side encodings skip the XOR re-encoding in the join
         # (§3.3); same-encoding pairs stay correct via the XOR mask.
         enc = encoding or ("R" if side == "r" else "S")
         if kind == "line":
-            store = ri.build_ri_lines(dataset, n_order, extent, enc)
+            store = ri.build_ri_lines(dataset, n_order, extent, enc,
+                                      backend=build_backend)
         else:
-            store = ri.build_ri(dataset, n_order, extent, enc)
+            store = ri.build_ri(dataset, n_order, extent, enc,
+                                backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=n_order,
                              extent=extent, kind=kind)
 

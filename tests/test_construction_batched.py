@@ -1,0 +1,255 @@
+"""Batched dataset-level construction (DESIGN.md §6).
+
+Two contracts:
+
+* the out-of-extent bugfix — `dda_partial_cells` must match the brute-force
+  `classify_window_oracle` for geometry straddling (or missing, or covering)
+  a partition extent, instead of clamping out-of-extent traversal into the
+  border row/column;
+* batched == sequential — for all five filters the `build_backend="numpy"`
+  (and 'jnp') stores must be *store-identical* (intervals / bits / grids /
+  hulls, not just verdicts) to the per-polygon `build_backend="sequential"`
+  reference.
+"""
+import numpy as np
+import pytest
+
+from repro.baselines import fivec_ch
+from repro.baselines import ra as ra_mod
+from repro.core import intervalize, rasterize, ri
+from repro.core.partition import partition_space
+from repro.core.rasterize import Extent
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import get_filter
+
+N_ORDER = 6
+FILTERS = ("april", "april-c", "ri", "ra", "5cch")
+BUILD_OPTS = {"ra": {"max_cells": 96}}
+
+# the ISSUE's regression triangle: crosses the left extent boundary
+TRI = np.array([[-0.5, 0.2], [0.3, 0.2], [0.3, 0.6]])
+
+
+# ---------------------------------------------------------------------------
+# out-of-extent rasterization (the clamping bugfix)
+# ---------------------------------------------------------------------------
+
+def test_dda_out_of_extent_no_clamped_column():
+    """Clamping used to smear the out-of-extent hypotenuse into column 0
+    (partials {3..7}); only the true crossings {3, 7} may remain."""
+    cells = rasterize.dda_partial_cells(TRI, 3, 4)
+    col0 = sorted(int(cy) for cx, cy in cells if cx == 0)
+    assert col0 == [3, 7]
+
+
+def _straddling_cases():
+    ext = Extent(0.25, 0.25, 0.5)
+    ds = make_dataset("T1", seed=21, count=10)
+    cases = [(TRI, 3, rasterize.GLOBAL_EXTENT)]
+    for i in range(len(ds)):
+        # shift polygons toward the extent corners so many straddle it
+        v = ds.polygon(i).copy()
+        v[:, 0] += 0.22 * (i % 3 - 1)
+        v[:, 1] += 0.22 * (i % 5 - 2) / 2
+        cases.append((v, len(v), ext))
+    # fully outside / fully covering
+    cases.append((np.array([[1.2, 1.2], [1.4, 1.2], [1.3, 1.4]]), 3, ext))
+    cases.append((np.array([[0., 0.], [1., 0.], [1., 1.], [0., 1.]]), 4,
+                  Extent(0.4, 0.4, 0.1)))
+    return cases
+
+
+def test_dda_matches_oracle_straddling_extent():
+    for v, n, ext in _straddling_cases():
+        got = set(map(tuple, rasterize.dda_partial_cells(v, n, 5, ext)))
+        want = set(map(tuple,
+                       rasterize.classify_window_oracle(v, n, 5, ext)["partial"]))
+        assert got == want, (v[:2], got ^ want)
+
+
+def test_scanline_matches_oracle_straddling_extent():
+    for v, n, ext in _straddling_cases():
+        partial = rasterize.dda_partial_cells(v, n, 5, ext)
+        full = rasterize.scanline_full_cells(v, n, partial, 5, ext)
+        oracle = rasterize.classify_window_oracle(v, n, 5, ext)
+        assert set(map(tuple, full)) == set(map(tuple, oracle["full"]))
+
+
+def test_onestep_covering_polygon_is_whole_grid():
+    """A polygon enclosing the entire raster area has no Partial cells; the
+    virtual gap [0, 4^N) must classify Full, not drop the object."""
+    ext = Extent(0.4, 0.4, 0.1)
+    big = np.array([[0., 0.], [1., 0.], [1., 1.], [0., 1.]])
+    for method in ("batched", "pips", "neighbors"):
+        a, f = intervalize.onestep(big, 4, 5, ext, method=method)
+        assert a.tolist() == [[0, 4 ** 5]] and f.tolist() == [[0, 4 ** 5]]
+    far = np.array([[1.2, 1.2], [1.4, 1.2], [1.3, 1.4]])
+    a, f = intervalize.onestep(far, 3, 5, ext)
+    assert len(a) == 0 and len(f) == 0
+
+
+# ---------------------------------------------------------------------------
+# batched == sequential, store-level, all five filters
+# ---------------------------------------------------------------------------
+
+def _assert_store_equal(name, s, b):
+    if name in ("april", "april-c") and hasattr(s, "a_bufs"):
+        assert s.a_bufs == b.a_bufs and s.f_bufs == b.f_bufs
+        return
+    if name in ("april", "april-c") and hasattr(s, "a_off"):
+        for f in ("a_off", "a_ints", "f_off", "f_ints"):
+            np.testing.assert_array_equal(getattr(s, f), getattr(b, f), f)
+        return
+    if hasattr(s, "ids"):                      # LineCellStore
+        np.testing.assert_array_equal(s.off, b.off)
+        np.testing.assert_array_equal(s.ids, b.ids)
+        return
+    if name == "ri":
+        for f in ("off", "ints", "bit_off", "bits"):
+            np.testing.assert_array_equal(getattr(s, f), getattr(b, f), f)
+        return
+    if name == "ra":
+        for f in ("k", "origin", "shape"):
+            np.testing.assert_array_equal(getattr(s, f), getattr(b, f), f)
+        assert len(s.cells) == len(b.cells)
+        for i, (x, y) in enumerate(zip(s.cells, b.cells)):
+            np.testing.assert_array_equal(x, y, f"grid {i}")
+        return
+    if name == "5cch":
+        for f in ("pent", "hull_off", "hull_pts"):
+            np.testing.assert_array_equal(getattr(s, f), getattr(b, f), f)
+        return
+    raise AssertionError(f"unknown store for {name}: {type(s)}")
+
+
+@pytest.fixture(scope="module")
+def poly_data():
+    return make_dataset("T1", seed=31, count=50)
+
+
+@pytest.fixture(scope="module")
+def line_data():
+    return make_linestrings(seed=32, count=40)
+
+
+@pytest.mark.parametrize("name", FILTERS)
+def test_batched_build_matches_sequential(poly_data, name):
+    filt = get_filter(name)
+    opts = BUILD_OPTS.get(name, {})
+    seq = filt.build(poly_data, n_order=N_ORDER,
+                     build_backend="sequential", **opts)
+    bat = filt.build(poly_data, n_order=N_ORDER,
+                     build_backend="numpy", **opts)
+    _assert_store_equal(name, seq.store, bat.store)
+
+
+@pytest.mark.parametrize("name", FILTERS)
+def test_batched_line_build_matches_sequential(line_data, name):
+    filt = get_filter(name)
+    opts = BUILD_OPTS.get(name, {})
+    seq = filt.build(line_data, n_order=N_ORDER, kind="line",
+                     build_backend="sequential", **opts)
+    bat = filt.build(line_data, n_order=N_ORDER, kind="line",
+                     build_backend="numpy", **opts)
+    _assert_store_equal(name, seq.store, bat.store)
+
+
+@pytest.mark.parametrize("name", ("april", "ri", "ra"))
+def test_jnp_build_backend_matches_sequential(poly_data, name):
+    pytest.importorskip("jax")
+    filt = get_filter(name)
+    opts = BUILD_OPTS.get(name, {})
+    seq = filt.build(poly_data, n_order=N_ORDER,
+                     build_backend="sequential", **opts)
+    bat = filt.build(poly_data, n_order=N_ORDER, build_backend="jnp", **opts)
+    _assert_store_equal(name, seq.store, bat.store)
+
+
+def test_unknown_build_backend_raises(poly_data):
+    with pytest.raises(ValueError, match="unknown build_backend"):
+        get_filter("april").build(poly_data, n_order=N_ORDER,
+                                  build_backend="cuda")
+
+
+def test_batched_build_on_straddling_dataset():
+    """Per-partition semantics: geometry crossing the raster-area boundary
+    must build identically (and per the oracle) in both paths."""
+    ext = Extent(0.25, 0.25, 0.5)
+    cases = _straddling_cases()
+    V = max(n for _, n, _ in cases)
+    verts = np.zeros((len(cases), V, 2))
+    nv = np.zeros(len(cases), np.int64)
+    for i, (v, n, _) in enumerate(cases):
+        verts[i, :n] = v[:n]
+        nv[i] = n
+    from repro.datagen.synthetic import PolygonDataset
+    ds = PolygonDataset(name="straddle", verts=verts, nverts=nv)
+    seq = ri.build_ri(ds, 5, ext, backend="sequential")
+    bat = ri.build_ri(ds, 5, ext, backend="numpy")
+    for f in ("off", "ints", "bit_off", "bits"):
+        np.testing.assert_array_equal(getattr(seq, f), getattr(bat, f), f)
+
+
+def test_ri_size_bytes_matches_python_loop(poly_data):
+    store = ri.build_ri(poly_data, N_ORDER)
+    code_bytes = 0
+    for g in range(len(store.ints)):
+        nbits = int(store.bit_off[g + 1] - store.bit_off[g])
+        code_bytes += (nbits + 7) // 8
+    want = 4 * 2 * len(store.ints) + code_bytes + 8 * len(store.off)
+    assert store.size_bytes() == want
+
+
+def test_partition_parallel_build_matches_serial():
+    R = make_dataset("T1", seed=41, count=50)
+    S = make_dataset("T2", seed=42, count=60)
+    parting = partition_space([R, S], 2)
+    filt = get_filter("april")
+    serial = parting.build_approx(filt, R, N_ORDER, parallel=False)
+    threaded = parting.build_approx(filt, R, N_ORDER, parallel=True)
+    assert len(serial) == len(threaded)
+    for a, b in zip(serial, threaded):
+        assert (a is None) == (b is None)
+        if a is not None:
+            _assert_store_equal("april", a.store, b.store)
+
+
+def test_ra_fit_grid_multi_matches_scalar():
+    ds = make_dataset("T3", seed=43, count=12)
+    k, side, ox, oy, nx, ny = ra_mod._fit_grid_multi(ds.mbrs, 96,
+                                                     1.0 / (1 << 16))
+    for i in range(len(ds)):
+        ref = ra_mod._fit_grid(ds.mbrs[i], 96, 1.0 / (1 << 16))
+        assert (int(k[i]), float(side[i]), float(ox[i]), float(oy[i]),
+                int(nx[i]), int(ny[i])) == ref
+
+
+def test_box_clip_areas_matches_sequential_clip(poly_data):
+    """The one-shot padded clip (public reference kernel) and the banded
+    row driver must both equal clip_polygon_to_box + polygon_area per row."""
+    from repro.core import geometry
+    rng = np.random.default_rng(7)
+    K = 200
+    pid = rng.integers(0, len(poly_data), K)
+    lo = rng.uniform(-0.01, 1.0, (K, 2))
+    h = rng.uniform(0.001, 0.05, (K, 1))
+    boxes = np.concatenate([lo, lo + h], axis=1)
+    ref = np.zeros(K)
+    for i in range(K):
+        ring = geometry.clip_polygon_to_box(poly_data.polygon(pid[i]),
+                                            tuple(boxes[i]))
+        if len(ring) >= 3:
+            ref[i] = geometry.polygon_area(ring)
+    got = geometry.box_clip_areas(poly_data.verts[pid], poly_data.nverts[pid],
+                                  boxes)
+    np.testing.assert_array_equal(got, ref)
+    got_rows = geometry.box_clip_areas_rows(poly_data.verts,
+                                            poly_data.nverts, pid, boxes)
+    np.testing.assert_array_equal(got_rows, ref)
+
+
+def test_5cch_pentagon_batch_matches_scalar(poly_data):
+    pent = fivec_ch._pentagons_multi(poly_data.verts, poly_data.nverts)
+    for i in range(len(poly_data)):
+        np.testing.assert_array_equal(pent[i],
+                                      fivec_ch._pentagon(poly_data.polygon(i)))

@@ -45,7 +45,11 @@ def test_onestep_f_subset_a():
 
 
 def test_corner_covering_polygon():
-    """Polygon covering the Hilbert-curve origin cell (robustness fix)."""
+    """Polygon covering the Hilbert-curve origin cell (robustness fix).
+
+    The virtual *leading* gap [0, first_partial) has zero length here; it
+    must not split or shift the A-intervals.
+    """
     v = np.array([[0.0, 0.0], [0.4, 0.0], [0.4, 0.4], [0.0, 0.4]]) + 1e-9
     n_order = 5
     partial = rasterize.dda_partial_cells(v, 4, n_order)
@@ -56,3 +60,40 @@ def test_corner_covering_polygon():
     np.testing.assert_array_equal(f_got, f_ref)
     # id 0 must be covered (corner is inside the polygon)
     assert a_got[0, 0] == 0
+
+
+@pytest.mark.parametrize("method", ["batched", "pips", "neighbors"])
+def test_corner_covering_polygon_trailing(method):
+    """Polygon covering the Hilbert curve's LAST cell: the virtual
+    *trailing* gap [last_partial+1, 4^N) has zero length — audit that it
+    cannot split A-intervals either (the `_assemble` zero-length-block
+    exclusion)."""
+    n_order = 5
+    # the curve ends at cell (G-1, 0): cover the bottom-right map corner
+    v = np.array([[0.6, 0.0], [1.0, 0.0], [1.0, 0.4], [0.6, 0.4]])
+    v = np.clip(v, 1e-9, 1 - 1e-9)
+    partial = rasterize.dda_partial_cells(v, 4, n_order)
+    full = rasterize.scanline_full_cells(v, 4, partial, n_order)
+    a_ref, f_ref = intervalize.april_from_cells(partial, full, n_order)
+    a_got, f_got = intervalize.onestep(v, 4, n_order, method=method)
+    np.testing.assert_array_equal(a_got, a_ref)
+    np.testing.assert_array_equal(f_got, f_ref)
+    # the last id 4^N - 1 must be covered (corner cell is inside)
+    assert int(a_got[-1, 1]) == 4 ** n_order
+
+
+def test_both_corners_covered_multi():
+    """Zero-length lead AND trail gaps at once, through the batched
+    dataset-level path (onestep_multi) and the sequential reference."""
+    n_order = 4
+    eps = 1e-9
+    band = np.clip(np.array(
+        [[0.0, 0.0], [1.0, 0.0], [1.0, 0.3], [0.0, 0.3]]), eps, 1 - eps)
+    verts = band[None, :, :]
+    nv = np.array([4])
+    a_off, a_ints, f_off, f_ints = intervalize.onestep_multi(
+        verts, nv, n_order)
+    a_ref, f_ref = intervalize.onestep(band, 4, n_order)
+    np.testing.assert_array_equal(a_ints[a_off[0]:a_off[1]], a_ref)
+    np.testing.assert_array_equal(f_ints[f_off[0]:f_off[1]], f_ref)
+    assert int(a_ref[0, 0]) == 0 and int(a_ref[-1, 1]) == 4 ** n_order
