@@ -1,0 +1,136 @@
+"""BENCH_refine: refinement throughput, sequential vs batched vs pallas.
+
+The refinement stage dominates end-to-end join cost (paper §2) — PR 3 makes
+it batched (DESIGN.md §7). This benchmark times the per-pair sequential
+reference against the batched numpy / jnp / pallas backends for every
+predicate on T1 x T2-scale candidate sets, asserts the backends are
+verdict-identical on a common sample, and persists ``BENCH_refine.json``.
+The ISSUE-3 acceptance gate: >= 5x batched-over-sequential throughput on the
+within and linestring predicates.
+
+The sequential loop is timed on a capped sample (its per-pair cost is rate-
+constant); batched backends run the full candidate set. The pallas backend
+on a non-TPU host runs the kernel in interpret mode — correctness-faithful,
+not performance-faithful — so its pair cap is small and its time is reported
+for completeness only.
+
+``python -m benchmarks.refinement --smoke`` runs a tiny all-backends
+verdict-identity check plus the two boundary-touch regressions (the CI
+quick-lane smoke).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from repro.core import geometry
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import JoinPlan, refine
+
+from .common import ds, lines, row, timeit
+
+SEQ_CAP = 2000      # pairs timed through the per-pair reference loop
+PALLAS_CAP = 256    # pairs through the (interpret-mode) pallas sweep
+
+
+def _sides(predicate):
+    if predicate == "linestring":
+        # enough chains that the candidate set reaches T1xT2 scale
+        return lines(count=1600), ds("T2"), "line"
+    if predicate == "selection":
+        return ds("T2"), ds("T1"), "polygon"   # data x queries
+    return ds("T1"), ds("T2"), "polygon"
+
+
+def _candidates(predicate, R, S, r_kind):
+    plan = JoinPlan(R, S, filter="none", r_kind=r_kind)
+    # MBR-containment candidates are scarce on T1xT2; within throughput is
+    # measured over the full MBR-intersect candidate set instead (refinement
+    # verdicts are defined for any pair batch)
+    pred = "intersects" if predicate == "within" else predicate
+    return plan.candidates(pred)
+
+
+def bench_refinement() -> dict:
+    out = {"datasets": "T1xT2 (bench scale)", "seq_cap": SEQ_CAP,
+           "pallas_cap": PALLAS_CAP, "predicates": {}}
+    for pred in ("intersects", "within", "linestring", "selection"):
+        R, S, r_kind = _sides(pred)
+        pairs = _candidates(pred, R, S, r_kind)
+        n = len(pairs)
+        n_seq = min(n, SEQ_CAP)
+        n_pal = min(n, PALLAS_CAP)
+
+        def run(backend, p):
+            return refine.refine(R, S, p, predicate=pred, backend=backend)
+
+        seq, t_seq = timeit(run, "sequential", pairs[:n_seq])
+        bat, t_np = timeit(run, "numpy", pairs)
+        jn = run("jnp", pairs)     # warm the jit cache on the timed shapes
+        _, t_jnp = timeit(run, "jnp", pairs)
+        pal, t_pal = timeit(run, "pallas", pairs[:n_pal])
+        assert np.array_equal(seq, bat[:n_seq]), f"{pred}: numpy != seq"
+        assert np.array_equal(bat, jn), f"{pred}: jnp != numpy"
+        assert np.array_equal(seq[:n_pal], pal), f"{pred}: pallas != seq"
+
+        rate_seq = n_seq / max(t_seq, 1e-9)
+        rate_np = n / max(t_np, 1e-9)
+        out["predicates"][pred] = {
+            "n_pairs": int(n), "n_seq": int(n_seq), "n_pallas": int(n_pal),
+            "n_hits": int(bat.sum()),
+            "t_seq_s": round(t_seq, 4), "t_numpy_s": round(t_np, 4),
+            "t_jnp_s": round(t_jnp, 4), "t_pallas_s": round(t_pal, 4),
+            "pairs_per_s_seq": round(rate_seq, 1),
+            "pairs_per_s_numpy": round(rate_np, 1),
+            "speedup_numpy": round(rate_np / max(rate_seq, 1e-9), 2),
+            "verdicts_equal": True,
+        }
+    return out
+
+
+def smoke() -> None:
+    """CI quick lane: tiny verdict-identity sweep + boundary regressions."""
+    R = make_dataset("T1", seed=91, count=30)
+    S = make_dataset("T10", seed=92, count=20)
+    L = make_linestrings(seed=93, count=30)
+    for pred in ("intersects", "within", "linestring", "selection"):
+        A = L if pred == "linestring" else R
+        pairs = _candidates(pred, A, S, "line" if pred == "linestring"
+                            else "polygon")
+        want = refine.refine(A, S, pairs, predicate=pred,
+                             backend="sequential")
+        for backend in ("numpy", "jnp", "pallas"):
+            got = refine.refine(A, S, pairs, predicate=pred, backend=backend)
+            assert np.array_equal(want, got), (pred, backend)
+        print(f"refinement smoke ok: {pred} ({len(pairs)} pairs)")
+    # boundary-touch regressions (ISSUE 3): touching containment + concave
+    # within-container — both were false negatives before the fix
+    from repro.datagen.fixtures import (CSHAPE, CSHAPE_INNER, SNAPPED_HOST,
+                                        SNAPPED_TRI)
+    assert geometry.polygons_intersect(SNAPPED_TRI, 3, SNAPPED_HOST, 8)
+    assert geometry.polygon_within(CSHAPE_INNER, 3, CSHAPE, 8)
+    print("refinement smoke ok: boundary-touch regressions")
+
+
+def run():
+    res = bench_refinement()
+    with open("BENCH_refine.json", "w") as f:
+        json.dump(res, f, indent=2)
+    out = []
+    for pred, r in res["predicates"].items():
+        out.append(row(
+            f"refine_{pred}", 1e6 * r["t_numpy_s"] / max(1, r["n_pairs"]),
+            f"t_seq_s={r['t_seq_s']};t_numpy_s={r['t_numpy_s']};"
+            f"t_jnp_s={r['t_jnp_s']};speedup={r['speedup_numpy']}"))
+    return out
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)

@@ -10,8 +10,8 @@ import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
                filter_throughput, granularity, join_order, kernel_bench,
-               linestring, partitioning, selection, size_variance, space,
-               within_join)
+               linestring, partitioning, refinement, selection,
+               size_variance, space, within_join)
 
 SUITES = {
     "table4_space": space,
@@ -29,6 +29,8 @@ SUITES = {
     "kernels": kernel_bench,
     # emits BENCH_filter.json: sequential vs batched verdict throughput
     "filter_throughput": filter_throughput,
+    # emits BENCH_refine.json: sequential vs batched refinement throughput
+    "refinement": refinement,
 }
 
 

@@ -21,8 +21,11 @@ __all__ = [
     "polygon_edges",
     "polygon_mbrs",
     "points_in_polygon",
+    "points_on_polygon_boundary",
+    "points_in_polygon_closed",
     "points_in_polygons_batch",
     "points_in_polygon_rows",
+    "representative_points",
     "segments_intersect",
     "polygons_intersect",
     "polygon_within",
@@ -105,6 +108,89 @@ def points_in_polygon(points: np.ndarray, verts: np.ndarray, n: int | None = Non
     xint = x0 + t * (x1 - x0)
     crossings = np.sum(cond & (xint > x), axis=1)
     return (crossings % 2) == 1
+
+
+def points_on_polygon_boundary(
+    points: np.ndarray, verts: np.ndarray, n: int | None = None
+) -> np.ndarray:
+    """Exact on-boundary test: point collinear with an edge and inside its
+    bounding box. points: [M,2]; verts: [V,2] (optionally padded, pass n).
+    Returns [M] bool."""
+    points = np.asarray(points, dtype=np.float64)
+    verts = np.asarray(verts, dtype=np.float64)
+    if n is not None:
+        verts = verts[: int(n)]
+    x, y = points[:, 0][:, None], points[:, 1][:, None]       # [M,1]
+    x0, y0 = verts[:, 0][None, :], verts[:, 1][None, :]       # [1,V]
+    x1, y1 = np.roll(verts[:, 0], -1)[None, :], np.roll(verts[:, 1], -1)[None, :]
+    d = _orient(x0, y0, x1, y1, x, y)
+    on = ((d == 0)
+          & (np.minimum(x0, x1) <= x) & (x <= np.maximum(x0, x1))
+          & (np.minimum(y0, y1) <= y) & (y <= np.maximum(y0, y1)))
+    return on.any(axis=1)
+
+
+def points_in_polygon_closed(
+    points: np.ndarray, verts: np.ndarray, n: int | None = None
+) -> np.ndarray:
+    """Closed-region PiP: inside by crossing parity OR exactly on the
+    boundary. The crossing-parity test alone can land an on-boundary point
+    on either side; closed-region predicates (touching counts) need this."""
+    return (points_in_polygon(points, verts, n)
+            | points_on_polygon_boundary(points, verts, n))
+
+
+def representative_points(verts: np.ndarray, nverts: np.ndarray) -> np.ndarray:
+    """One guaranteed-interior point per simple polygon. [P,V,2]/[P] -> [P,2].
+
+    O'Rourke's diagonal construction: let b be the extreme vertex along a
+    generic direction (a convex-hull vertex; a generic direction avoids the
+    flat axis-aligned runs map-border clipping produces) with ring
+    neighbours a and c. If no other vertex lies in the closed triangle
+    (a,b,c), its centroid is interior; otherwise the midpoint of b and the
+    in-triangle vertex farthest from line (a,c) is the midpoint of a polygon
+    diagonal, hence interior. Unlike a raw vertex — which may sit
+    (numerically) on another polygon's boundary — the result is bounded away
+    from this polygon's boundary, so crossing-parity tests classify it
+    robustly. Degenerate rings (< 3 vertices, collinear (a,b,c), or a
+    crossing-parity self-check failure) fall back to the first vertex.
+    """
+    verts = np.asarray(verts, np.float64)
+    nverts = np.asarray(nverts, np.int64)
+    P, V, _ = verts.shape
+    if P == 0:
+        return np.zeros((0, 2), np.float64)
+    idx = np.arange(V)[None, :]
+    valid = idx < nverts[:, None]
+    rows = np.arange(P)
+    key = np.where(valid,
+                   verts[..., 0] + 0.5609840165894135 * verts[..., 1], np.inf)
+    b = np.argmin(key, axis=1)
+    n = np.maximum(nverts, 1)
+    a = (b - 1) % n
+    c = (b + 1) % n
+    pa, pb, pc = verts[rows, a], verts[rows, b], verts[rows, c]
+    s = _orient(pa[:, 0], pa[:, 1], pb[:, 0], pb[:, 1], pc[:, 0], pc[:, 1])
+    sgn = np.where(s >= 0, 1.0, -1.0)[:, None]
+    wx, wy = verts[..., 0], verts[..., 1]
+
+    def tri(p, q):
+        return _orient(p[:, None, 0], p[:, None, 1],
+                       q[:, None, 0], q[:, None, 1], wx, wy)
+
+    in_tri = ((sgn * tri(pa, pb) >= 0) & (sgn * tri(pb, pc) >= 0)
+              & (sgn * tri(pc, pa) >= 0) & valid
+              & (idx != a[:, None]) & (idx != b[:, None]) & (idx != c[:, None]))
+    dist = np.where(in_tri, np.abs(tri(pa, pc)), -1.0)
+    q = np.argmax(dist, axis=1)
+    pq = verts[rows, q]
+    has_q = dist[rows, q] > 0
+    rep = np.where(has_q[:, None], (pb + pq) / 2.0, (pa + pb + pc) / 3.0)
+    ok = (nverts >= 3) & (s != 0)
+    # self-check: near-degenerate rings (e.g. zero-area clipped slivers) can
+    # defeat the construction; verify by parity against the own polygon
+    ok &= points_in_polygons_batch(rep[:, None, :], verts, nverts)[:, 0]
+    return np.where(ok[:, None], rep, pb)
 
 
 def points_in_polygons_batch(
@@ -245,10 +331,15 @@ def polygons_intersect(
     )
     if bool(hit.any()):
         return True
-    # containment: any vertex of one inside the other
-    if bool(points_in_polygon(va[:1], vb)[0]):
+    # containment: representative interior points, closed-region classified.
+    # A raw first vertex can sit (numerically) on the other boundary, where
+    # crossing parity may land either side — a false negative on touching
+    # containment.
+    ra = representative_points(va[None], np.asarray([len(va)]))[0]
+    rb = representative_points(vb[None], np.asarray([len(vb)]))[0]
+    if bool(points_in_polygon_closed(ra[None], vb)[0]):
         return True
-    if bool(points_in_polygon(vb[:1], va)[0]):
+    if bool(points_in_polygon_closed(rb[None], va)[0]):
         return True
     return False
 
@@ -258,14 +349,11 @@ def polygon_within(verts_a: np.ndarray, na: int, verts_b: np.ndarray, nb: int) -
     as within (closed-region semantics), matching the paper's within joins."""
     va = np.asarray(verts_a, np.float64)[: int(na)]
     vb = np.asarray(verts_b, np.float64)[: int(nb)]
-    # every vertex of a inside (or on) b ...
-    if not points_in_polygon(va, vb).all():
-        # allow on-boundary vertices: nudge test — reject only clear outsiders
-        eps = 1e-12
-        c = vb.mean(axis=0)
-        nudged = va + (c - va) * eps
-        if not points_in_polygon(nudged, vb).all():
-            return False
+    # every vertex of a inside (or on) b — exact on-boundary classification;
+    # the previous nudge-toward-centroid fallback was unsound for concave
+    # containers (the centroid may be outside; the nudge direction wrong)
+    if not points_in_polygon_closed(va, vb).all():
+        return False
     # ... and no proper boundary crossing
     a0 = va; a1 = np.roll(va, -1, axis=0)
     b0 = vb; b1 = np.roll(vb, -1, axis=0)

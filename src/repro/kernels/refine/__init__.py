@@ -1,1 +1,2 @@
 from .ops import batch_edges_intersect  # noqa: F401
+from .refine import edges_intersect_pallas  # noqa: F401

@@ -21,7 +21,10 @@ def edges_intersect_ref(a0, a1, am, b0, b1, bm, eps: float = 1e-5):
     proper = ((d1 > 0) != (d2 > 0)) & ((d3 > 0) != (d4 > 0))
     scale = (jnp.abs(A1[..., 0] - A0[..., 0]) + jnp.abs(A1[..., 1] - A0[..., 1])
              + jnp.abs(B1[..., 0] - B0[..., 0]) + jnp.abs(B1[..., 1] - B0[..., 1]))
-    tol = eps * scale * scale
+    # scale^2: f32 arithmetic rounding; scale * mag: f64 -> f32 cast error
+    mag = (jnp.maximum(jnp.abs(A0[..., 0]), jnp.abs(A0[..., 1]))
+           + jnp.maximum(jnp.abs(B0[..., 0]), jnp.abs(B0[..., 1])))
+    tol = eps * scale * (scale + mag)
     near0 = (jnp.abs(d1) <= tol) | (jnp.abs(d2) <= tol) \
         | (jnp.abs(d3) <= tol) | (jnp.abs(d4) <= tol)
     boxes = ((jnp.minimum(A0[..., 0], A1[..., 0]) <= jnp.maximum(B0[..., 0], B1[..., 0]) + tol)

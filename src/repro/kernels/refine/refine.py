@@ -50,10 +50,16 @@ def _kernel(a0x_ref, a0y_ref, a1x_ref, a1y_ref, am_ref,
     valid = am[:, :, None] & bm[:, None, :]
     proper = ((d1 > 0) != (d2 > 0)) & ((d3 > 0) != (d4 > 0))
 
-    # relative guard band: |orient| below eps * (edge length scale)^2
+    # relative guard band: |orient| below eps * scale * (scale + mag). The
+    # scale^2 term covers f32 arithmetic rounding; the scale * mag term
+    # covers the f64 -> f32 coordinate cast (an absolute perturbation
+    # ~eps32 * |coord| which enters the orientation multiplied by the edge
+    # length, so short edges far from the origin need the magnitude term).
     scale = (jnp.abs(A1x - A0x) + jnp.abs(A1y - A0y)
              + jnp.abs(B1x - B0x) + jnp.abs(B1y - B0y))
-    tol = eps * scale * scale
+    mag = (jnp.maximum(jnp.abs(A0x), jnp.abs(A0y))
+           + jnp.maximum(jnp.abs(B0x), jnp.abs(B0y)))
+    tol = eps * scale * (scale + mag)
     near0 = (jnp.abs(d1) <= tol) | (jnp.abs(d2) <= tol) \
         | (jnp.abs(d3) <= tol) | (jnp.abs(d4) <= tol)
     # bounding boxes must overlap for a near-collinear touch to matter

@@ -26,14 +26,19 @@ from ..datagen import make_dataset
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.elastic import WorkQueue
 from ..spatial import refine
-from ..spatial.distributed import distributed_filter, make_join_mesh
+from ..spatial.distributed import (distributed_filter, distributed_refine,
+                                   make_join_mesh)
 from ..spatial.filters import get_filter
 from ..spatial.mbr_join import mbr_join
 
 
 def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
-                   backend: str = "jnp"):
-    """Filter + refine all candidate pairs owned by partition ``pidx``."""
+                   backend: str = "jnp", refine_backend: str = "numpy"):
+    """Filter + refine all candidate pairs owned by partition ``pidx``.
+
+    ``refine_backend='jnp'`` refines the indecisive remainder sharded over
+    the mesh (verdicts stay sharded end-to-end, DESIGN.md §7); other
+    backends run the batched host refinement."""
     part = parting.partitions[pidx]
     ridx = part.obj_idx[R.name]
     sidx = part.obj_idx[S.name]
@@ -62,7 +67,12 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
     indec = local_pairs[verd == INDECISIVE]
     if len(indec):
         glob = np.stack([ridx[indec[:, 0]], sidx[indec[:, 1]]], axis=1)
-        ref = refine.refine_pairs(R, S, glob)
+        if refine_backend == "jnp":
+            ref, rcounts = distributed_refine(R, S, glob, mesh=mesh)
+            counts = {**counts, **rcounts}
+        else:
+            ref = refine.refine_pairs(R, S, glob, backend=refine_backend)
+            counts = {**counts, "refined_true": int(ref.sum())}
         results.append(glob[ref])
     if len(hits):
         results.append(np.stack([ridx[hits[:, 0]], sidx[hits[:, 1]]], axis=1))
@@ -73,7 +83,7 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
 
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
              seed=0, count_r=None, count_s=None, mesh=None, method="april",
-             backend="jnp"):
+             backend="jnp", refine_backend="numpy"):
     filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
@@ -97,14 +107,16 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
 
     queue = WorkQueue([p for p in range(len(parting)) if p not in done],
                       lease_seconds=600)
-    totals = {"true_neg": 0, "true_hit": 0, "indecisive": 0}
+    totals = {"true_neg": 0, "true_hit": 0, "indecisive": 0,
+              "refined_true": 0}
     t0 = time.perf_counter()
     while not queue.finished:
         p = queue.acquire()
         if p is None:
             break
         res, counts = join_partition(R, S, approx_r, approx_s, parting, p,
-                                     mesh, filt, backend=backend)
+                                     mesh, filt, backend=backend,
+                                     refine_backend=refine_backend)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -135,10 +147,14 @@ def main():
                     help="intermediate filter: none/april/april-c/ri/ra/5cch")
     ap.add_argument("--backend", default="jnp",
                     help="verdict backend: numpy/jnp/pallas")
+    ap.add_argument("--refine-backend", default="numpy",
+                    help="refinement backend: numpy/jnp/pallas/sequential "
+                         "(jnp refines sharded over the mesh)")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
-             count_s=args.count_s, method=args.method, backend=args.backend)
+             count_s=args.count_s, method=args.method, backend=args.backend,
+             refine_backend=args.refine_backend)
 
 
 if __name__ == "__main__":

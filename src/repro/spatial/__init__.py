@@ -4,6 +4,7 @@ from .filters import (  # noqa: F401
     register_filter,
 )
 from .plan import JoinPlan, JoinStats  # noqa: F401
+from .refine import REFINE_BACKENDS  # noqa: F401
 from .pipeline import (  # noqa: F401
     spatial_intersection_join, spatial_within_join,
     polygon_linestring_join, selection_queries,

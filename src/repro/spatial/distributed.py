@@ -37,7 +37,7 @@ from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG, pack_lists
 __all__ = [
     "PackedPairs", "pack_pair_batch", "bucket_pairs",
     "april_filter_kernel_jnp", "distributed_april_filter",
-    "distributed_filter", "make_join_mesh",
+    "distributed_filter", "distributed_refine", "make_join_mesh",
 ]
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
@@ -202,3 +202,91 @@ def distributed_filter(filt, approx_r, approx_s, pairs: np.ndarray,
               "true_hit": int(np.sum(verd == TRUE_HIT)),
               "indecisive": int(np.sum(verd == INDECISIVE))}
     return verd, counts
+
+
+# ---------------------------------------------------------------------------
+# Sharded refinement (DESIGN.md §7): the indecisive remainder stays sharded
+# ---------------------------------------------------------------------------
+
+_REFINE_STEP_CACHE: dict = {}
+
+
+def _refine_shard_step(body, mesh, n_args):
+    key = (body, mesh, n_args)
+    if key in _REFINE_STEP_CACHE:
+        return _REFINE_STEP_CACHE[key]
+    specs = tuple(P("data") for _ in range(n_args)) + (P("data"),)
+
+    @partial(shard_map, mesh=mesh, in_specs=specs,
+             out_specs=(P("data"), P("data"), P()))
+    def step(*xs):
+        *geom, v = xs
+        res, unc = body(*geom)
+        res = res & v
+        unc = unc & v
+        return res, unc, jax.lax.psum(jnp.sum(res & ~unc), "data")
+
+    _REFINE_STEP_CACHE[key] = jax.jit(step)
+    return _REFINE_STEP_CACHE[key]
+
+
+def distributed_refine(R, S, pairs: np.ndarray,
+                       predicate: str = "intersects",
+                       mesh: Mesh | None = None):
+    """Refine indecisive candidate pairs sharded over the mesh 'data' axis.
+
+    Pairs are processed in vertex-count-bucketed chunks (the padded
+    [N, Er, Es] working set stays bounded, as on the host backends); each
+    device runs the batched jnp refinement core (f64 under ``enable_x64``)
+    on its shard, and the count of device-decided hits is psum-reduced on
+    device (one scalar per chunk crosses the network). Pairs whose sign
+    evaluations fall inside the FMA guard band come back uncertain and are
+    re-run on host, so the final verdicts are identical to the host
+    backends. Returns (results [N] bool, counts dict).
+    """
+    from . import refine as refine_mod
+    from jax.experimental import enable_x64
+
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, bool), {"refined_true": 0}
+    mesh = mesh or make_join_mesh()
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    intersectsish = predicate not in ("within", "linestring")
+    body = (refine_mod._within_impl_jnp if predicate == "within"
+            else refine_mod._line_impl_jnp if predicate == "linestring"
+            else refine_mod._intersects_impl_jnp)
+    if intersectsish:
+        rep_r = refine_mod._reps(R, pairs[:, 0])
+        rep_s = refine_mod._reps(S, pairs[:, 1])
+
+    out = np.zeros(N, bool)
+    n_true = 0
+    for sel, p, vr, nr, vs, ns in refine_mod.iter_pair_chunks(R, S, pairs):
+        Bp = max(n_dev, ((len(p) + n_dev - 1) // n_dev) * n_dev)
+
+        def pad(x, fill=0):
+            if len(x) == Bp:
+                return x
+            ext = np.full((Bp - len(x),) + x.shape[1:], fill, x.dtype)
+            return np.concatenate([x, ext], axis=0)
+
+        args = [pad(vr), pad(nr), pad(vs), pad(ns)]
+        if intersectsish:
+            args += [pad(rep_r[sel]), pad(rep_s[sel])]
+        valid = pad(np.ones(len(p), bool), False)
+
+        step = _refine_shard_step(body, mesh, len(args))
+        with enable_x64():
+            res, unc, count = step(*[jnp.asarray(a) for a in args],
+                                   jnp.asarray(valid))
+        res = np.array(res)[: len(p)]             # writable copy
+        unc = np.asarray(unc)[: len(p)]
+        n_true += int(count)
+        if unc.any():      # guard-band pairs: exact host re-check
+            res[unc] = refine_mod.refine(R, S, p[unc], predicate=predicate,
+                                         backend="numpy")
+            n_true += int(res[unc].sum())
+        out[sel] = res
+    return out, {"refined_true": n_true}

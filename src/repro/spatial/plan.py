@@ -33,6 +33,7 @@ class JoinStats:
     method: str
     predicate: str = "intersects"
     backend: str = "numpy"
+    refine_backend: str = "numpy"
     n_candidates: int = 0
     n_true_hits: int = 0
     n_true_negs: int = 0
@@ -58,8 +59,8 @@ class JoinStats:
         h, g, i = self.rates()
         return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
                 f"mbr={self.t_mbr:.3f}s filter={self.t_filter:.3f}s "
-                f"refine={self.t_refine:.3f}s total={self.t_total:.3f}s "
-                f"results={self.n_results}")
+                f"refine={self.t_refine:.3f}s[{self.refine_backend}] "
+                f"total={self.t_total:.3f}s results={self.n_results}")
 
 
 def _apply_verdicts(stats: JoinStats, verdicts: np.ndarray) -> None:
@@ -75,21 +76,27 @@ class JoinPlan:
     :class:`IntermediateFilter` instance; ``backend`` selects the verdict
     execution path (``numpy`` | ``jnp`` | ``pallas``). ``r_kind``/``s_kind``
     mark a side as 'line' (open chains) for the linestring predicate.
+    ``refine_backend`` selects the execution path of the final exact-geometry
+    stage (``numpy`` | ``jnp`` | ``pallas`` | ``sequential``, DESIGN.md §7) —
+    every backend is verdict-identical to the sequential per-pair reference.
     ``build_opts`` go to ``filter.build`` (e.g. ``max_cells`` for RA,
     ``method`` for APRIL construction); ``filter_opts`` go to every
     ``filter.verdicts`` call (e.g. ``order`` for APRIL).
     """
 
     def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
-                 backend: str = "numpy", n_order: int = 10,
+                 backend: str = "numpy", refine_backend: str = "numpy",
+                 n_order: int = 10,
                  extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
                  s_kind: str = "polygon", mbr_grid: int = 32,
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
+        refine._check_backend(refine_backend)
         self.R = R
         self.S = S
         self.filter = get_filter(filter)
         self.backend = backend
+        self.refine_backend = refine_backend
         self.n_order = n_order
         self.extent = extent
         self.r_kind = r_kind
@@ -159,11 +166,8 @@ class JoinPlan:
     def _refine(self, predicate: str, pairs: np.ndarray) -> np.ndarray:
         if len(pairs) == 0:
             return np.zeros(0, bool)
-        if predicate == "within":
-            return refine.refine_within_pairs(self.R, self.S, pairs)
-        if predicate == "linestring":
-            return refine.refine_line_poly_pairs(self.R, self.S, pairs)
-        return refine.refine_pairs(self.R, self.S, pairs)
+        return refine.refine(self.R, self.S, pairs, predicate=predicate,
+                             backend=self.refine_backend)
 
     def execute(self, predicate: str = "intersects",
                 ) -> tuple[np.ndarray, JoinStats]:
@@ -183,7 +187,8 @@ class JoinPlan:
         if self.approx_r is None or self.approx_s is None:
             self.build()
         stats = JoinStats(method=self.filter.name, predicate=predicate,
-                          backend=self.backend)
+                          backend=self.backend,
+                          refine_backend=self.refine_backend)
         stats.t_build = self._t_build
         stats.approx_bytes = (self.approx_r.size_bytes()
                               + self.approx_s.size_bytes())

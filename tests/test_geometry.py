@@ -64,3 +64,65 @@ def test_clip_polygon_to_box():
     assert np.isclose(geometry.polygon_area(clipped), 0.09)
     empty = geometry.clip_polygon_to_box(SQUARE, (0.9, 0.9, 1.0, 1.0))
     assert len(empty) == 0
+
+
+def test_points_on_polygon_boundary():
+    pts = np.array([[0.5, 0.2], [0.8, 0.5], [0.2, 0.2], [0.5, 0.5],
+                    [0.5, 0.19999]])
+    got = geometry.points_on_polygon_boundary(pts, SQUARE)
+    np.testing.assert_array_equal(got, [True, True, True, False, False])
+
+
+def test_points_in_polygon_closed_on_all_edges():
+    # the open crossing-parity test lands on-boundary points on either side
+    # (here: the top edge classifies outside); the closed test never does
+    on_edges = np.array([[0.5, 0.2], [0.8, 0.5], [0.5, 0.8], [0.2, 0.5]])
+    assert not geometry.points_in_polygon(on_edges, SQUARE).all()
+    assert geometry.points_in_polygon_closed(on_edges, SQUARE).all()
+
+
+def test_representative_points_interior():
+    from repro.datagen import make_dataset
+    for name in ("T1", "T3", "T10"):
+        D = make_dataset(name, seed=5, count=40)
+        reps = geometry.representative_points(D.verts, D.nverts)
+        for i in range(len(D)):
+            assert (geometry.points_in_polygon(
+                        reps[i: i + 1], D.verts[i], D.nverts[i])[0]
+                    or geometry.points_on_polygon_boundary(
+                        reps[i: i + 1], D.verts[i], D.nverts[i])[0]), \
+                (name, i)
+    # concave U-shape: the vertex centroid is outside, the rep must not be
+    U = np.array([[0., 0.], [10., 0.], [10., 10.], [8., 10.],
+                  [8., 2.], [2., 2.], [2., 10.], [0., 10.]])
+    rep = geometry.representative_points(U[None], np.array([8]))[0]
+    assert geometry.points_in_polygon_closed(rep[None], U)[0]
+
+
+def test_regression_polygons_intersect_snapped_vertex():
+    """ISSUE 3: first vertex snapped onto a diagonal edge of the container
+    refined False (sweep misses, parity misclassifies); exact-rational truth
+    on the stored floats is True."""
+    from repro.datagen.fixtures import SNAPPED_HOST, SNAPPED_TRI
+    assert geometry.polygons_intersect(SNAPPED_TRI, 3, SNAPPED_HOST, 8)
+    assert geometry.polygons_intersect(SNAPPED_HOST, 8, SNAPPED_TRI, 3)
+
+
+def test_regression_polygon_within_concave_container():
+    """ISSUE 3: the centroid-nudge on-boundary fallback was unsound for
+    concave containers (centroid in the cavity -> nudge direction exits)."""
+    from repro.datagen.fixtures import CSHAPE, CSHAPE_INNER
+    cshape, inner = CSHAPE, CSHAPE_INNER
+    assert geometry.polygon_within(inner, 3, cshape, 8)
+    assert not geometry.polygon_within(inner + np.array([0., 2.5]), 3,
+                                       cshape, 8)
+    # touching containment against a convex container, one per edge
+    sq = np.array([[0., 0.], [10., 0.], [10., 10.], [0., 10.]])
+    touching = (
+        np.array([[6., 1.5], [7., 0.], [5., 0.]]),      # bottom edge
+        np.array([[6., 10.], [7., 8.5], [5., 8.5]]),    # top edge
+        np.array([[1.5, 6.], [0., 7.], [0., 5.]]),      # left edge
+        np.array([[8.5, 6.], [10., 7.], [10., 5.]]),    # right edge
+    )
+    for t in touching:
+        assert geometry.polygon_within(t, 3, sq, 4), t

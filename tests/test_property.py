@@ -138,3 +138,47 @@ def test_filter_soundness_property(pa, pb):
         assert truth
     elif v == TRUE_NEG:
         assert not truth
+
+
+# --- batched refinement (DESIGN.md §7) ------------------------------------
+
+def _pair_datasets(pa, pb):
+    from repro.datagen.synthetic import PolygonDataset
+    V = max(len(pa), len(pb))
+    def one(p):
+        verts = np.zeros((1, V, 2))
+        verts[0, : len(p)] = p
+        return PolygonDataset(name="h", verts=verts,
+                              nverts=np.asarray([len(p)], np.int64))
+    return one(pa), one(pb)
+
+
+@given(polygon(), polygon(), st.booleans(), st.integers(0, 63))
+@settings(max_examples=40, deadline=None)
+def test_batched_refine_equals_sequential_property(pa, pb, snap, k):
+    """Batched refinement is verdict-identical to the per-pair f64 oracle
+    for ANY polygon pair — including pairs with a vertex of one snapped
+    onto a boundary edge of the other (the touching regime)."""
+    from repro.spatial import refine
+    if snap:
+        e = k % len(pb)
+        t = (k / 64.0) or 0.5
+        p0, p1 = pb[e], pb[(e + 1) % len(pb)]
+        pa = pa.copy()
+        pa[k % len(pa)] = p0 + t * (p1 - p0)
+    R, S = _pair_datasets(pa, pb)
+    pairs = np.asarray([[0, 0]], np.int64)
+    want_i = refine.refine_pairs_seq(R, S, pairs)
+    got_i = refine.refine_pairs(R, S, pairs)
+    np.testing.assert_array_equal(got_i, want_i)
+    want_w = refine.refine_within_pairs_seq(R, S, pairs)
+    got_w = refine.refine_within_pairs(R, S, pairs)
+    np.testing.assert_array_equal(got_w, want_w)
+
+
+@given(polygon())
+@settings(max_examples=40, deadline=None)
+def test_representative_point_interior_property(p):
+    rep = geometry.representative_points(p[None], np.asarray([len(p)]))[0]
+    assert (geometry.points_in_polygon(rep[None], p)[0]
+            or geometry.points_on_polygon_boundary(rep[None], p)[0])
