@@ -1,0 +1,108 @@
+"""BENCH_mbr: candidate-generation throughput, sequential vs batched.
+
+The MBR filter (paper §2) was the pipeline's last per-object interpreted
+hot path — DESIGN.md §8 makes it a batched partitioned grid-hash join.
+This benchmark times the per-object/per-bucket ``sequential`` reference
+against the batched ``numpy`` / ``jnp`` backends on T1 x T2-scale MBR sets
+(both the adaptive grid and the legacy fixed grid=32), asserts the
+backends emit identical pair sets, and persists ``BENCH_mbr.json``. The
+ISSUE-4 acceptance gate: >= 5x batched-over-sequential at T1 x T2 scale.
+
+``python -m benchmarks.mbr_join --smoke`` runs a tiny all-backends
+pair-set identity check, including the translated/scaled extent
+regression (the CI quick-lane smoke).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from repro.datagen import make_dataset
+from repro.spatial.distributed import distributed_mbr_join
+from repro.spatial.mbr_join import (MBR_BACKENDS, adaptive_grid,
+                                    mbr_intersect_mask, mbr_join)
+
+from .common import ds, row, timeit
+
+REPEATS = 5
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).tolist()))
+
+
+def bench_mbr_join() -> dict:
+    R, S = ds("T1"), ds("T2")
+    mr, ms = R.mbrs, S.mbrs
+    out = {"datasets": "T1xT2 (bench scale)", "n_r": len(mr), "n_s": len(ms),
+           "adaptive_grid": adaptive_grid(mr, ms), "grids": {}}
+    oracle = _pairs_set(np.stack(np.nonzero(mbr_intersect_mask(mr, ms)),
+                                 axis=1))
+    for label, grid in (("adaptive", None), ("fixed32", 32)):
+        res = {}
+        sets = {}
+        for backend in MBR_BACKENDS:
+            if backend == "jnp":   # warm the jit cache on the timed shapes
+                mbr_join(mr, ms, grid=grid, backend=backend)
+            pairs, t = timeit(mbr_join, mr, ms, grid=grid, backend=backend,
+                              repeats=REPEATS)
+            sets[backend] = _pairs_set(pairs)
+            res[f"t_{backend}_s"] = round(t, 5)
+        assert all(s == oracle for s in sets.values()), "pair-set mismatch"
+        n = len(oracle)
+        rate_seq = n / max(res["t_sequential_s"], 1e-9)
+        rate_np = n / max(res["t_numpy_s"], 1e-9)
+        res.update({
+            "n_pairs": n,
+            "pairs_per_s_seq": round(rate_seq, 1),
+            "pairs_per_s_numpy": round(rate_np, 1),
+            "speedup_numpy": round(res["t_sequential_s"]
+                                   / max(res["t_numpy_s"], 1e-9), 2),
+            "speedup_jnp": round(res["t_sequential_s"]
+                                 / max(res["t_jnp_s"], 1e-9), 2),
+            "pair_sets_equal": True,
+        })
+        out["grids"][label] = res
+    return out
+
+
+def smoke() -> None:
+    """CI quick lane: tiny pair-set identity sweep + extent regression."""
+    R = make_dataset("T1", seed=81, count=40)
+    S = make_dataset("T2", seed=82, count=60)
+    for scale, shift in ((1.0, 0.0), (50.0, 300.0), (1e-3, 2.0)):
+        mr = R.mbrs * scale + shift
+        ms = S.mbrs * scale + shift
+        want = _pairs_set(np.stack(np.nonzero(mbr_intersect_mask(mr, ms)),
+                                   axis=1))
+        for backend in MBR_BACKENDS:
+            got = _pairs_set(mbr_join(mr, ms, backend=backend))
+            assert got == want, (backend, scale, shift)
+        got, counts = distributed_mbr_join(mr, ms)
+        assert _pairs_set(got) == want and counts["mbr_pairs"] == len(want)
+        print(f"mbr smoke ok: scale={scale} shift={shift} "
+              f"({len(want)} pairs, all backends + distributed)")
+
+
+def run():
+    res = bench_mbr_join()
+    with open("BENCH_mbr.json", "w") as f:
+        json.dump(res, f, indent=2)
+    out = []
+    for label, r in res["grids"].items():
+        out.append(row(
+            f"mbr_join_{label}", 1e6 * r["t_numpy_s"],
+            f"t_seq_s={r['t_sequential_s']};t_numpy_s={r['t_numpy_s']};"
+            f"t_jnp_s={r['t_jnp_s']};speedup={r['speedup_numpy']}"))
+    return out
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)

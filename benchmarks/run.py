@@ -10,7 +10,7 @@ import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
                filter_throughput, granularity, join_order, kernel_bench,
-               linestring, partitioning, refinement, selection,
+               linestring, mbr_join, partitioning, refinement, selection,
                size_variance, space, within_join)
 
 SUITES = {
@@ -31,6 +31,8 @@ SUITES = {
     "filter_throughput": filter_throughput,
     # emits BENCH_refine.json: sequential vs batched refinement throughput
     "refinement": refinement,
+    # emits BENCH_mbr.json: sequential vs batched candidate generation
+    "mbr_join": mbr_join,
 }
 
 

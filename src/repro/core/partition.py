@@ -24,7 +24,8 @@ import numpy as np
 from .april import AprilStore, build_april
 from .rasterize import Extent
 
-__all__ = ["Partitioning", "partition_space", "reference_partition"]
+__all__ = ["Partitioning", "partition_space", "reference_partition",
+           "reference_partitions"]
 
 
 def _parallel_map(fn, items, parallel: bool, max_workers: int | None = None):
@@ -131,9 +132,17 @@ def partition_space(datasets, parts_per_dim: int) -> Partitioning:
 def reference_partition(parts_per_dim: int, mbr_r: np.ndarray, mbr_s: np.ndarray) -> int:
     """Index of the partition owning the candidate pair (reference-point rule
     on the common MBR's bottom-left corner)."""
-    rx = max(float(mbr_r[0]), float(mbr_s[0]))
-    ry = max(float(mbr_r[1]), float(mbr_s[1]))
+    return int(reference_partitions(
+        parts_per_dim, np.asarray(mbr_r, np.float64)[None],
+        np.asarray(mbr_s, np.float64)[None])[0])
+
+
+def reference_partitions(parts_per_dim: int, mbrs_r: np.ndarray,
+                         mbrs_s: np.ndarray) -> np.ndarray:
+    """Batched reference-point ownership for paired [N,4] MBR arrays."""
     k = parts_per_dim
-    tx = min(int(rx * k), k - 1)
-    ty = min(int(ry * k), k - 1)
+    rx = np.maximum(mbrs_r[:, 0], mbrs_s[:, 0])
+    ry = np.maximum(mbrs_r[:, 1], mbrs_s[:, 1])
+    tx = np.minimum((rx * k).astype(np.int64), k - 1)
+    ty = np.minimum((ry * k).astype(np.int64), k - 1)
     return ty * k + tx

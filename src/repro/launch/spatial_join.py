@@ -26,16 +26,20 @@ from ..datagen import make_dataset
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.elastic import WorkQueue
 from ..spatial import refine
-from ..spatial.distributed import (distributed_filter, distributed_refine,
-                                   make_join_mesh)
+from ..spatial.distributed import (distributed_filter, distributed_mbr_join,
+                                   distributed_refine, make_join_mesh)
 from ..spatial.filters import get_filter
 from ..spatial.mbr_join import mbr_join
 
 
 def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
-                   backend: str = "jnp", refine_backend: str = "numpy"):
+                   backend: str = "jnp", refine_backend: str = "numpy",
+                   mbr_backend: str = "numpy"):
     """Filter + refine all candidate pairs owned by partition ``pidx``.
 
+    ``mbr_backend='jnp'`` generates the partition's candidates sharded over
+    the mesh (DESIGN.md §8, bucket cross-product rows sharded, pair lists
+    gathered); other values run the host grid-hash join.
     ``refine_backend='jnp'`` refines the indecisive remainder sharded over
     the mesh (verdicts stay sharded end-to-end, DESIGN.md §7); other
     backends run the batched host refinement."""
@@ -48,14 +52,18 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
     if filt.name != "none" and (ar is None or as_ is None):
         return np.zeros((0, 2), np.int64), {}
 
-    local_pairs = mbr_join(R.mbrs[ridx], S.mbrs[sidx])
+    if mbr_backend == "jnp":
+        local_pairs, _ = distributed_mbr_join(R.mbrs[ridx], S.mbrs[sidx],
+                                              mesh=mesh)
+    else:
+        local_pairs = mbr_join(R.mbrs[ridx], S.mbrs[sidx],
+                               backend=mbr_backend)
     if len(local_pairs) == 0:
         return np.zeros((0, 2), np.int64), {}
     # ownership: reference point must fall inside this partition's tile
-    own = np.asarray([
-        partition_mod.reference_partition(
-            parting.parts_per_dim, R.mbrs[ridx[i]], S.mbrs[sidx[j]]) == pidx
-        for i, j in local_pairs])
+    own = partition_mod.reference_partitions(
+        parting.parts_per_dim, R.mbrs[ridx[local_pairs[:, 0]]],
+        S.mbrs[sidx[local_pairs[:, 1]]]) == pidx
     local_pairs = local_pairs[own]
     if len(local_pairs) == 0:
         return np.zeros((0, 2), np.int64), {}
@@ -83,7 +91,7 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
 
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
              seed=0, count_r=None, count_s=None, mesh=None, method="april",
-             backend="jnp", refine_backend="numpy"):
+             backend="jnp", refine_backend="numpy", mbr_backend="numpy"):
     filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
@@ -116,7 +124,8 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
             break
         res, counts = join_partition(R, S, approx_r, approx_s, parting, p,
                                      mesh, filt, backend=backend,
-                                     refine_backend=refine_backend)
+                                     refine_backend=refine_backend,
+                                     mbr_backend=mbr_backend)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -150,11 +159,15 @@ def main():
     ap.add_argument("--refine-backend", default="numpy",
                     help="refinement backend: numpy/jnp/pallas/sequential "
                          "(jnp refines sharded over the mesh)")
+    ap.add_argument("--mbr-backend", default="numpy",
+                    help="candidate-generation backend: numpy/jnp/sequential "
+                         "(jnp generates candidates sharded over the mesh)")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
              count_s=args.count_s, method=args.method, backend=args.backend,
-             refine_backend=args.refine_backend)
+             refine_backend=args.refine_backend,
+             mbr_backend=args.mbr_backend)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-from .mbr_join import mbr_join  # noqa: F401
+from .mbr_join import MBR_BACKENDS, adaptive_grid, mbr_join  # noqa: F401
 from .filters import (  # noqa: F401
     Approximation, IntermediateFilter, available_filters, get_filter,
     register_filter,

@@ -1,19 +1,28 @@
-"""Distributed spatial-join filtering (shard_map over the device mesh).
+"""Distributed spatial-join execution (shard_map over the device mesh).
 
-The join is partition-parallel (paper §5.2 + DESIGN.md §4): candidate pairs
-are packed into padded, *bucketed* batches (bucketing by interval-list width
-bounds padding waste and is the primary load-balance/straggler lever), then
-dispatched across the mesh's data axes with ``shard_map``. Each device runs
-the three interval joins as one fused, branch-free vectorized pass. Counts
-are reduced with ``psum``; verdicts stay sharded for the refinement stage.
+The join is partition-parallel (paper §5.2 + DESIGN.md §4), and every
+pipeline stage has a mesh-sharded batched path:
 
-:func:`distributed_filter` is the filter-agnostic entry point: filters that
-declare ``supports_mesh`` (APRIL) ship their packed batches through the mesh
-kernel; every other registered filter runs its batched ``verdicts`` on host
-— so the distributed launcher works for all of
-``none/april/april-c/ri/ra/5cch``.
+* **Candidate generation** (:func:`distributed_mbr_join`, DESIGN.md §8):
+  the host builds the flat co-bucket cross-product rows of the grid-hash
+  MBR join; the rows shard across the mesh 'data' axis, each device
+  evaluates its shard's intersection + reference-point ownership mask,
+  qualifying counts psum-reduce on device, and the gathered mask emits
+  the duplicate-free pair list on host.
+* **Filtering** (:func:`distributed_filter`, §3/§4): candidate pairs pack
+  into padded, *bucketed* batches (bucketing by interval-list width bounds
+  padding waste and is the primary load-balance/straggler lever) and
+  dispatch with ``shard_map``; each device runs the three interval joins
+  as one fused, branch-free vectorized pass. Filters that declare
+  ``supports_mesh`` (APRIL) ship packed batches through the mesh kernel;
+  every other registered filter runs its batched host ``verdicts`` — the
+  launcher works for all of ``none/april/april-c/ri/ra/5cch``. Counts are
+  psum-reduced; verdicts stay sharded for refinement.
+* **Refinement** (:func:`distributed_refine`, §7): indecisive pairs refine
+  sharded in vertex-count-bucketed chunks, guard-band-uncertain pairs
+  escalating to the host, so verdicts equal the sequential oracle.
 
-The same step function lowers on the production meshes (16x16 and 2x16x16)
+The same step functions lower on the production meshes (16x16 and 2x16x16)
 — exercised by ``launch/dryrun.py --arch april_join``.
 """
 from __future__ import annotations
@@ -37,7 +46,8 @@ from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG, pack_lists
 __all__ = [
     "PackedPairs", "pack_pair_batch", "bucket_pairs",
     "april_filter_kernel_jnp", "distributed_april_filter",
-    "distributed_filter", "distributed_refine", "make_join_mesh",
+    "distributed_filter", "distributed_mbr_join", "distributed_refine",
+    "make_join_mesh",
 ]
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
@@ -202,6 +212,72 @@ def distributed_filter(filt, approx_r, approx_s, pairs: np.ndarray,
               "true_hit": int(np.sum(verd == TRUE_HIT)),
               "indecisive": int(np.sum(verd == INDECISIVE))}
     return verd, counts
+
+
+# ---------------------------------------------------------------------------
+# Sharded candidate generation (DESIGN.md §8): bucket cross-product rows
+# shard across the mesh; the gathered ownership mask emits the pair list
+# ---------------------------------------------------------------------------
+
+_MBR_STEP_CACHE: dict = {}
+
+
+def _mbr_shard_step(mesh):
+    if mesh in _MBR_STEP_CACHE:
+        return _MBR_STEP_CACHE[mesh]
+    specs = (P(), P(), P(), P()) + tuple(P("data") for _ in range(5))
+
+    from .mbr_join import pair_mask_body
+
+    @partial(shard_map, mesh=mesh, in_specs=specs, out_specs=(P("data"), P()))
+    def step(mr, ms, lor, los, ri, si, ox, oy, v):
+        keep = pair_mask_body(jnp, mr, ms, lor, los, ri, si, ox, oy) & v
+        return keep, jax.lax.psum(jnp.sum(keep), "data")
+
+    _MBR_STEP_CACHE[mesh] = jax.jit(step)
+    return _MBR_STEP_CACHE[mesh]
+
+
+def distributed_mbr_join(mbrs_r: np.ndarray, mbrs_s: np.ndarray,
+                         grid: int | None = None, mesh: Mesh | None = None):
+    """MBR candidate generation sharded over the mesh 'data' axis.
+
+    The host runs the cheap O(N) stages of the §8 grid-hash join (bucket
+    expansion, sort-merge over the bucket tables); the O(candidates)
+    cross-product rows are padded to the device count and sharded, each
+    device evaluates its shard's intersection + reference-point ownership
+    mask against the replicated MBR/cell tables (f64 under ``enable_x64``),
+    and the qualifying count psum-reduces on device. The gathered mask
+    emits the pair list on host — identical to ``mbr_join`` on every
+    backend. Returns (pairs [K,2] int64, counts dict).
+    """
+    from .mbr_join import _pad_rows_pow2, _prepare, candidate_rows
+    from jax.experimental import enable_x64
+
+    mbrs_r, mbrs_s, k, extent = _prepare(mbrs_r, mbrs_s, grid)
+    if k == 0:
+        return np.zeros((0, 2), np.int64), {"mbr_candidates": 0,
+                                            "mbr_pairs": 0}
+    ri, si, own_x, own_y, lo_r, lo_s = candidate_rows(mbrs_r, mbrs_s, k,
+                                                      extent)
+    if len(ri) == 0:
+        return np.zeros((0, 2), np.int64), {"mbr_candidates": 0,
+                                            "mbr_pairs": 0}
+    mesh = mesh or make_join_mesh()
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    # replicated tables pad to powers of two as well, so the shard step
+    # compiles O(log) times across partition-sized inputs, not per shape
+    (mbrs_r, lo_r), _ = _pad_rows_pow2([mbrs_r, lo_r])
+    (mbrs_s, lo_s), _ = _pad_rows_pow2([mbrs_s, lo_s])
+    (pri, psi, pox, poy, valid), n = _pad_rows_pow2(
+        [ri, si, own_x, own_y, np.ones(len(ri), bool)], multiple=n_dev)
+    step = _mbr_shard_step(mesh)
+    with enable_x64():
+        keep, count = step(*[jnp.asarray(a) for a in (
+            mbrs_r, mbrs_s, lo_r, lo_s, pri, psi, pox, poy, valid)])
+    keep = np.asarray(keep)[:n]
+    pairs = np.stack([ri[keep], si[keep]], axis=1)
+    return pairs, {"mbr_candidates": int(n), "mbr_pairs": int(count)}
 
 
 # ---------------------------------------------------------------------------

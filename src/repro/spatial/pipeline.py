@@ -20,7 +20,12 @@ with pluggable intermediate filters (the registry in ``spatial.filters``):
 
 Every filter evaluates whole candidate batches for every predicate
 (intersects / within / linestring / selection); statistics keep the shape
-of the paper's Tables 5/13/16/17 and Fig. 13.
+of the paper's Tables 5/13/16/17 and Fig. 13. All four pipeline stages
+are dataset-batched behind backend knobs forwarded to ``JoinPlan`` —
+``mbr_backend`` (candidate generation, DESIGN.md §8), the filter
+``backend``/``use_jnp`` (§3), ``build_backend`` via build options (§6),
+and ``refine_backend`` (§7); see the README "Pipeline stages & backends"
+table.
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
 
 
 def _plan(R, S, method, n_order, *, backend="numpy", refine_backend="numpy",
-          mbr_grid=32, max_ra_cells=None, order=None, r_kind="polygon"):
+          mbr_backend="numpy", mbr_grid=None, max_ra_cells=None, order=None,
+          r_kind="polygon"):
     build_opts = {}
     filter_opts = {}
     if method == "ra" and max_ra_cells is not None:
@@ -43,9 +49,9 @@ def _plan(R, S, method, n_order, *, backend="numpy", refine_backend="numpy",
     if order is not None and method in ("april", "april-c"):
         filter_opts["order"] = order
     return JoinPlan(R, S, filter=method, backend=backend,
-                    refine_backend=refine_backend, n_order=n_order,
-                    mbr_grid=mbr_grid, r_kind=r_kind, build_opts=build_opts,
-                    filter_opts=filter_opts)
+                    refine_backend=refine_backend, mbr_backend=mbr_backend,
+                    n_order=n_order, mbr_grid=mbr_grid, r_kind=r_kind,
+                    build_opts=build_opts, filter_opts=filter_opts)
 
 
 def _adopt(method: str, store):
@@ -61,16 +67,16 @@ def spatial_intersection_join(
     R, S, method: str = "april", n_order: int = 10,
     order: tuple[str, ...] = ("AA", "AF", "FA"),
     use_jnp: bool = False, max_ra_cells: int = 750,
-    prebuilt: tuple | None = None, mbr_grid: int = 32,
-    refine_backend: str = "numpy",
+    prebuilt: tuple | None = None, mbr_grid: int | None = None,
+    refine_backend: str = "numpy", mbr_backend: str = "numpy",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: run the full pipeline; returns (pairs [K,2], stats).
 
     Prefer ``JoinPlan(R, S, filter=method).build().execute("intersects")``.
     """
     plan = _plan(R, S, method, n_order, backend="jnp" if use_jnp else "numpy",
-                 refine_backend=refine_backend, mbr_grid=mbr_grid,
-                 max_ra_cells=max_ra_cells, order=order)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend,
+                 mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order)
     if prebuilt is not None:
         pr, ps = prebuilt
         plan.build(prebuilt=(_adopt(method, pr), _adopt(method, ps)))
@@ -80,9 +86,11 @@ def spatial_intersection_join(
 def spatial_within_join(
     R, S, method: str = "april", n_order: int = 10,
     prebuilt: tuple | None = None, refine_backend: str = "numpy",
+    mbr_backend: str = "numpy",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: within join (§4.3.2), pairs (r, s) with r within s."""
-    plan = _plan(R, S, method, n_order, refine_backend=refine_backend)
+    plan = _plan(R, S, method, n_order, refine_backend=refine_backend,
+                 mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=tuple(_adopt(method, p) for p in prebuilt))
     return plan.execute("within")
@@ -91,11 +99,12 @@ def spatial_within_join(
 def polygon_linestring_join(
     S, L, method: str = "april", n_order: int = 10,
     prebuilt=None, refine_backend: str = "numpy",
+    mbr_backend: str = "numpy",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: polygon x linestring join (§4.3.3), pairs are
     (line, poly). ``prebuilt`` is the polygon-side store."""
     plan = _plan(L, S, method, n_order, r_kind="line",
-                 refine_backend=refine_backend)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=(None, _adopt(method, prebuilt)))
     return plan.execute("linestring")
@@ -103,13 +112,13 @@ def polygon_linestring_join(
 
 def selection_queries(
     data, queries, method: str = "april", n_order: int = 10, prebuilt=None,
-    refine_backend: str = "numpy",
+    refine_backend: str = "numpy", mbr_backend: str = "numpy",
 ) -> tuple[list[np.ndarray], JoinStats]:
     """Deprecated shim: polygonal range queries (§4.3.1). Returns, per query
     polygon, the data polygons intersecting it. ``prebuilt`` is the
     data-side store."""
     plan = _plan(data, queries, method, n_order,
-                 refine_backend=refine_backend)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=(_adopt(method, prebuilt), None))
     pairs, stats = plan.execute("selection")

@@ -7,10 +7,15 @@ Separates *preprocessing* from *execution*:
     hits, stats = plan.execute("intersects")   # batched filter + refinement
     within, st2 = plan.execute("within")       # same approximations, free
 
-Every execution runs MBR filter -> intermediate filter (one batched
-``verdicts`` call on the selected backend) -> refinement of the indecisive
-remainder, and returns :class:`JoinStats` with per-stage wall times — the
-shape of the paper's Tables 5/13/16/17 and Fig. 13.
+Every execution runs the paper's stages dataset-batched end to end — MBR
+candidate generation (one partitioned grid-hash join, §8) -> intermediate
+filter (one batched ``verdicts`` call, §3) -> refinement of the indecisive
+remainder (one bucketed exact-geometry pass, §7) — and returns
+:class:`JoinStats` with per-stage wall times, the shape of the paper's
+Tables 5/13/16/17 and Fig. 13. Each stage's execution path is a backend
+knob (``mbr_backend`` / ``backend`` / ``refine_backend``, plus
+``build_opts["build_backend"]`` for construction, §6); backends change
+execution, never results.
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
 from ..core.rasterize import Extent, GLOBAL_EXTENT
 from . import refine
 from .filters import Approximation, IntermediateFilter, get_filter
-from .mbr_join import mbr_intersect_mask, mbr_join
+from .mbr_join import _check_backend as _check_mbr_backend
+from .mbr_join import mbr_join
 
 __all__ = ["JoinStats", "JoinPlan"]
 
@@ -34,6 +40,7 @@ class JoinStats:
     predicate: str = "intersects"
     backend: str = "numpy"
     refine_backend: str = "numpy"
+    mbr_backend: str = "numpy"
     n_candidates: int = 0
     n_true_hits: int = 0
     n_true_negs: int = 0
@@ -58,7 +65,8 @@ class JoinStats:
     def row(self) -> str:
         h, g, i = self.rates()
         return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
-                f"mbr={self.t_mbr:.3f}s filter={self.t_filter:.3f}s "
+                f"mbr={self.t_mbr:.3f}s[{self.mbr_backend}] "
+                f"filter={self.t_filter:.3f}s "
                 f"refine={self.t_refine:.3f}s[{self.refine_backend}] "
                 f"total={self.t_total:.3f}s results={self.n_results}")
 
@@ -79,24 +87,30 @@ class JoinPlan:
     ``refine_backend`` selects the execution path of the final exact-geometry
     stage (``numpy`` | ``jnp`` | ``pallas`` | ``sequential``, DESIGN.md §7) —
     every backend is verdict-identical to the sequential per-pair reference.
-    ``build_opts`` go to ``filter.build`` (e.g. ``max_cells`` for RA,
+    ``mbr_backend`` selects the execution path of candidate generation
+    (``numpy`` | ``jnp`` | ``sequential``, DESIGN.md §8); ``mbr_grid`` pins
+    the bucket granularity (default: adaptive from MBR-extent statistics) —
+    neither changes the candidate pair set. ``build_opts`` go to
+    ``filter.build`` (e.g. ``build_backend``, ``max_cells`` for RA,
     ``method`` for APRIL construction); ``filter_opts`` go to every
     ``filter.verdicts`` call (e.g. ``order`` for APRIL).
     """
 
     def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
                  backend: str = "numpy", refine_backend: str = "numpy",
-                 n_order: int = 10,
+                 mbr_backend: str = "numpy", n_order: int = 10,
                  extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
-                 s_kind: str = "polygon", mbr_grid: int = 32,
+                 s_kind: str = "polygon", mbr_grid: int | None = None,
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
         refine._check_backend(refine_backend)
+        _check_mbr_backend(mbr_backend)
         self.R = R
         self.S = S
         self.filter = get_filter(filter)
         self.backend = backend
         self.refine_backend = refine_backend
+        self.mbr_backend = mbr_backend
         self.n_order = n_order
         self.extent = extent
         self.r_kind = r_kind
@@ -148,18 +162,23 @@ class JoinPlan:
     # -- candidate generation (the MBR filter, per predicate) ---------------
 
     def candidates(self, predicate: str = "intersects") -> np.ndarray:
+        """Candidate pairs through the §8 grid-hash join (``mbr_backend``).
+
+        No predicate materializes the dense [N, M] cross test: ``within``
+        needs MBR *containment*, but containment implies intersection, so
+        the (stricter) containment test runs on just the hash join's
+        candidate rows.
+        """
         R, S = self.R, self.S
+        pairs = mbr_join(R.mbrs, S.mbrs, grid=self.mbr_grid,
+                         backend=self.mbr_backend)
         if predicate == "within":
-            mr, ms = R.mbrs, S.mbrs
-            inside = ((mr[:, None, 0] >= ms[None, :, 0])
-                      & (mr[:, None, 1] >= ms[None, :, 1])
-                      & (mr[:, None, 2] <= ms[None, :, 2])
-                      & (mr[:, None, 3] <= ms[None, :, 3]))
-            return np.stack(np.nonzero(inside), axis=1).astype(np.int64)
-        if predicate in ("linestring", "selection"):
-            hit = mbr_intersect_mask(R.mbrs, S.mbrs)
-            return np.stack(np.nonzero(hit), axis=1).astype(np.int64)
-        return mbr_join(R.mbrs, S.mbrs, grid=self.mbr_grid)
+            mr = R.mbrs[pairs[:, 0]]
+            ms = S.mbrs[pairs[:, 1]]
+            inside = ((mr[:, 0] >= ms[:, 0]) & (mr[:, 1] >= ms[:, 1])
+                      & (mr[:, 2] <= ms[:, 2]) & (mr[:, 3] <= ms[:, 3]))
+            return pairs[inside]
+        return pairs
 
     # -- execution ----------------------------------------------------------
 
@@ -188,7 +207,8 @@ class JoinPlan:
             self.build()
         stats = JoinStats(method=self.filter.name, predicate=predicate,
                           backend=self.backend,
-                          refine_backend=self.refine_backend)
+                          refine_backend=self.refine_backend,
+                          mbr_backend=self.mbr_backend)
         stats.t_build = self._t_build
         stats.approx_bytes = (self.approx_r.size_bytes()
                               + self.approx_s.size_bytes())

@@ -1,7 +1,8 @@
-"""Refinement: exact geometry tests for indecisive candidate pairs.
+"""Refinement: exact geometry tests for indecisive candidate pairs (the
+final stage of the paper's §2 pipeline, dominating end-to-end join cost).
 
 The batched refinement subsystem (DESIGN.md §7), mirroring the batched
-filtering (§3) and batched construction (§6) passes. All three refinement
+candidate generation (§8), filtering (§3), and construction (§6) passes. All three refinement
 variants — polygon x polygon ``intersects`` (also serving ``selection``),
 ``within``, and linestring x polygon — have dataset-level batched
 formulations over vertex-count **bucketed** pair batches: pairs group by the

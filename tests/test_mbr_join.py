@@ -1,0 +1,175 @@
+"""Candidate generation (DESIGN.md §8): every mbr_backend must emit exactly
+the brute-force oracle's pair set, duplicate-free, on any data extent."""
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset
+from repro.spatial import JoinPlan
+from repro.spatial.distributed import distributed_mbr_join
+from repro.spatial.mbr_join import (
+    MBR_BACKENDS, adaptive_grid, bucket_ranges, expand_buckets,
+    joint_extent, mbr_intersect_mask, mbr_join)
+
+BACKENDS = MBR_BACKENDS
+
+
+def oracle_set(mr, ms):
+    return set(map(tuple, np.stack(
+        np.nonzero(mbr_intersect_mask(mr, ms)), axis=1).tolist()))
+
+
+def pairs_set(p):
+    return set(map(tuple, np.asarray(p).tolist()))
+
+
+@pytest.fixture(scope="module")
+def sides():
+    R = make_dataset("T1", seed=61, count=110)
+    S = make_dataset("T2", seed=62, count=160)
+    return R.mbrs, S.mbrs
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("grid", [None, 1, 7, 64])
+def test_backends_match_oracle(sides, backend, grid):
+    mr, ms = sides
+    pairs = mbr_join(mr, ms, grid=grid, backend=backend)
+    got = pairs_set(pairs)
+    assert got == oracle_set(mr, ms)
+    assert len(pairs) == len(got), "duplicate pairs emitted"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_translated_scaled_extent_regression(sides, backend):
+    """MBRs far outside the unit square must bucket over the joint extent
+    (pre-§8, ``mbrs * k`` clamped everything into the border buckets)."""
+    mr, ms = sides
+    for scale, shift in ((3.7, (1000.0, -55.0)), (1e-3, (2.0, 2.0)),
+                         (1e6, (-3e5, 4e4))):
+        tr = mr * scale + np.array([shift[0], shift[1]] * 2)
+        ts = ms * scale + np.array([shift[0], shift[1]] * 2)
+        pairs = mbr_join(tr, ts, backend=backend)
+        got = pairs_set(pairs)
+        assert got == oracle_set(tr, ts), (scale, shift)
+        assert len(pairs) == len(got)
+
+
+def test_translated_bucketing_not_degenerate(sides):
+    """The extent-normalization fix: translated data must spread over the
+    grid instead of collapsing into one border bucket."""
+    mr, ms = sides
+    tr = mr * 50.0 + 300.0
+    ts = ms * 50.0 + 300.0
+    k = adaptive_grid(tr, ts)
+    assert k > 1
+    lo, hi = bucket_ranges(tr, k, joint_extent(tr, ts))
+    _, buckets = expand_buckets(lo, hi, k)
+    # far more occupied buckets than the 1-2 border cells of the old clamp
+    assert len(np.unique(buckets)) > 10
+
+
+def test_bucket_straddling_dedup():
+    """MBRs covering many buckets appear once per qualifying pair."""
+    # big overlapping boxes straddling every bucket at any grid
+    mr = np.array([[0.0, 0.0, 1.0, 1.0], [0.1, 0.1, 0.9, 0.9]])
+    ms = np.array([[0.2, 0.2, 0.8, 0.8], [0.0, 0.5, 1.0, 0.6]])
+    for backend in BACKENDS:
+        for grid in (None, 2, 16, 64):
+            pairs = mbr_join(mr, ms, grid=grid, backend=backend)
+            got = pairs_set(pairs)
+            assert len(pairs) == len(got) == 4, (backend, grid)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_and_degenerate_inputs(backend):
+    z = np.zeros((0, 4))
+    box = np.array([[0.2, 0.2, 0.6, 0.6]])
+    assert mbr_join(z, box, backend=backend).shape == (0, 2)
+    assert mbr_join(box, z, backend=backend).shape == (0, 2)
+    assert mbr_join(z, z, backend=backend).shape == (0, 2)
+    # point MBRs (zero width/height), including coincident ones
+    rng = np.random.default_rng(7)
+    pr = np.repeat(rng.random((25, 2)), 2, axis=1)[:, [0, 2, 1, 3]]
+    ps = np.concatenate([pr[:5], np.repeat(rng.random((15, 2)), 2,
+                                           axis=1)[:, [0, 2, 1, 3]]])
+    assert pairs_set(mbr_join(pr, ps, backend=backend)) == oracle_set(pr, ps)
+    # all MBRs identical -> single bucket, full cross product
+    same = np.tile(box, (6, 1))
+    pairs = mbr_join(same, same[:4], backend=backend)
+    assert pairs_set(pairs) == oracle_set(same, same[:4])
+    assert len(pairs) == 24
+
+
+def test_invalid_grid_rejected(sides):
+    """Non-positive explicit grids must raise, not silently drop pairs."""
+    mr, ms = sides
+    for bad in (-2, 0):
+        with pytest.raises(ValueError):
+            mbr_join(mr, ms, grid=bad)
+        with pytest.raises(ValueError):
+            distributed_mbr_join(mr, ms, grid=bad)
+        with pytest.raises(ValueError):   # even when one side is empty
+            mbr_join(np.zeros((0, 4)), ms, grid=bad)
+
+
+def test_adaptive_grid_statistics(sides):
+    mr, ms = sides
+    k = adaptive_grid(mr, ms)
+    assert 1 <= k <= 1024 and (k & (k - 1)) == 0
+    # giant MBRs force a coarse grid; empty input falls back to 1
+    huge = np.tile([[0.0, 0.0, 1.0, 1.0]], (50, 1))
+    assert adaptive_grid(huge, huge) == 1
+    assert adaptive_grid(np.zeros((0, 4)), np.zeros((0, 4))) == 1
+    # pair set is grid-invariant by construction; spot-check the adaptive one
+    assert pairs_set(mbr_join(mr, ms)) == pairs_set(mbr_join(mr, ms, grid=3))
+
+
+def test_plan_threads_mbr_backend(sides):
+    R = make_dataset("T1", seed=63, count=50)
+    S = make_dataset("T2", seed=64, count=70)
+    want = None
+    for mb in BACKENDS:
+        plan = JoinPlan(R, S, filter="april", n_order=7, mbr_backend=mb)
+        pairs, stats = plan.build().execute("intersects")
+        assert stats.mbr_backend == mb
+        assert mb in stats.row()
+        got = pairs_set(pairs)
+        want = want or got
+        assert got == want
+    with pytest.raises(ValueError):
+        JoinPlan(R, S, mbr_backend="cuda")
+
+
+@pytest.mark.slow
+def test_distributed_mbr_join_matches_host(sides):
+    mr, ms = sides
+    pairs, counts = distributed_mbr_join(mr, ms)
+    assert pairs_set(pairs) == oracle_set(mr, ms)
+    assert counts["mbr_pairs"] == len(pairs)
+    assert counts["mbr_candidates"] >= counts["mbr_pairs"]
+    empty, c0 = distributed_mbr_join(np.zeros((0, 4)), ms)
+    assert empty.shape == (0, 2) and c0["mbr_pairs"] == 0
+
+
+def test_property_random_mbrs():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    coord = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                      width=64)
+    box = st.tuples(coord, coord, coord, coord).map(
+        lambda t: (min(t[0], t[2]), min(t[1], t[3]),
+                   max(t[0], t[2]), max(t[1], t[3])))
+    boxes = st.lists(box, min_size=0, max_size=24).map(
+        lambda bs: np.asarray(bs, np.float64).reshape(-1, 4))
+
+    @settings(max_examples=60, deadline=None)
+    @given(mr=boxes, ms=boxes)
+    def check(mr, ms):
+        want = oracle_set(mr, ms)
+        for backend in ("numpy", "sequential"):
+            pairs = mbr_join(mr, ms, backend=backend)
+            got = pairs_set(pairs)
+            assert got == want and len(pairs) == len(got)
+
+    check()

@@ -1,0 +1,52 @@
+"""CI docs-consistency check: the backend-knob surface must be documented.
+
+Every ``*backend`` kwarg accepted by ``JoinPlan.__init__`` (plus
+``build_backend``, which travels through ``build_opts`` to every filter's
+``build``) must appear, as a whole word, in both README.md and DESIGN.md —
+so a new stage backend cannot ship without landing in the "Pipeline stages
+& backends" table and its DESIGN section.
+
+Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``
+"""
+from __future__ import annotations
+
+import inspect
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.spatial import JoinPlan  # noqa: E402
+DOCS = ("README.md", "DESIGN.md")
+# build_backend is accepted by every IntermediateFilter.build (via the
+# JoinPlan build_opts dict), not as a named JoinPlan kwarg
+EXTRA_KNOBS = ("build_backend",)
+
+
+def backend_knobs() -> list[str]:
+    params = inspect.signature(JoinPlan.__init__).parameters
+    knobs = [p for p in params if p.endswith("backend")]
+    return knobs + list(EXTRA_KNOBS)
+
+
+def main() -> int:
+    missing = []
+    texts = {doc: (ROOT / doc).read_text() for doc in DOCS}
+    for knob in backend_knobs():
+        for doc, text in texts.items():
+            if not re.search(rf"\b{re.escape(knob)}\b", text):
+                missing.append(f"{doc}: missing `{knob}`")
+    if missing:
+        print("docs-consistency check FAILED:")
+        for m in missing:
+            print(f"  {m}")
+        return 1
+    print(f"docs-consistency ok: {backend_knobs()} documented in "
+          f"{' and '.join(DOCS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
