@@ -76,6 +76,8 @@ def bench_builds(n_order: int = BENCH_ORDER, names=BENCH_DATASETS) -> dict:
                 "polys_per_s_seq": round(len(D) / max(t_seq, 1e-9), 1),
                 "polys_per_s_batch": round(len(D) / max(t_bat, 1e-9), 1),
                 "speedup": round(t_seq / max(t_bat, 1e-9), 2),
+                "stores_equal": True,   # asserted above; checked in CI by
+                                        # tools/check_bench.py
             }
         out["datasets"][name] = per
     return out

@@ -1,12 +1,27 @@
 """BENCH_filter: per-method intermediate-filter throughput (pairs/s),
-sequential per-pair reference vs batched `verdicts`, on one >=10k-candidate
-MBR batch. Seeds the perf trajectory for the batched filter redesign;
-`benchmarks/run.py` persists the result as BENCH_filter.json.
+sequential per-pair reference (``filter_backend='sequential'``) vs the
+bucketed batched ``verdicts`` path (DESIGN.md §9), on one >=10k-candidate
+MBR batch. The ISSUE-5 acceptance gate: >= 5x batched-over-sequential for
+APRIL, APRIL-C and RA with ``verdicts_equal`` true for every method;
+`benchmarks/run.py` persists the result as BENCH_filter.json and
+``tools/check_bench.py`` guards the committed artifact in CI.
+
+Batched timing is *warm*: the first call per method (untimed) populates the
+Approximation's device-resident interval-list / pyramid caches, which by
+design survive across ``JoinPlan`` executions; the cold first-call time is
+reported alongside.
+
+``python -m benchmarks.filter_throughput --smoke`` runs a tiny
+verdict-identity sweep — every method x every filter backend against the
+sequential trichotomy — as the CI quick-lane smoke.
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
+
+import numpy as np
 
 from repro.datagen import make_dataset
 from repro.spatial import get_filter
@@ -16,6 +31,17 @@ from .common import row
 
 N_ORDER = 10
 METHODS = ("none", "april", "april-c", "ri", "ra", "5cch")
+#: batched backends exercised by the smoke lane (pallas runs in interpret
+#: mode off-TPU: correctness-faithful, so the slice stays small)
+SMOKE_BACKENDS = ("numpy", "jnp", "pallas")
+SMOKE_PAIR_CAP = 200
+
+
+def _built(filt, R, S, n_order):
+    build_opts = {"max_cells": 256} if filt.name == "ra" else {}
+    ar = filt.build(R, n_order=n_order, side="r", **build_opts)
+    as_ = filt.build(S, n_order=n_order, side="s", **build_opts)
+    return ar, as_
 
 
 def bench_filters(min_pairs: int = 10_000):
@@ -27,30 +53,55 @@ def bench_filters(min_pairs: int = 10_000):
            "n_order": N_ORDER, "methods": {}}
     for m in METHODS:
         filt = get_filter(m)
-        build_opts = {"max_cells": 256} if m == "ra" else {}
         t0 = time.perf_counter()
-        ar = filt.build(R, n_order=N_ORDER, side="r", **build_opts)
-        as_ = filt.build(S, n_order=N_ORDER, side="s", **build_opts)
+        ar, as_ = _built(filt, R, S, N_ORDER)
         t_build = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        v_seq = filt.verdicts_seq(ar, as_, pairs)
+        v_seq = filt.verdicts(ar, as_, pairs, backend="sequential")
         t_seq = time.perf_counter() - t0
 
         t0 = time.perf_counter()
+        v_cold = filt.verdicts(ar, as_, pairs)   # populates resident caches
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
         v_bat = filt.verdicts(ar, as_, pairs)
         t_bat = time.perf_counter() - t0
-        assert (v_seq == v_bat).all(), f"{m}: batched verdicts diverged"
+        equal = bool((v_seq == v_bat).all() and (v_seq == v_cold).all())
+        assert equal, f"{m}: batched verdicts diverged"
 
         out["methods"][m] = {
             "t_build_s": round(t_build, 4),
             "t_seq_s": round(t_seq, 4),
             "t_batch_s": round(t_bat, 6),
+            "t_batch_cold_s": round(t_cold, 6),
             "seq_pairs_per_s": round(len(pairs) / max(t_seq, 1e-9), 1),
             "batch_pairs_per_s": round(len(pairs) / max(t_bat, 1e-9), 1),
             "speedup": round(t_seq / max(t_bat, 1e-9), 2),
+            "verdicts_equal": equal,
         }
     return out
+
+
+def smoke() -> None:
+    """CI quick-lane smoke: every method x every backend must equal the
+    sequential trichotomy on a small T1 x T2 slice, for every predicate
+    with a polygon x polygon reading (intersects / within / selection)."""
+    R = make_dataset("T1", seed=91, count=40)
+    S = make_dataset("T2", seed=92, count=60)
+    pairs = mbr_join(R.mbrs, S.mbrs)[:SMOKE_PAIR_CAP]
+    assert len(pairs) > 10, "smoke fixture must produce candidates"
+    for m in METHODS:
+        filt = get_filter(m)
+        ar, as_ = _built(filt, R, S, 6)
+        for predicate in ("intersects", "within", "selection"):
+            ref = filt.verdicts(ar, as_, pairs, predicate=predicate,
+                                backend="sequential")
+            for backend in SMOKE_BACKENDS:
+                got = filt.verdicts(ar, as_, pairs, predicate=predicate,
+                                    backend=backend)
+                assert np.array_equal(ref, got), (m, predicate, backend)
+        print(f"filter smoke ok: {m}")
 
 
 def run():
@@ -66,3 +117,12 @@ def run():
             f"batch_pairs_per_s={r['batch_pairs_per_s']};"
             f"speedup={r['speedup']}"))
     return out
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)

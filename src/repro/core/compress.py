@@ -21,7 +21,8 @@ import numpy as np
 from .join import INDECISIVE, TRUE_HIT, TRUE_NEG
 
 __all__ = [
-    "vbyte_encode", "vbyte_decode", "compress_intervals",
+    "vbyte_encode", "vbyte_decode", "vbyte_decode_many",
+    "compress_intervals",
     "decompress_intervals", "DecompressingCursor", "interval_join_compressed",
     "april_verdict_compressed", "CompressedAprilStore", "compress_april",
 ]
@@ -65,6 +66,42 @@ def vbyte_decode(buf: bytes, count: int) -> np.ndarray:
         acc += val
         out[i] = acc
     return out
+
+
+def vbyte_decode_many(bufs: list[tuple[bytes, int]]
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Decode many delta+VByte buffers in one vectorized pass.
+
+    ``bufs`` is a list of (buffer, count) pairs (the
+    :class:`CompressedAprilStore` per-object entries). Returns
+    (values [sum_counts] uint64, offsets [len(bufs)+1] int64). The decode is
+    flat numpy end to end — continuation-bit grouping, 7-bit shifts, one
+    ``add.reduceat`` per varint, and a segmented prefix sum to undo the
+    deltas — so decoding B objects costs O(total bytes), not B Python loops
+    (the bound the batched APRIL-C path relies on, DESIGN.md §9).
+    """
+    counts = np.fromiter((c for _, c in bufs), np.int64, len(bufs))
+    off = np.zeros(len(bufs) + 1, np.int64)
+    np.cumsum(counts, out=off[1:])
+    total = int(off[-1])
+    if total == 0:
+        return np.zeros(0, np.uint64), off
+    raw = np.frombuffer(b"".join(b for b, _ in bufs), np.uint8)
+    payload = (raw & 0x7F).astype(np.uint64)
+    cont = raw >= 0x80
+    # byte-group boundaries: a varint ends at every byte with a clear
+    # continuation bit (varints never span buffers — each buffer is whole)
+    ends = np.nonzero(~cont)[0]
+    starts = np.empty_like(ends)
+    starts[0] = 0
+    starts[1:] = ends[:-1] + 1
+    shift = (np.arange(len(raw), dtype=np.uint64)
+             - np.repeat(starts, ends - starts + 1).astype(np.uint64))
+    deltas = np.add.reduceat(payload << (np.uint64(7) * shift), starts)
+    # segmented prefix sum: absolute values restart at each buffer boundary
+    cs = np.cumsum(deltas)
+    seg0 = cs[off[:-1].clip(0, total - 1)] - deltas[off[:-1].clip(0, total - 1)]
+    return cs - np.repeat(seg0, counts), off
 
 
 def compress_intervals(ints: np.ndarray) -> tuple[bytes, int]:
@@ -161,24 +198,29 @@ class CompressedAprilStore:
         return (sum(len(b) for b, _ in self.a_bufs)
                 + sum(len(b) for b, _ in self.f_bufs))
 
+    def decompress_lists(self, idx: np.ndarray, kind: str = "A"
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """Decode one list kind of objects ``idx`` into CSR form
+        (offsets [B+1] int64, intervals [T, 2] uint64), rows renumbered
+        0..B-1 — one vectorized :func:`vbyte_decode_many` pass. This is the
+        batched path's *bounded* decode: the APRIL-C filter calls it for
+        exactly the objects a batch stage touches (A lists for the batch,
+        F lists for the AA survivors only)."""
+        bufs = self.a_bufs if kind == "A" else self.f_bufs
+        idx = np.asarray(idx, np.int64)
+        vals, voff = vbyte_decode_many([bufs[int(i)] for i in idx])
+        return voff // 2, vals.reshape(-1, 2)
+
     def decompress(self, idx: np.ndarray | None = None):
         """Decompress objects ``idx`` (all when None) into an
         :class:`~repro.core.april.AprilStore` with rows renumbered 0..B-1."""
         from .april import AprilStore
         idx = np.arange(len(self)) if idx is None else np.asarray(idx, np.int64)
-        a_off = [0]; f_off = [0]
-        a_chunks = []; f_chunks = []
-        for i in idx:
-            a = self.a_list(int(i)); f = self.f_list(int(i))
-            a_chunks.append(a); f_chunks.append(f)
-            a_off.append(a_off[-1] + len(a))
-            f_off.append(f_off[-1] + len(f))
-        cat = lambda ch: (np.concatenate(ch, axis=0) if ch
-                          else np.zeros((0, 2), np.uint64))
+        a_off, a_ints = self.decompress_lists(idx, "A")
+        f_off, f_ints = self.decompress_lists(idx, "F")
         return AprilStore(
             n_order=self.n_order, extent=self.extent,
-            a_off=np.asarray(a_off, np.int64), a_ints=cat(a_chunks),
-            f_off=np.asarray(f_off, np.int64), f_ints=cat(f_chunks))
+            a_off=a_off, a_ints=a_ints, f_off=f_off, f_ints=f_ints)
 
 
 def compress_april(store) -> CompressedAprilStore:

@@ -1,16 +1,26 @@
 """Interval joins: the APRIL intermediate filter (paper §4.2, Algorithm 2).
 
-Two execution styles:
+Three execution styles:
 
 * **Faithful sequential merge joins** (`interval_join_pair`,
   `april_verdict_pair`) — the paper's two-pointer O(n+m) loops with early
   exit. Host/NumPy; used as the reference and for CPU-baseline benchmarks.
-* **Vectorized batched joins** (`batch_overlap_np`, `batch_overlap_jnp`,
-  `april_filter_batch`) — the TPU adaptation: each interval of X binary-
-  searches Y (both lists are sorted and disjoint), giving a fully
-  data-parallel O(n log m) test, batched over thousands of candidate pairs.
-  Device arrays use *biased int32* with inclusive-last endpoints (see
-  ``april.py``). `kernels/interval_join` provides the Pallas version.
+* **The bucketed filter-join subsystem** (DESIGN.md §9) —
+  :class:`IntervalLists` holds a dataset's interval lists CSR-packed in
+  biased int32 with inclusive-last endpoints (see ``april.py``), uploaded
+  to the device once and reused across ``JoinPlan`` calls. The staged
+  trichotomy drivers (:func:`april_trichotomy_rows`,
+  :func:`within_trichotomy_rows`, :func:`linestring_trichotomy_rows`) run
+  the cheap AA-join over the whole batch first and forward only the AA
+  survivors — compacted, like refinement's CMBR sweep — into the expensive
+  full-cell joins. Backends: ``numpy`` evaluates the overlap as one flat
+  row-keyed searchsorted pass (no padding, no per-pair loop); ``jnp``
+  gathers padded power-of-two width buckets on device; ``pallas`` ships
+  bucketed batches through ``kernels/interval_join`` (the fused kernel
+  computes the whole three-join verdict in one pass).
+* **Legacy padded batch joins** (`batch_overlap_np`, `batch_overlap_jnp`,
+  `pack_lists`) — pad-to-max layouts kept for the mesh-sharded
+  ``PackedPairs`` path (spatial/distributed.py) and the kernel tests.
 
 Verdicts follow the paper's trichotomy: a pair is a sure non-result
 (TRUE_NEG, AA-join empty), a sure result (TRUE_HIT, AF- or FA-join finds an
@@ -21,6 +31,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hilbert import u32_to_biased_i32
+from .rasterize import size_buckets
 
 try:
     import jax
@@ -30,9 +41,13 @@ except Exception:  # pragma: no cover
     jnp = None
 
 __all__ = [
-    "TRUE_NEG", "TRUE_HIT", "INDECISIVE",
+    "TRUE_NEG", "TRUE_HIT", "INDECISIVE", "FILTER_BACKENDS",
+    "check_filter_backend", "IntervalLists",
     "interval_join_pair", "april_verdict_pair", "within_verdict_pair",
     "linestring_verdict_pair", "pack_lists", "pack_csr_intervals",
+    "overlap_rows_np", "contain_rows_np",
+    "april_trichotomy_rows", "within_trichotomy_rows",
+    "linestring_trichotomy_rows",
     "batch_overlap_np", "batch_overlap_jnp", "april_filter_batch",
     "within_filter_batch", "linestring_filter_batch",
     "containment_join_pair", "adaptive_order",
@@ -40,6 +55,19 @@ __all__ = [
 
 TRUE_NEG, TRUE_HIT, INDECISIVE = 0, 1, 2
 I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+#: execution paths of the intermediate-filter stage (``filter_backend`` on
+#: :class:`~repro.spatial.plan.JoinPlan`, DESIGN.md §9): 'numpy' is the flat
+#: vectorized host pass, 'jnp' the bucketed device pass, 'pallas' the fused
+#: TPU kernel, 'sequential' the faithful per-pair reference loop every
+#: batched backend must be verdict-identical to.
+FILTER_BACKENDS = ("numpy", "jnp", "pallas", "sequential")
+
+
+def check_filter_backend(backend: str) -> None:
+    if backend not in FILTER_BACKENDS:
+        raise ValueError(f"unknown filter backend {backend!r}; "
+                         f"expected one of {FILTER_BACKENDS}")
 
 
 # ---------------------------------------------------------------------------
@@ -257,94 +285,497 @@ def batch_containment_jnp(xs, xl, nx, fs, fl, nf):
     return jax.vmap(one)(xs, xl, nx, fs, fl, nf)
 
 
+def _store_lists(store, kind: str) -> "IntervalLists":
+    """Wrap one list kind of an AprilStore into an :class:`IntervalLists`,
+    cached on the store so repeated wrapper calls pay the biased-int32
+    conversion once, not O(store) per batch (the filter classes cache in
+    ``Approximation.meta`` instead)."""
+    try:
+        cache = store._interval_lists_cache
+    except AttributeError:
+        cache = store._interval_lists_cache = {}
+    if kind not in cache:
+        if kind == "A":
+            cache[kind] = IntervalLists.from_intervals(store.a_off,
+                                                       store.a_ints)
+        else:
+            cache[kind] = IntervalLists.from_intervals(store.f_off,
+                                                       store.f_ints)
+    return cache[kind]
+
+
 def within_filter_batch(store_r, store_s, pairs: np.ndarray,
-                        use_jnp: bool = False) -> np.ndarray:
+                        use_jnp: bool = False,
+                        backend: str | None = None) -> np.ndarray:
     """Vectorized APRIL within filter (§4.3.2) over candidate pairs [N,2].
 
     Verdict-identical to :func:`within_verdict_pair` applied per pair:
     AA disjoint -> TRUE_NEG; every A(r) interval inside an F(s) interval ->
-    TRUE_HIT; else INDECISIVE.
+    TRUE_HIT; else INDECISIVE. Thin wrapper over
+    :func:`within_trichotomy_rows` for raw stores.
     """
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-    N = len(pairs)
-    if N == 0:
+    if len(pairs) == 0:
         return np.zeros(0, np.int8)
-    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
-    contain = batch_containment_jnp if (use_jnp and jnp is not None) \
-        else _containment_batch_np
-    xs, xl, nx = pack_lists(store_r, pairs[:, 0], "A")
-    ys, yl, ny = pack_lists(store_s, pairs[:, 1], "A")
-    aa = np.asarray(overlap(xs, xl, nx, ys, yl, ny))
-    fs, fl, nf = pack_lists(store_s, pairs[:, 1], "F")
-    cont = np.asarray(contain(xs, xl, nx, fs, fl, nf))
-    return np.where(~aa, TRUE_NEG,
-                    np.where((nx > 0) & cont, TRUE_HIT,
-                             INDECISIVE)).astype(np.int8)
+    backend = backend or ("jnp" if (use_jnp and jnp is not None) else "numpy")
+    return within_trichotomy_rows(
+        _store_lists(store_r, "A"), _store_lists(store_s, "A"),
+        _store_lists(store_s, "F"), pairs[:, 0], pairs[:, 1],
+        backend=backend)
 
 
 def linestring_filter_batch(store_s, line_off: np.ndarray,
                             line_ids: np.ndarray, pairs: np.ndarray,
-                            use_jnp: bool = False) -> np.ndarray:
+                            use_jnp: bool = False,
+                            backend: str | None = None) -> np.ndarray:
     """Vectorized polygon x linestring filter (§4.3.3).
 
     ``pairs`` rows are (line_idx, poly_idx); the linestring side is a CSR
     array of sorted Partial cell ids treated as unit intervals (start = last
     = id in inclusive-last space). Verdict-identical to
-    :func:`linestring_verdict_pair`.
+    :func:`linestring_verdict_pair`; thin wrapper over
+    :func:`linestring_trichotomy_rows` for raw stores.
     """
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-    N = len(pairs)
-    if N == 0:
+    if len(pairs) == 0:
         return np.zeros(0, np.int8)
-    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
-    # pack the line side as unit intervals (inclusive-last == start)
-    cells = np.stack([line_ids, line_ids + np.uint64(1)], axis=1) \
-        if len(line_ids) else np.zeros((0, 2), np.uint64)
-    cs, cl, counts = pack_csr_intervals(line_off, cells, pairs[:, 0])
-    as_, al, na = pack_lists(store_s, pairs[:, 1], "A")
-    aa = np.asarray(overlap(as_, al, na, cs, cl, counts))
-    fs_, fl, nf = pack_lists(store_s, pairs[:, 1], "F")
-    fhit = np.asarray(overlap(fs_, fl, nf, cs, cl, counts))
-    return np.where(~aa, TRUE_NEG,
-                    np.where(fhit, TRUE_HIT, INDECISIVE)).astype(np.int8)
+    backend = backend or ("jnp" if (use_jnp and jnp is not None) else "numpy")
+    return linestring_trichotomy_rows(
+        IntervalLists.from_unit_cells(line_off, line_ids),
+        _store_lists(store_s, "A"), _store_lists(store_s, "F"),
+        pairs[:, 0], pairs[:, 1], backend=backend)
 
 
 def april_filter_batch(
     store_r, store_s, pairs: np.ndarray,
     order: tuple[str, ...] = ("AA", "AF", "FA"),
-    use_jnp: bool = False,
+    use_jnp: bool = False, backend: str | None = None,
 ) -> np.ndarray:
     """Vectorized APRIL filter over candidate pairs [[r_idx, s_idx], ...].
 
-    Returns verdicts [N] int8. The three joins run as masked batch passes in
-    ``order``; pairs decided by an earlier pass are excluded from later ones
-    (batch-level short-circuit — see DESIGN.md §3).
+    Returns verdicts [N] int8; thin wrapper over
+    :func:`april_trichotomy_rows` for raw stores (the staged AA ->
+    compacted AF/FA evaluation, DESIGN.md §9).
     """
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-    N = len(pairs)
-    verdicts = np.full(N, INDECISIVE, np.int8)
-    if N == 0:
-        return verdicts
-    overlap = batch_overlap_jnp if (use_jnp and jnp is not None) else batch_overlap_np
+    if len(pairs) == 0:
+        return np.zeros(0, np.int8)
+    backend = backend or ("jnp" if (use_jnp and jnp is not None) else "numpy")
+    return april_trichotomy_rows(
+        _store_lists(store_r, "A"), _store_lists(store_r, "F"),
+        _store_lists(store_s, "A"), _store_lists(store_s, "F"),
+        pairs[:, 0], pairs[:, 1], backend=backend, order=order)
 
-    undecided = np.arange(N)
-    aa_seen = np.zeros(N, dtype=bool)
-    for step in order:
-        if len(undecided) == 0:
-            break
-        r_idx = pairs[undecided, 0]
-        s_idx = pairs[undecided, 1]
-        xk, yk = ("A", "A") if step == "AA" else (("A", "F") if step == "AF" else ("F", "A"))
-        xs, xl, nx = pack_lists(store_r, r_idx, xk)
-        ys, yl, ny = pack_lists(store_s, s_idx, yk)
-        hit = np.asarray(overlap(xs, xl, nx, ys, yl, ny))
-        if step == "AA":
-            aa_seen[undecided] = True
-            verdicts[undecided[~hit]] = TRUE_NEG
-            undecided = undecided[hit]
+
+# ---------------------------------------------------------------------------
+# The bucketed filter-join subsystem (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+_KEY_SHIFT = np.uint64(33)
+_KEY_BIAS = np.int64(1) << np.int64(31)
+
+#: per-backend padded working-set bound for one bucket chunk
+_BUCKET_CHUNK = 1 << 22
+#: pallas buckets cap list width so the [BB, I, J] predicate tile fits VMEM
+_PALLAS_MAX_WIDTH = 256
+
+
+class IntervalLists:
+    """One dataset side's interval lists, CSR-packed for the filter join.
+
+    Endpoints are biased int32 with inclusive lasts (``end - 1``), the
+    device-native layout of every batched backend. Built once per
+    :class:`~repro.spatial.filters.base.Approximation` (cached in its
+    ``meta``) and — for the jnp/pallas backends — uploaded to the device
+    once and reused across ``JoinPlan`` calls; per-batch work is a gather,
+    never a host re-pack.
+    """
+
+    __slots__ = ("off", "starts", "lasts", "_device")
+
+    def __init__(self, off: np.ndarray, starts: np.ndarray,
+                 lasts: np.ndarray):
+        self.off = np.ascontiguousarray(off, np.int64)
+        self.starts = np.ascontiguousarray(starts, np.int32)
+        self.lasts = np.ascontiguousarray(lasts, np.int32)
+        self._device = None
+
+    @classmethod
+    def from_intervals(cls, off: np.ndarray, ints: np.ndarray):
+        """From a CSR uint64 half-open interval table (AprilStore layout)."""
+        if len(ints):
+            starts = u32_to_biased_i32(ints[:, 0])
+            lasts = u32_to_biased_i32(ints[:, 1] - np.uint64(1))
         else:
-            verdicts[undecided[hit]] = TRUE_HIT
-            undecided = undecided[~hit]
-    # pairs never killed by AA (when AA ran last) keep INDECISIVE; pairs with
-    # empty A-overlap already got TRUE_NEG above.
+            starts = np.zeros(0, np.int32)
+            lasts = np.zeros(0, np.int32)
+        return cls(off, starts, lasts)
+
+    @classmethod
+    def from_unit_cells(cls, off: np.ndarray, ids: np.ndarray):
+        """From sorted cell ids treated as unit intervals (start == last)."""
+        b = u32_to_biased_i32(ids) if len(ids) else np.zeros(0, np.int32)
+        return cls(off, b, b)
+
+    def __len__(self) -> int:
+        return len(self.off) - 1
+
+    def counts(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64)
+        return (self.off[idx + 1] - self.off[idx]).astype(np.int64)
+
+    def pack(self, idx: np.ndarray, width: int):
+        """Padded host gather: (starts [B, width], lasts, counts [B])."""
+        idx = np.asarray(idx, np.int64)
+        lo = self.off[idx]
+        cnt = (self.off[idx + 1] - lo).astype(np.int32)
+        B = len(idx)
+        xs = np.full((B, width), I32_MAX, np.int32)
+        xl = np.full((B, width), I32_MAX, np.int32)
+        if len(self.starts) and B:
+            col = np.arange(width)[None, :]
+            mask = col < cnt[:, None]
+            src = (lo[:, None] + col)[mask]
+            xs[mask] = self.starts[src]
+            xl[mask] = self.lasts[src]
+        return xs, xl, cnt
+
+    def device(self):
+        """Lazily uploaded device copies of the flat endpoint arrays."""
+        if self._device is None:
+            assert jnp is not None, "jax unavailable"
+            # a sentinel slot lets empty stores still index safely on device
+            s = self.starts if len(self.starts) else np.full(1, I32_MAX,
+                                                             np.int32)
+            l = self.lasts if len(self.lasts) else np.full(1, I32_MAX,
+                                                           np.int32)
+            self._device = (jnp.asarray(s), jnp.asarray(l))
+        return self._device
+
+
+def _flat_rows(L: IntervalLists, idx: np.ndarray):
+    """Expand rows ``idx`` of ``L`` into flat (row-of-entry [T],
+    global-interval [T], counts [B]) arrays."""
+    idx = np.asarray(idx, np.int64)
+    lo = L.off[idx]
+    cnt = (L.off[idx + 1] - lo).astype(np.int64)
+    b_of = np.repeat(np.arange(len(idx)), cnt)
+    pos = np.arange(len(b_of)) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+    return b_of, lo[b_of] + pos, cnt
+
+
+def _rowkey(b_of: np.ndarray, vals_i32: np.ndarray) -> np.ndarray:
+    """Row-keyed sort keys: row index in the high bits, the (order-
+    preserving) unbiased endpoint in the low 32."""
+    return ((b_of.astype(np.uint64) << _KEY_SHIFT)
+            + (vals_i32.astype(np.int64) + _KEY_BIAS).astype(np.uint64))
+
+
+def overlap_rows_np(X: IntervalLists, xi: np.ndarray,
+                    Y: IntervalLists, yi: np.ndarray) -> np.ndarray:
+    """[N] bool: does X[xi[n]] overlap Y[yi[n]]? One flat vectorized pass.
+
+    Per x interval, binary-search the row-keyed flat y-lasts for the first
+    y with ``yl >= xs`` (row keys keep each pair's segment separate), then
+    test ``ys <= xl`` — no padding, no per-pair Python loop.
+    """
+    xi = np.asarray(xi, np.int64)
+    N = len(xi)
+    out = np.zeros(N, bool)
+    if N == 0:
+        return out
+    bx, gx, _ = _flat_rows(X, xi)
+    by, gy, cy = _flat_rows(Y, yi)
+    if len(bx) == 0 or len(by) == 0:
+        return out
+    ykeys = _rowkey(by, Y.lasts[gy])
+    yend = np.cumsum(cy)
+    j = np.searchsorted(ykeys, _rowkey(bx, X.starts[gx]), side="left")
+    ok = j < yend[bx]
+    jj = np.minimum(j, len(gy) - 1)
+    hit = ok & (Y.starts[gy[jj]] <= X.lasts[gx])
+    out[bx[hit]] = True
+    return out
+
+
+def contain_rows_np(X: IntervalLists, xi: np.ndarray,
+                    F: IntervalLists, fi: np.ndarray) -> np.ndarray:
+    """[N] bool: is every interval of X[xi[n]] contained in some interval of
+    F[fi[n]]? (within-join AF test, §4.3.2). False for empty X or F lists
+    — the trichotomy drivers only consult it on AA survivors."""
+    xi = np.asarray(xi, np.int64)
+    N = len(xi)
+    out = (X.counts(xi) > 0) & (F.counts(fi) > 0)
+    if N == 0:
+        return out
+    bx, gx, _ = _flat_rows(X, xi)
+    bf, gf, cf = _flat_rows(F, fi)
+    if len(bx) == 0 or len(bf) == 0:
+        return out      # some side is empty on every row
+    fkeys = _rowkey(bf, F.lasts[gf])
+    fend = np.cumsum(cf)
+    j = np.searchsorted(fkeys, _rowkey(bx, X.lasts[gx]), side="left")
+    ok = j < fend[bx]
+    jj = np.minimum(j, len(gf) - 1)
+    inside = ok & (F.starts[gf[jj]] <= X.starts[gx]) \
+        & (X.lasts[gx] <= F.lasts[gf[jj]])
+    out[bx[~inside]] = False
+    return out
+
+
+# -- jnp bucketed device paths ----------------------------------------------
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(np.ceil(np.log2(max(1, int(n))))))
+
+
+def _device_gather(flat_s, flat_l, lo, cnt, W: int):
+    """Padded [B, W] device gather out of the resident flat arrays."""
+    col = jnp.arange(W, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(lo[:, None] + col, 0, flat_s.shape[0] - 1)
+    mask = col < cnt[:, None]
+    return (jnp.where(mask, flat_s[idx], I32_MAX),
+            jnp.where(mask, flat_l[idx], I32_MAX))
+
+
+def _overlap_bucket_jnp(xs_f, xl_f, xlo, xcnt, ys_f, yl_f, ylo, ycnt,
+                        Wx: int, Wy: int):
+    xs, xl = _device_gather(xs_f, xl_f, xlo, xcnt, Wx)
+    ys, yl = _device_gather(ys_f, yl_f, ylo, ycnt, Wy)
+    return batch_overlap_jnp(xs, xl, xcnt, ys, yl, ycnt)
+
+
+def _contain_bucket_jnp(xs_f, xl_f, xlo, xcnt, fs_f, fl_f, flo, fcnt,
+                        Wx: int, Wf: int):
+    xs, xl = _device_gather(xs_f, xl_f, xlo, xcnt, Wx)
+    fs, fl = _device_gather(fs_f, fl_f, flo, fcnt, Wf)
+    return batch_containment_jnp(xs, xl, xcnt, fs, fl, fcnt)
+
+
+_JNP_BUCKET_FNS: dict = {}
+
+
+def _jitted_bucket_fn(kind: str):
+    if jax is None:  # pragma: no cover
+        raise RuntimeError("jax unavailable for the jnp filter backend")
+    if kind not in _JNP_BUCKET_FNS:
+        fn = _overlap_bucket_jnp if kind == "overlap" else _contain_bucket_jnp
+        _JNP_BUCKET_FNS[kind] = jax.jit(fn, static_argnames=("Wx", "Wy")
+                                        if kind == "overlap"
+                                        else ("Wx", "Wf"))
+    return _JNP_BUCKET_FNS[kind]
+
+
+def _bucketed_rows_jnp(kind: str, X: IntervalLists, xi, Y: IntervalLists,
+                       yi) -> np.ndarray:
+    """Bucketed device evaluation of overlap/containment rows.
+
+    Rows group by the power-of-two class of their wider list (padding waste
+    <= 2x); each bucket pads its batch to a power of two so the jitted
+    gather+searchsorted step compiles O(log^2) times, not per shape. The
+    flat endpoint arrays live on device (:meth:`IntervalLists.device`);
+    only the [B] row offsets/counts travel per call.
+    """
+    xi = np.asarray(xi, np.int64)
+    yi = np.asarray(yi, np.int64)
+    N = len(xi)
+    out = np.zeros(N, bool)
+    if N == 0:
+        return out
+    cx = X.counts(xi)
+    cy = Y.counts(yi)
+    # rows with an empty list on either side are False for both overlap and
+    # (survivor-only) containment; size_buckets skips the zeroed rows
+    widths = np.where((cx > 0) & (cy > 0), np.maximum(np.maximum(cx, cy), 1),
+                      0)
+    fn = _jitted_bucket_fn(kind)
+    xs_f, xl_f = X.device()
+    ys_f, yl_f = Y.device()
+    for sel in size_buckets(widths, _BUCKET_CHUNK):
+        Wx = _pow2(cx[sel].max())
+        Wy = _pow2(cy[sel].max())
+        Bp = _pow2(len(sel))
+        xlo = np.zeros(Bp, np.int64)
+        xct = np.zeros(Bp, np.int32)
+        ylo = np.zeros(Bp, np.int64)
+        yct = np.zeros(Bp, np.int32)
+        xlo[:len(sel)] = X.off[xi[sel]]
+        xct[:len(sel)] = cx[sel]
+        ylo[:len(sel)] = Y.off[yi[sel]]
+        yct[:len(sel)] = cy[sel]
+        kw = {"Wx": Wx, "Wy": Wy} if kind == "overlap" else \
+            {"Wx": Wx, "Wf": Wy}
+        got = np.asarray(fn(xs_f, xl_f, jnp.asarray(xlo), jnp.asarray(xct),
+                            ys_f, yl_f, jnp.asarray(ylo), jnp.asarray(yct),
+                            **kw))
+        out[sel] = got[:len(sel)]
+    return out
+
+
+def overlap_rows_jnp(X, xi, Y, yi) -> np.ndarray:
+    return _bucketed_rows_jnp("overlap", X, xi, Y, yi)
+
+
+def contain_rows_jnp(X, xi, F, fi) -> np.ndarray:
+    return _bucketed_rows_jnp("contain", X, xi, F, fi)
+
+
+def _overlap_rows_pallas(X, xi, Y, yi, interpret=None) -> np.ndarray:
+    """Bucketed overlap through the Pallas ``kernels/interval_join`` kernel
+    (interpret mode off-TPU). Used by predicates without a fused kernel.
+
+    Rows whose lists exceed ``_PALLAS_MAX_WIDTH`` would blow the kernel's
+    padded [BB, I, J] VMEM tile; they take the flat host pass instead
+    (verdict-identical by construction)."""
+    from ..kernels.interval_join.ops import batch_interval_overlap
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    xi = np.asarray(xi, np.int64)
+    yi = np.asarray(yi, np.int64)
+    N = len(xi)
+    out = np.zeros(N, bool)
+    cx = X.counts(xi)
+    cy = Y.counts(yi)
+    widths = np.maximum(np.maximum(cx, cy), 1)
+    live = (cx > 0) & (cy > 0)
+    wide = live & (widths > _PALLAS_MAX_WIDTH)
+    if wide.any():
+        w = np.nonzero(wide)[0]
+        out[w] = overlap_rows_np(X, xi[w], Y, yi[w])
+    for sel in size_buckets(np.where(live & ~wide, widths, 0), _BUCKET_CHUNK):
+        xs, xl, nx = X.pack(xi[sel], _pow2(cx[sel].max()))
+        ys, yl, ny = Y.pack(yi[sel], _pow2(cy[sel].max()))
+        out[sel] = np.asarray(batch_interval_overlap(
+            xs, xl, nx, ys, yl, ny, interpret=interpret))
+    return out
+
+
+def _overlap_fn(backend: str):
+    if backend == "numpy":
+        return overlap_rows_np
+    if backend == "jnp":
+        return overlap_rows_jnp
+    if backend == "pallas":
+        return _overlap_rows_pallas
+    raise ValueError(f"no batched overlap path for backend {backend!r}")
+
+
+# -- staged trichotomy drivers ----------------------------------------------
+
+def april_trichotomy_rows(
+    Xa: IntervalLists, Xf: IntervalLists, Ya: IntervalLists,
+    Yf: IntervalLists, ri: np.ndarray, si: np.ndarray, *,
+    backend: str = "numpy", order: tuple[str, ...] = ("AA", "AF", "FA"),
+) -> np.ndarray:
+    """Staged APRIL trichotomy (Algorithm 2) over rows (ri[n], si[n]).
+
+    The AA-join runs over the whole batch; AF/FA evaluate only the
+    compacted AA survivors (the batch analogue of the sequential early
+    exit — ``order`` picks which hit-join runs first, semantics are
+    order-invariant). The pallas backend instead ships each bucket through
+    the fused three-join kernel (one pass, one verdict).
+    """
+    if "AA" not in order:
+        raise ValueError("order must include 'AA'")
+    ri = np.asarray(ri, np.int64)
+    si = np.asarray(si, np.int64)
+    N = len(ri)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    # the fused kernel evaluates all three joins, which is verdict-identical
+    # for any permutation; degenerate orders (hit joins omitted) stage
+    if backend == "pallas" and set(order) == {"AA", "AF", "FA"}:
+        return _april_trichotomy_pallas(Xa, Xf, Ya, Yf, ri, si)
+    overlap = _overlap_fn(backend)
+    aa = overlap(Xa, ri, Ya, si)
+    verdicts = np.where(aa, INDECISIVE, TRUE_NEG).astype(np.int8)
+    sel = np.nonzero(aa)[0]
+    # hit joins run in `order`; a degenerate order without them leaves AA
+    # survivors INDECISIVE, exactly like the sequential reference
+    for step in [s for s in order if s != "AA"]:
+        if len(sel) == 0:
+            break
+        if step == "AF":
+            hit = overlap(Xa, ri[sel], Yf, si[sel])
+        else:
+            hit = overlap(Xf, ri[sel], Ya, si[sel])
+        verdicts[sel[hit]] = TRUE_HIT
+        sel = sel[~hit]
+    return verdicts
+
+
+def _april_trichotomy_pallas(Xa, Xf, Ya, Yf, ri, si,
+                             interpret=None) -> np.ndarray:
+    """Bucketed batches through the fused three-join Pallas kernel.
+
+    Rows whose widest list exceeds ``_PALLAS_MAX_WIDTH`` take the flat host
+    staged pass instead of blowing the kernel's VMEM tile."""
+    from ..kernels.interval_join.ops import batch_april_trichotomy
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = len(ri)
+    verdicts = np.full(N, TRUE_NEG, np.int8)
+    counts = [L.counts(idx) for L, idx in
+              ((Xa, ri), (Xf, ri), (Ya, si), (Yf, si))]
+    widths = np.maximum(np.maximum.reduce(counts), 1)
+    # rows with an empty A list on either side are decided without a kernel
+    live = (counts[0] > 0) & (counts[2] > 0)
+    wide = live & (widths > _PALLAS_MAX_WIDTH)
+    if wide.any():
+        w = np.nonzero(wide)[0]
+        verdicts[w] = april_trichotomy_rows(Xa, Xf, Ya, Yf, ri[w], si[w],
+                                            backend="numpy")
+    for sel in size_buckets(np.where(live & ~wide, widths, 0), _BUCKET_CHUNK):
+        ra = Xa.pack(ri[sel], _pow2(counts[0][sel].max()))
+        rf = Xf.pack(ri[sel], _pow2(max(1, counts[1][sel].max())))
+        sa = Ya.pack(si[sel], _pow2(counts[2][sel].max()))
+        sf = Yf.pack(si[sel], _pow2(max(1, counts[3][sel].max())))
+        verdicts[sel] = np.asarray(batch_april_trichotomy(
+            *ra, *rf, *sa, *sf, interpret=interpret))
+    return verdicts
+
+
+def within_trichotomy_rows(
+    Xa: IntervalLists, Ya: IntervalLists, Yf: IntervalLists,
+    ri: np.ndarray, si: np.ndarray, *, backend: str = "numpy",
+) -> np.ndarray:
+    """Staged within trichotomy (§4.3.2): AA over the batch, containment of
+    A(r) in F(s) only on the compacted AA survivors."""
+    ri = np.asarray(ri, np.int64)
+    si = np.asarray(si, np.int64)
+    N = len(ri)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    # containment has no pallas kernel; the pallas backend runs AA through
+    # the kernel and falls back to the device containment pass
+    overlap = _overlap_fn(backend)
+    contain = contain_rows_jnp if backend in ("jnp", "pallas") \
+        else contain_rows_np
+    aa = overlap(Xa, ri, Ya, si)
+    verdicts = np.where(aa, INDECISIVE, TRUE_NEG).astype(np.int8)
+    sel = np.nonzero(aa)[0]
+    if len(sel):
+        cont = contain(Xa, ri[sel], Yf, si[sel])
+        verdicts[sel[cont]] = TRUE_HIT
+    return verdicts
+
+
+def linestring_trichotomy_rows(
+    C: IntervalLists, Ya: IntervalLists, Yf: IntervalLists,
+    li: np.ndarray, si: np.ndarray, *, backend: str = "numpy",
+) -> np.ndarray:
+    """Staged polygon x linestring trichotomy (§4.3.3): the chain's unit
+    intervals against A(s) over the batch, against F(s) on survivors."""
+    li = np.asarray(li, np.int64)
+    si = np.asarray(si, np.int64)
+    N = len(li)
+    if N == 0:
+        return np.zeros(0, np.int8)
+    overlap = _overlap_fn(backend)
+    aa = overlap(C, li, Ya, si)
+    verdicts = np.where(aa, INDECISIVE, TRUE_NEG).astype(np.int8)
+    sel = np.nonzero(aa)[0]
+    if len(sel):
+        fhit = overlap(C, li[sel], Yf, si[sel])
+        verdicts[sel[fhit]] = TRUE_HIT
     return verdicts

@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["interval_overlap_pallas"]
+__all__ = ["interval_overlap_pallas", "april_trichotomy_pallas"]
+
+TRUE_NEG, TRUE_HIT, INDECISIVE = 0, 1, 2   # mirrors core.join
 
 
 def _kernel(nx_ref, ny_ref, xs_ref, xl_ref, ys_ref, yl_ref, out_ref, *, jb_size):
@@ -80,3 +82,70 @@ def interval_overlap_pallas(
         out_shape=jax.ShapeDtypeStruct((B,), jnp.bool_),
         interpret=interpret,
     )(nx, ny, xs, xl, ys, yl)
+
+
+def _any_overlap(xs, xl, nx, ys, yl, ny):
+    """[BB] bool: lane-parallel overlap reduction of one pair of list slabs
+    (the [BB, I, J] predicate materialized in VMEM, masked by true counts)."""
+    BB, I = xs.shape
+    J = ys.shape[1]
+    ovl = (ys[:, None, :] <= xl[:, :, None]) & (xs[:, :, None] <= yl[:, None, :])
+    ii = jax.lax.broadcasted_iota(jnp.int32, (BB, I, J), 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (BB, I, J), 2)
+    valid = (ii < nx[:, None, None]) & (jj < ny[:, None, None])
+    return jnp.any(ovl & valid, axis=(1, 2))
+
+
+def _trichotomy_kernel(nra_ref, nrf_ref, nsa_ref, nsf_ref,
+                       ras_ref, ral_ref, rfs_ref, rfl_ref,
+                       sas_ref, sal_ref, sfs_ref, sfl_ref, out_ref):
+    """Fused APRIL trichotomy (Algorithm 2): AA + AF + FA joins and the
+    verdict select in ONE pass over the block — a bucketed batch needs a
+    single kernel launch instead of three overlap launches."""
+    nra = nra_ref[...]; nrf = nrf_ref[...]
+    nsa = nsa_ref[...]; nsf = nsf_ref[...]
+    aa = _any_overlap(ras_ref[...], ral_ref[...], nra,
+                      sas_ref[...], sal_ref[...], nsa)
+    af = _any_overlap(ras_ref[...], ral_ref[...], nra,
+                      sfs_ref[...], sfl_ref[...], nsf)
+    fa = _any_overlap(rfs_ref[...], rfl_ref[...], nrf,
+                      sas_ref[...], sal_ref[...], nsa)
+    out_ref[...] = jnp.where(
+        ~aa, TRUE_NEG,
+        jnp.where(af | fa, TRUE_HIT, INDECISIVE)).astype(jnp.int32)
+
+
+def april_trichotomy_pallas(
+    nra, nrf, nsa, nsf, ras, ral, rfs, rfl, sas, sal, sfs, sfl, *,
+    block_b: int = 8, interpret: bool = False,
+):
+    """[B] int32 verdicts (TRUE_NEG / TRUE_HIT / INDECISIVE) per pair row.
+
+    ras/ral: [B, Ia] A(r); rfs/rfl: [B, If] F(r); sas/sal: [B, Ja] A(s);
+    sfs/sfl: [B, Jf] F(s) — biased int32, inclusive-last, INT32_MAX padded;
+    n*: [B] int32 true counts. Width bounding is the caller's bucketing job
+    (core.join buckets by power-of-two list width, DESIGN.md §9).
+    """
+    B, Ia = ras.shape
+    If = rfs.shape[1]
+    Ja = sas.shape[1]
+    Jf = sfs.shape[1]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+
+    def vec(_):
+        return pl.BlockSpec((block_b,), lambda b: (b,))
+
+    def mat(w):
+        return pl.BlockSpec((block_b, w), lambda b: (b, 0))
+
+    return pl.pallas_call(
+        _trichotomy_kernel,
+        grid=grid,
+        in_specs=[vec(0), vec(0), vec(0), vec(0),
+                  mat(Ia), mat(Ia), mat(If), mat(If),
+                  mat(Ja), mat(Ja), mat(Jf), mat(Jf)],
+        out_specs=pl.BlockSpec((block_b,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(nra, nrf, nsa, nsf, ras, ral, rfs, rfl, sas, sal, sfs, sfl)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .interval_join import interval_overlap_pallas
+from .interval_join import april_trichotomy_pallas, interval_overlap_pallas
 
 I32_MAX = np.iinfo(np.int32).max
 
@@ -41,3 +41,31 @@ def batch_interval_overlap(xs, xl, nx, ys, yl, ny, *, interpret: bool = False,
                                   block_b=block_b, block_j=block_j,
                                   interpret=interpret)
     return out[:B]
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_b"))
+def _trichotomy_jit(nra, nrf, nsa, nsf, mats, *, interpret, block_b):
+    padded = []
+    for s, l in mats:
+        padded.append((_pad_axis(_pad_axis(jnp.asarray(s, jnp.int32), 1, 128,
+                                           I32_MAX), 0, block_b, I32_MAX),
+                       _pad_axis(_pad_axis(jnp.asarray(l, jnp.int32), 1, 128,
+                                           I32_MAX), 0, block_b, I32_MAX)))
+    counts = [_pad_axis(jnp.asarray(n, jnp.int32), 0, block_b, 0)
+              for n in (nra, nrf, nsa, nsf)]
+    flat = [a for pair in padded for a in pair]
+    return april_trichotomy_pallas(*counts, *flat, block_b=block_b,
+                                   interpret=interpret)
+
+
+def batch_april_trichotomy(ras, ral, nra, rfs, rfl, nrf,
+                           sas, sal, nsa, sfs, sfl, nsf, *,
+                           interpret: bool = False,
+                           block_b: int = 8) -> np.ndarray:
+    """Fused three-join verdicts [B] int8 for padded A/F batches (any
+    widths/B; pads to kernel tile multiples and dispatches)."""
+    B = ras.shape[0]
+    out = _trichotomy_jit(nra, nrf, nsa, nsf,
+                          ((ras, ral), (rfs, rfl), (sas, sal), (sfs, sfl)),
+                          interpret=interpret, block_b=block_b)
+    return np.asarray(out[:B]).astype(np.int8)

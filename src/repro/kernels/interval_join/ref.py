@@ -13,3 +13,12 @@ def interval_overlap_ref(xs, xl, nx, ys, yl, ny):
     jj = jnp.arange(J, dtype=jnp.int32)[None, None, :]
     valid = (ii < nx[:, None, None]) & (jj < ny[:, None, None])
     return jnp.any(ovl & valid, axis=(1, 2))
+
+
+def april_trichotomy_ref(nra, nrf, nsa, nsf, ras, ral, rfs, rfl,
+                         sas, sal, sfs, sfl):
+    """Same contract as april_trichotomy_pallas, dense jnp evaluation."""
+    aa = interval_overlap_ref(ras, ral, nra, sas, sal, nsa)
+    af = interval_overlap_ref(ras, ral, nra, sfs, sfl, nsf)
+    fa = interval_overlap_ref(rfs, rfl, nrf, sas, sal, nsa)
+    return jnp.where(~aa, 0, jnp.where(af | fa, 1, 2)).astype(jnp.int32)

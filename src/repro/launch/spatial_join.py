@@ -1,7 +1,7 @@
 """Distributed spatial-join launcher — the paper's system as a service run.
 
   PYTHONPATH=src python -m repro.launch.spatial_join --r T1 --s T2 \
-      --n-order 8 --parts 2 --method ri --backend numpy \
+      --n-order 8 --parts 2 --method ri --filter-backend numpy \
       --ckpt-dir /tmp/join_ckpt
 
 Orchestration (DESIGN.md §4): partition the map (§5.2) -> per-partition
@@ -154,8 +154,12 @@ def main():
     ap.add_argument("--count-s", type=int, default=None)
     ap.add_argument("--method", default="april",
                     help="intermediate filter: none/april/april-c/ri/ra/5cch")
+    ap.add_argument("--filter-backend", default=None,
+                    help="filter_backend: numpy/jnp/pallas/sequential "
+                         "(jnp/pallas run mesh-capable filters sharded "
+                         "over the mesh; default: --backend)")
     ap.add_argument("--backend", default="jnp",
-                    help="verdict backend: numpy/jnp/pallas")
+                    help="historical alias of --filter-backend")
     ap.add_argument("--refine-backend", default="numpy",
                     help="refinement backend: numpy/jnp/pallas/sequential "
                          "(jnp refines sharded over the mesh)")
@@ -165,7 +169,8 @@ def main():
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
-             count_s=args.count_s, method=args.method, backend=args.backend,
+             count_s=args.count_s, method=args.method,
+             backend=args.filter_backend or args.backend,
              refine_backend=args.refine_backend,
              mbr_backend=args.mbr_backend)
 

@@ -1,7 +1,7 @@
 from .mbr_join import MBR_BACKENDS, adaptive_grid, mbr_join  # noqa: F401
 from .filters import (  # noqa: F401
-    Approximation, IntermediateFilter, available_filters, get_filter,
-    register_filter,
+    Approximation, FILTER_BACKENDS, IntermediateFilter, available_filters,
+    get_filter, register_filter,
 )
 from .plan import JoinPlan, JoinStats  # noqa: F401
 from .refine import REFINE_BACKENDS  # noqa: F401

@@ -9,15 +9,16 @@ pipeline stage has a mesh-sharded batched path:
   evaluates its shard's intersection + reference-point ownership mask,
   qualifying counts psum-reduce on device, and the gathered mask emits
   the duplicate-free pair list on host.
-* **Filtering** (:func:`distributed_filter`, §3/§4): candidate pairs pack
-  into padded, *bucketed* batches (bucketing by interval-list width bounds
-  padding waste and is the primary load-balance/straggler lever) and
-  dispatch with ``shard_map``; each device runs the three interval joins
-  as one fused, branch-free vectorized pass. Filters that declare
+* **Filtering** (:func:`distributed_filter`, §3/§4/§9): candidate pairs
+  pack into padded, *bucketed* batches (bucketing by interval-list width
+  bounds padding waste and is the primary load-balance/straggler lever)
+  and dispatch with ``shard_map``; each device runs the three interval
+  joins as one fused, branch-free vectorized pass. Filters that declare
   ``supports_mesh`` (APRIL) ship packed batches through the mesh kernel;
-  every other registered filter runs its batched host ``verdicts`` — the
-  launcher works for all of ``none/april/april-c/ri/ra/5cch``. Counts are
-  psum-reduced; verdicts stay sharded for refinement.
+  every other registered filter runs its bucketed batched ``verdicts`` on
+  the selected ``filter_backend`` — the launcher works for all of
+  ``none/april/april-c/ri/ra/5cch``. Counts are psum-reduced; verdicts
+  stay sharded for refinement.
 * **Refinement** (:func:`distributed_refine`, §7): indecisive pairs refine
   sharded in vertex-count-bucketed chunks, guard-band-uncertain pairs
   escalating to the host, so verdicts equal the sequential oracle.
@@ -191,15 +192,20 @@ def distributed_april_filter(packed: PackedPairs, mesh: Mesh | None = None):
 
 def distributed_filter(filt, approx_r, approx_s, pairs: np.ndarray,
                        mesh: Mesh | None = None, backend: str = "numpy",
-                       predicate: str = "intersects"):
+                       predicate: str = "intersects",
+                       filter_backend: str | None = None):
     """Filter a candidate batch through any registered intermediate filter.
 
     Mesh-capable filters (``filt.supports_mesh``) run sharded across the
-    device mesh; the rest run their batched host ``verdicts``. Returns
+    device mesh on the ``jnp``/``pallas`` filter backends; the rest run
+    their bucketed batched ``verdicts`` on the selected backend
+    (``sequential`` runs the per-pair reference loop). ``filter_backend``
+    is the canonical knob name, ``backend`` its historical alias. Returns
     (verdicts [N] np.int8, counts dict).
     """
     from .filters import get_filter
     filt = get_filter(filt)
+    backend = filter_backend or backend
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
     # the mesh kernel evaluates the intersects trichotomy only; other
     # predicates run the filter's batched host path

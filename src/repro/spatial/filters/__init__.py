@@ -4,7 +4,8 @@ Importing this package registers the six built-in filters:
 ``none / april / april-c / ri / ra / 5cch``.
 """
 from .base import (  # noqa: F401
-    BACKENDS, PREDICATES, Approximation, IntermediateFilter,
+    BACKENDS, FILTER_BACKENDS, PREDICATES, Approximation,
+    IntermediateFilter,
     available_filters, get_filter, register_filter, unregister_filter,
 )
 from .none_filter import NoneFilter  # noqa: F401

@@ -1,12 +1,16 @@
 """APRIL and APRIL-C intermediate filters (paper §4, §5.1).
 
-The batched paths run the three interval joins (AA/AF/FA) as masked
-vectorized passes (`core.join.april_filter_batch`) on numpy or jnp device
-arrays; APRIL additionally has a mesh-sharded path (spatial/distributed.py).
-APRIL-C stores VByte-compressed lists; its per-pair reference streams
-(join-while-decompress, §5.1) while its batched path decompresses the
-objects of the batch on host first (DESIGN.md §3) and reuses the APRIL
-vectorized joins — verdicts are identical either way.
+The batched paths run the staged trichotomy of the bucketed filter-join
+subsystem (DESIGN.md §9, ``core.join``): the cheap AA-join evaluates the
+whole batch, the expensive AF/FA (or containment) joins only the compacted
+AA survivors. Interval lists are wrapped once per Approximation into
+device-ready :class:`~repro.core.join.IntervalLists` (cached in ``meta``,
+reused across ``JoinPlan`` calls); APRIL additionally has a mesh-sharded
+path (spatial/distributed.py). APRIL-C stores VByte-compressed lists; its
+per-pair reference streams (join-while-decompress, §5.1) while its batched
+path *bounds* decode work: one vectorized VByte pass decodes the A lists of
+the batch's objects, and F lists decode only for objects in AA-surviving
+rows — verdicts are identical either way.
 """
 from __future__ import annotations
 
@@ -89,30 +93,47 @@ class AprilFilter(IntermediateFilter):
         return Approximation(filter=self.name, store=store, n_order=n_order,
                              extent=extent, kind=kind)
 
-    # both sides as AprilStores (APRIL-C overrides to decompress the batch)
-    def _stores(self, approx_r, approx_s, pairs):
-        return approx_r.store, approx_s.store, pairs
+    # device-ready interval lists, built once per Approximation and reused
+    # across JoinPlan calls (APRIL-C overrides with the bounded batch decode)
+    @staticmethod
+    def _lists(approx, kind: str) -> join.IntervalLists:
+        cache = approx.meta.setdefault("interval_lists", {})
+        if kind not in cache:
+            store = approx.store
+            if kind == "line":
+                cache[kind] = join.IntervalLists.from_unit_cells(store.off,
+                                                                 store.ids)
+            else:
+                off = store.a_off if kind == "A" else store.f_off
+                ints = store.a_ints if kind == "A" else store.f_ints
+                cache[kind] = join.IntervalLists.from_intervals(off, ints)
+        return cache[kind]
 
     def verdicts(self, approx_r, approx_s, pairs, *,
                  predicate: str = "intersects", backend: str = "numpy",
                  order: tuple[str, ...] = _DEFAULT_ORDER, **opts
                  ) -> np.ndarray:
         self._check(predicate, backend)
+        if backend == "sequential":
+            return self.verdicts_seq(approx_r, approx_s, pairs,
+                                     predicate=predicate, order=order, **opts)
         e = self._empty(pairs)
         if e is not None:
             return e
-        use_jnp = backend in ("jnp", "pallas")
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        ri, si = pairs[:, 0], pairs[:, 1]
         if predicate == "linestring":
-            line: LineCellStore = approx_r.store
-            _, store_s, pairs = self._stores(approx_r, approx_s, pairs)
-            return join.linestring_filter_batch(
-                store_s, line.off, line.ids, pairs, use_jnp=use_jnp)
-        store_r, store_s, pairs = self._stores(approx_r, approx_s, pairs)
+            return join.linestring_trichotomy_rows(
+                self._lists(approx_r, "line"), self._lists(approx_s, "A"),
+                self._lists(approx_s, "F"), ri, si, backend=backend)
         if predicate == "within":
-            return join.within_filter_batch(store_r, store_s, pairs,
-                                            use_jnp=use_jnp)
-        return join.april_filter_batch(store_r, store_s, pairs, order=order,
-                                       use_jnp=use_jnp)
+            return join.within_trichotomy_rows(
+                self._lists(approx_r, "A"), self._lists(approx_s, "A"),
+                self._lists(approx_s, "F"), ri, si, backend=backend)
+        return join.april_trichotomy_rows(
+            self._lists(approx_r, "A"), self._lists(approx_r, "F"),
+            self._lists(approx_s, "A"), self._lists(approx_s, "F"),
+            ri, si, backend=backend, order=order)
 
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
                      order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:
@@ -175,22 +196,85 @@ class AprilCompressedFilter(AprilFilter):
         return Approximation(filter=self.name, store=store, n_order=n_order,
                              extent=extent, kind=kind)
 
-    def _stores(self, approx_r, approx_s, pairs):
-        """Host-decompress the objects touched by the batch (DESIGN.md §3)
-        and renumber the pairs into the temporary stores."""
+    # -- bounded batch decode (DESIGN.md §9) --------------------------------
+    # A lists decode once for the batch's unique objects (the AA-join needs
+    # them all); F lists decode per stage, for exactly the unique objects of
+    # the AA-surviving rows — a batch full of sure negatives decodes no F
+    # bytes at all.
+
+    def _a_side(self, approx, col: np.ndarray):
+        """(IntervalLists, rows) for one A-list side, decoded for the batch."""
+        store = approx.store
+        if not isinstance(store, compress.CompressedAprilStore):
+            return self._lists(approx, "A"), col
+        uniq, rows = np.unique(col, return_inverse=True)
+        off, ints = store.decompress_lists(uniq, "A")
+        return join.IntervalLists.from_intervals(off, ints), rows
+
+    def _f_side(self, approx, col_sel: np.ndarray):
+        """(IntervalLists, rows) for one F-list side, decoded for the
+        survivor rows only."""
+        store = approx.store
+        if not isinstance(store, compress.CompressedAprilStore):
+            return self._lists(approx, "F"), col_sel
+        uniq, rows = np.unique(col_sel, return_inverse=True)
+        off, ints = store.decompress_lists(uniq, "F")
+        return join.IntervalLists.from_intervals(off, ints), rows
+
+    def verdicts(self, approx_r, approx_s, pairs, *,
+                 predicate: str = "intersects", backend: str = "numpy",
+                 order: tuple[str, ...] = _DEFAULT_ORDER, **opts
+                 ) -> np.ndarray:
+        self._check(predicate, backend)
+        if backend == "sequential":
+            return self.verdicts_seq(approx_r, approx_s, pairs,
+                                     predicate=predicate, order=order, **opts)
+        if predicate in ("intersects", "selection") and "AA" not in order:
+            raise ValueError("order must include 'AA'")
+        e = self._empty(pairs)
+        if e is not None:
+            return e
         pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
-        new_pairs = pairs.copy()
-        store_r = approx_r.store
-        if isinstance(store_r, compress.CompressedAprilStore):
-            uniq, inv = np.unique(pairs[:, 0], return_inverse=True)
-            store_r = store_r.decompress(uniq)
-            new_pairs[:, 0] = inv
-        store_s = approx_s.store
-        if isinstance(store_s, compress.CompressedAprilStore):
-            uniq, inv = np.unique(pairs[:, 1], return_inverse=True)
-            store_s = store_s.decompress(uniq)
-            new_pairs[:, 1] = inv
-        return store_r, store_s, new_pairs
+        ri, si = pairs[:, 0], pairs[:, 1]
+        overlap = join._overlap_fn(backend)
+        if predicate == "linestring":
+            # the line side is an uncompressed cell-id store
+            C = self._lists(approx_r, "line")
+            Ya, ya_rows = self._a_side(approx_s, si)
+            aa = overlap(C, ri, Ya, ya_rows)
+        else:
+            Xa, xa_rows = self._a_side(approx_r, ri)
+            Ya, ya_rows = self._a_side(approx_s, si)
+            aa = overlap(Xa, xa_rows, Ya, ya_rows)
+        verdicts = np.where(aa, join.INDECISIVE, join.TRUE_NEG).astype(np.int8)
+        sel = np.nonzero(aa)[0]
+        if len(sel) == 0:
+            return verdicts
+        if predicate == "linestring":
+            Yf, yf_rows = self._f_side(approx_s, si[sel])
+            fhit = overlap(C, ri[sel], Yf, yf_rows)
+            verdicts[sel[fhit]] = join.TRUE_HIT
+            return verdicts
+        if predicate == "within":
+            Yf, yf_rows = self._f_side(approx_s, si[sel])
+            contain = join.contain_rows_jnp if backend in ("jnp", "pallas") \
+                else join.contain_rows_np
+            cont = contain(Xa, xa_rows[sel], Yf, yf_rows)
+            verdicts[sel[cont]] = join.TRUE_HIT
+            return verdicts
+        # degenerate orders leave AA survivors INDECISIVE, like the reference
+        for step in [s for s in order if s != "AA"]:
+            if len(sel) == 0:
+                break
+            if step == "AF":
+                Yf, yf_rows = self._f_side(approx_s, si[sel])
+                hit = overlap(Xa, xa_rows[sel], Yf, yf_rows)
+            else:
+                Xf, xf_rows = self._f_side(approx_r, ri[sel])
+                hit = overlap(Xf, xf_rows, Ya, ya_rows[sel])
+            verdicts[sel[hit]] = join.TRUE_HIT
+            sel = sel[~hit]
+        return verdicts
 
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
                      order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:

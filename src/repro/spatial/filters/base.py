@@ -20,10 +20,13 @@ Predicates: ``intersects`` | ``within`` | ``linestring`` | ``selection``.
 query polygons as the S side; ``linestring`` (§4.3.3) expects the R side
 built with ``kind='line'``.
 
-Backends: ``numpy`` (host, default), ``jnp`` (vmapped device arrays),
-``pallas`` (TPU kernels where available). Filters without a device path for
-a given predicate fall back to their vectorized numpy path — backend choice
-never changes verdicts.
+Backends (``filter_backend`` on :class:`~repro.spatial.plan.JoinPlan`,
+DESIGN.md §9): ``numpy`` (host, default), ``jnp`` (bucketed device
+batches), ``pallas`` (TPU kernels where available), ``sequential`` (the
+faithful per-pair reference loop — every filter dispatches it to
+``verdicts_seq``). Filters without a device path for a given predicate
+fall back to their vectorized numpy path — backend choice never changes
+verdicts.
 """
 from __future__ import annotations
 
@@ -33,16 +36,21 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ...core.join import INDECISIVE
+from ...core.join import FILTER_BACKENDS as _FILTER_BACKENDS
 from ...core.rasterize import Extent, GLOBAL_EXTENT
 
 __all__ = [
-    "PREDICATES", "BACKENDS", "BUILD_BACKENDS", "Approximation",
-    "IntermediateFilter",
+    "PREDICATES", "BACKENDS", "FILTER_BACKENDS", "BUILD_BACKENDS",
+    "Approximation", "IntermediateFilter",
     "register_filter", "unregister_filter", "get_filter", "available_filters",
 ]
 
 PREDICATES = ("intersects", "within", "linestring", "selection")
-BACKENDS = ("numpy", "jnp", "pallas")
+#: verdict-stage execution paths (DESIGN.md §9, the single source of truth
+#: in core.join); 'sequential' is the per-pair reference loop, dispatched
+#: to ``verdicts_seq`` by every filter
+FILTER_BACKENDS = _FILTER_BACKENDS
+BACKENDS = FILTER_BACKENDS   # historical alias
 #: construction backends (DESIGN.md §6): 'numpy'/'jnp' run the batched
 #: dataset-level build; 'sequential' is the per-object reference loop every
 #: batched build must be store-identical to.

@@ -26,6 +26,7 @@ class NoneFilter(IntermediateFilter):
                  predicate: str = "intersects", backend: str = "numpy",
                  **opts) -> np.ndarray:
         self._check(predicate, backend)
+        # every backend (sequential included) forwards everything
         return self._all_indecisive(pairs)
 
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate, **opts):

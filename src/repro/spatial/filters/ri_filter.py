@@ -40,6 +40,9 @@ class RIFilter(IntermediateFilter):
                  predicate: str = "intersects", backend: str = "numpy",
                  **opts) -> np.ndarray:
         self._check(predicate, backend)
+        if backend == "sequential":
+            return self.verdicts_seq(approx_r, approx_s, pairs,
+                                     predicate=predicate, **opts)
         e = self._empty(pairs)
         if e is not None:
             return e

@@ -22,10 +22,10 @@ Every filter evaluates whole candidate batches for every predicate
 (intersects / within / linestring / selection); statistics keep the shape
 of the paper's Tables 5/13/16/17 and Fig. 13. All four pipeline stages
 are dataset-batched behind backend knobs forwarded to ``JoinPlan`` —
-``mbr_backend`` (candidate generation, DESIGN.md §8), the filter
-``backend``/``use_jnp`` (§3), ``build_backend`` via build options (§6),
-and ``refine_backend`` (§7); see the README "Pipeline stages & backends"
-table.
+``mbr_backend`` (candidate generation, DESIGN.md §8), ``filter_backend``
+(the bucketed filter joins, §9; ``use_jnp`` is its legacy spelling),
+``build_backend`` via build options (§6), and ``refine_backend`` (§7);
+see the README "Pipeline stages & backends" table.
 """
 from __future__ import annotations
 
@@ -39,16 +39,16 @@ __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
            "polygon_linestring_join", "selection_queries"]
 
 
-def _plan(R, S, method, n_order, *, backend="numpy", refine_backend="numpy",
-          mbr_backend="numpy", mbr_grid=None, max_ra_cells=None, order=None,
-          r_kind="polygon"):
+def _plan(R, S, method, n_order, *, filter_backend="numpy",
+          refine_backend="numpy", mbr_backend="numpy", mbr_grid=None,
+          max_ra_cells=None, order=None, r_kind="polygon"):
     build_opts = {}
     filter_opts = {}
     if method == "ra" and max_ra_cells is not None:
         build_opts["max_cells"] = max_ra_cells
     if order is not None and method in ("april", "april-c"):
         filter_opts["order"] = order
-    return JoinPlan(R, S, filter=method, backend=backend,
+    return JoinPlan(R, S, filter=method, filter_backend=filter_backend,
                     refine_backend=refine_backend, mbr_backend=mbr_backend,
                     n_order=n_order, mbr_grid=mbr_grid, r_kind=r_kind,
                     build_opts=build_opts, filter_opts=filter_opts)
@@ -69,12 +69,16 @@ def spatial_intersection_join(
     use_jnp: bool = False, max_ra_cells: int = 750,
     prebuilt: tuple | None = None, mbr_grid: int | None = None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
+    filter_backend: str | None = None,
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: run the full pipeline; returns (pairs [K,2], stats).
 
     Prefer ``JoinPlan(R, S, filter=method).build().execute("intersects")``.
+    ``filter_backend`` overrides the legacy ``use_jnp`` switch.
     """
-    plan = _plan(R, S, method, n_order, backend="jnp" if use_jnp else "numpy",
+    plan = _plan(R, S, method, n_order,
+                 filter_backend=filter_backend
+                 or ("jnp" if use_jnp else "numpy"),
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
                  mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order)
     if prebuilt is not None:
@@ -86,11 +90,11 @@ def spatial_intersection_join(
 def spatial_within_join(
     R, S, method: str = "april", n_order: int = 10,
     prebuilt: tuple | None = None, refine_backend: str = "numpy",
-    mbr_backend: str = "numpy",
+    mbr_backend: str = "numpy", filter_backend: str = "numpy",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: within join (§4.3.2), pairs (r, s) with r within s."""
-    plan = _plan(R, S, method, n_order, refine_backend=refine_backend,
-                 mbr_backend=mbr_backend)
+    plan = _plan(R, S, method, n_order, filter_backend=filter_backend,
+                 refine_backend=refine_backend, mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=tuple(_adopt(method, p) for p in prebuilt))
     return plan.execute("within")
@@ -99,11 +103,12 @@ def spatial_within_join(
 def polygon_linestring_join(
     S, L, method: str = "april", n_order: int = 10,
     prebuilt=None, refine_backend: str = "numpy",
-    mbr_backend: str = "numpy",
+    mbr_backend: str = "numpy", filter_backend: str = "numpy",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: polygon x linestring join (§4.3.3), pairs are
     (line, poly). ``prebuilt`` is the polygon-side store."""
     plan = _plan(L, S, method, n_order, r_kind="line",
+                 filter_backend=filter_backend,
                  refine_backend=refine_backend, mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=(None, _adopt(method, prebuilt)))
@@ -113,11 +118,13 @@ def polygon_linestring_join(
 def selection_queries(
     data, queries, method: str = "april", n_order: int = 10, prebuilt=None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
+    filter_backend: str = "numpy",
 ) -> tuple[list[np.ndarray], JoinStats]:
     """Deprecated shim: polygonal range queries (§4.3.1). Returns, per query
     polygon, the data polygons intersecting it. ``prebuilt`` is the
     data-side store."""
     plan = _plan(data, queries, method, n_order,
+                 filter_backend=filter_backend,
                  refine_backend=refine_backend, mbr_backend=mbr_backend)
     if prebuilt is not None:
         plan.build(prebuilt=(_adopt(method, prebuilt), None))

@@ -13,7 +13,7 @@ filter (one batched ``verdicts`` call, §3) -> refinement of the indecisive
 remainder (one bucketed exact-geometry pass, §7) — and returns
 :class:`JoinStats` with per-stage wall times, the shape of the paper's
 Tables 5/13/16/17 and Fig. 13. Each stage's execution path is a backend
-knob (``mbr_backend`` / ``backend`` / ``refine_backend``, plus
+knob (``mbr_backend`` / ``filter_backend`` / ``refine_backend``, plus
 ``build_opts["build_backend"]`` for construction, §6); backends change
 execution, never results.
 """
@@ -24,7 +24,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG
+from ..core.join import (INDECISIVE, TRUE_HIT, TRUE_NEG,
+                         check_filter_backend)
 from ..core.rasterize import Extent, GLOBAL_EXTENT
 from . import refine
 from .filters import Approximation, IntermediateFilter, get_filter
@@ -38,7 +39,8 @@ __all__ = ["JoinStats", "JoinPlan"]
 class JoinStats:
     method: str
     predicate: str = "intersects"
-    backend: str = "numpy"
+    backend: str = "numpy"             # historical alias of filter_backend
+    filter_backend: str = "numpy"
     refine_backend: str = "numpy"
     mbr_backend: str = "numpy"
     n_candidates: int = 0
@@ -66,7 +68,7 @@ class JoinStats:
         h, g, i = self.rates()
         return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
                 f"mbr={self.t_mbr:.3f}s[{self.mbr_backend}] "
-                f"filter={self.t_filter:.3f}s "
+                f"filter={self.t_filter:.3f}s[{self.filter_backend}] "
                 f"refine={self.t_refine:.3f}s[{self.refine_backend}] "
                 f"total={self.t_total:.3f}s results={self.n_results}")
 
@@ -81,8 +83,12 @@ class JoinPlan:
     """A reusable two-dataset join session over one intermediate filter.
 
     ``filter`` is a registry name (``none/april/april-c/ri/ra/5cch``) or an
-    :class:`IntermediateFilter` instance; ``backend`` selects the verdict
-    execution path (``numpy`` | ``jnp`` | ``pallas``). ``r_kind``/``s_kind``
+    :class:`IntermediateFilter` instance; ``filter_backend`` selects the
+    verdict execution path of the intermediate-filter stage (``numpy`` |
+    ``jnp`` | ``pallas`` | ``sequential``, DESIGN.md §9 — ``sequential``
+    is the faithful per-pair reference every batched backend is
+    verdict-identical to; ``backend`` is its historical alias).
+    ``r_kind``/``s_kind``
     mark a side as 'line' (open chains) for the linestring predicate.
     ``refine_backend`` selects the execution path of the final exact-geometry
     stage (``numpy`` | ``jnp`` | ``pallas`` | ``sequential``, DESIGN.md §7) —
@@ -97,18 +103,26 @@ class JoinPlan:
     """
 
     def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
-                 backend: str = "numpy", refine_backend: str = "numpy",
+                 filter_backend: str | None = None,
+                 backend: str | None = None, refine_backend: str = "numpy",
                  mbr_backend: str = "numpy", n_order: int = 10,
                  extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
                  s_kind: str = "polygon", mbr_grid: int | None = None,
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
+        if (filter_backend is not None and backend is not None
+                and filter_backend != backend):
+            raise ValueError("pass filter_backend or its alias backend, "
+                             f"not both ({filter_backend!r} vs {backend!r})")
+        filter_backend = filter_backend or backend or "numpy"
+        check_filter_backend(filter_backend)
         refine._check_backend(refine_backend)
         _check_mbr_backend(mbr_backend)
         self.R = R
         self.S = S
         self.filter = get_filter(filter)
-        self.backend = backend
+        self.filter_backend = filter_backend
+        self.backend = filter_backend      # historical alias
         self.refine_backend = refine_backend
         self.mbr_backend = mbr_backend
         self.n_order = n_order
@@ -206,7 +220,8 @@ class JoinPlan:
         if self.approx_r is None or self.approx_s is None:
             self.build()
         stats = JoinStats(method=self.filter.name, predicate=predicate,
-                          backend=self.backend,
+                          backend=self.filter_backend,
+                          filter_backend=self.filter_backend,
                           refine_backend=self.refine_backend,
                           mbr_backend=self.mbr_backend)
         stats.t_build = self._t_build
@@ -224,7 +239,7 @@ class JoinPlan:
         t0 = time.perf_counter()
         verdicts = self.filter.verdicts(
             self.approx_r, self.approx_s, pairs, predicate=predicate,
-            backend=self.backend, **self.filter_opts)
+            backend=self.filter_backend, **self.filter_opts)
         stats.t_filter = time.perf_counter() - t0
         _apply_verdicts(stats, verdicts)
 

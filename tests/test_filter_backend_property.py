@@ -1,0 +1,181 @@
+"""Hypothesis property tests for the bucketed filter-join subsystem
+(DESIGN.md §9): staged trichotomy drivers == per-pair references on
+arbitrary interval lists (empty and single-interval lists included), every
+registered method x every predicate == its sequential reference, the
+vectorized VByte batch decoder, and the fused Pallas trichotomy kernel."""
+import numpy as np
+import pytest
+
+from repro.core import compress, join
+from repro.core.april import AprilStore
+from repro.core.join import (IntervalLists, april_trichotomy_rows,
+                             linestring_trichotomy_rows,
+                             within_trichotomy_rows)
+from repro.core.rasterize import GLOBAL_EXTENT
+from repro.datagen import make_dataset, make_linestrings
+from repro.spatial import JoinPlan
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+N_ORDER = 6
+
+
+# ---------------------------------------------------------------------------
+# strategies: CSR interval stores with empty and single-interval rows
+# ---------------------------------------------------------------------------
+
+@st.composite
+def interval_list(draw, max_id=2**12, max_len=12):
+    """Sorted disjoint half-open intervals (possibly empty or single)."""
+    pts = draw(st.lists(st.integers(0, max_id), min_size=0,
+                        max_size=2 * max_len, unique=True))
+    pts = sorted(pts)
+    if len(pts) % 2:
+        pts = pts[:-1]
+    return np.asarray(pts, np.uint64).reshape(-1, 2)
+
+
+@st.composite
+def april_store(draw, n_rows):
+    """An AprilStore over hypothesis-drawn A/F lists (empty rows allowed)."""
+    def pack(lists):
+        off = np.zeros(len(lists) + 1, np.int64)
+        off[1:] = np.cumsum([len(l) for l in lists])
+        ints = (np.concatenate(lists, axis=0) if any(len(l) for l in lists)
+                else np.zeros((0, 2), np.uint64))
+        return off, ints
+    a = [draw(interval_list()) for _ in range(n_rows)]
+    f = [draw(interval_list()) for _ in range(n_rows)]
+    a_off, a_ints = pack(a)
+    f_off, f_ints = pack(f)
+    return AprilStore(n_order=N_ORDER, extent=GLOBAL_EXTENT, a_off=a_off,
+                      a_ints=a_ints, f_off=f_off, f_ints=f_ints)
+
+
+def _all_pairs(nr, ns):
+    return np.stack(np.meshgrid(np.arange(nr), np.arange(ns),
+                                indexing="ij"), axis=-1).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# trichotomy drivers == per-pair references on arbitrary lists
+# ---------------------------------------------------------------------------
+
+@given(april_store(3), april_store(3), st.sampled_from(["numpy", "jnp"]),
+       st.permutations(["AA", "AF", "FA"]))
+@settings(max_examples=40, deadline=None)
+def test_trichotomy_property(sr, ss, backend, order):
+    """Bucketed batched verdicts == april_verdict_pair / within_verdict_pair
+    for ANY interval lists — empties and single-interval rows included."""
+    pairs = _all_pairs(len(sr), len(ss))
+    want = np.asarray([
+        join.april_verdict_pair(sr.a_list(i), sr.f_list(i), ss.a_list(j),
+                                ss.f_list(j), order=tuple(order))
+        for i, j in pairs], np.int8)
+    got = april_trichotomy_rows(
+        IntervalLists.from_intervals(sr.a_off, sr.a_ints),
+        IntervalLists.from_intervals(sr.f_off, sr.f_ints),
+        IntervalLists.from_intervals(ss.a_off, ss.a_ints),
+        IntervalLists.from_intervals(ss.f_off, ss.f_ints),
+        pairs[:, 0], pairs[:, 1], backend=backend, order=tuple(order))
+    np.testing.assert_array_equal(got, want)
+
+    want_w = np.asarray([
+        join.within_verdict_pair(sr.a_list(i), sr.f_list(i), ss.a_list(j),
+                                 ss.f_list(j))
+        for i, j in pairs], np.int8)
+    got_w = within_trichotomy_rows(
+        IntervalLists.from_intervals(sr.a_off, sr.a_ints),
+        IntervalLists.from_intervals(ss.a_off, ss.a_ints),
+        IntervalLists.from_intervals(ss.f_off, ss.f_ints),
+        pairs[:, 0], pairs[:, 1], backend=backend)
+    np.testing.assert_array_equal(got_w, want_w)
+
+
+@given(st.lists(st.lists(st.integers(0, 2**12), min_size=0, max_size=10,
+                         unique=True), min_size=1, max_size=3),
+       april_store(2), st.sampled_from(["numpy", "jnp"]))
+@settings(max_examples=30, deadline=None)
+def test_linestring_trichotomy_property(cells, ss, backend):
+    """Line unit-interval joins == linestring_verdict_pair, incl. empty
+    cell sets."""
+    ids = [np.asarray(sorted(c), np.uint64) for c in cells]
+    off = np.zeros(len(ids) + 1, np.int64)
+    off[1:] = np.cumsum([len(i) for i in ids])
+    flat = (np.concatenate(ids) if any(len(i) for i in ids)
+            else np.zeros(0, np.uint64))
+    pairs = _all_pairs(len(ids), len(ss))
+    want = np.asarray([
+        join.linestring_verdict_pair(ss.a_list(j), ss.f_list(j), ids[i])
+        for i, j in pairs], np.int8)
+    got = linestring_trichotomy_rows(
+        IntervalLists.from_unit_cells(off, flat),
+        IntervalLists.from_intervals(ss.a_off, ss.a_ints),
+        IntervalLists.from_intervals(ss.f_off, ss.f_ints),
+        pairs[:, 0], pairs[:, 1], backend=backend)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# every registered method x every predicate == its reference
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["none", "april", "april-c", "ri", "ra", "5cch"]),
+       st.sampled_from(["intersects", "within", "linestring", "selection"]),
+       st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_every_method_every_predicate_property(method, predicate, seed):
+    """Bucketed batched filter verdicts == the sequential per-pair reference
+    for all five methods across all four predicates, on arbitrary seeded
+    workloads."""
+    if predicate == "linestring":
+        R = make_linestrings(seed=seed, count=10)
+        kind = "line"
+    else:
+        R = make_dataset("T1", seed=seed, count=10)
+        kind = "polygon"
+    S = make_dataset("T2", seed=seed + 1, count=14)
+    plan = JoinPlan(R, S, filter=method, n_order=N_ORDER, r_kind=kind,
+                    build_opts={"max_cells": 64} if method == "ra" else {})
+    plan.build()
+    pairs = plan.candidates(predicate)
+    want = plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                                predicate=predicate, backend="sequential")
+    for backend in ("numpy", "jnp"):
+        got = plan.filter.verdicts(plan.approx_r, plan.approx_s, pairs,
+                                   predicate=predicate, backend=backend)
+        np.testing.assert_array_equal(got, want, err_msg=(method, predicate,
+                                                          backend))
+
+
+# ---------------------------------------------------------------------------
+# vectorized VByte batch decode
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.lists(st.integers(0, 2**40), min_size=0, max_size=40,
+                         unique=True), min_size=0, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_vbyte_decode_many_property(seqs):
+    vals = [np.asarray(sorted(s), np.uint64) for s in seqs]
+    bufs = [(compress.vbyte_encode(v), len(v)) for v in vals]
+    got, off = compress.vbyte_decode_many(bufs)
+    assert len(off) == len(bufs) + 1
+    for i, v in enumerate(vals):
+        np.testing.assert_array_equal(got[off[i]: off[i + 1]], v)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas trichotomy kernel
+# ---------------------------------------------------------------------------
+
+@given(april_store(4), april_store(4))
+@settings(max_examples=10, deadline=None)
+def test_pallas_trichotomy_matches_reference(sr, ss):
+    pairs = _all_pairs(len(sr), len(ss))
+    want = np.asarray([
+        join.april_verdict_pair(sr.a_list(i), sr.f_list(i), ss.a_list(j),
+                                ss.f_list(j))
+        for i, j in pairs], np.int8)
+    got = join.april_filter_batch(sr, ss, pairs, backend="pallas")
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,89 @@
+"""CI bench-regression gate: committed BENCH_*.json artifacts must be sane.
+
+Every ``BENCH_*.json`` at the repo root is a benchmark acceptance artifact
+(filter / construction / refinement / MBR join). This gate keeps a PR from
+committing one that records a regression or a broken backend:
+
+* the file must parse as a JSON object and contain at least one ``speedup``
+  leaf (schema presence — an empty or truncated artifact fails);
+* every identity flag (``verdicts_equal`` / ``pair_sets_equal`` /
+  ``stores_equal``) must be ``true`` — a backend that diverges from its
+  sequential reference cannot ship behind a green bench file;
+* every ``speedup*`` leaf must be >= 1.0 — "batched" may never be slower
+  than the sequential reference it replaced.
+
+Run from the repo root: ``python tools/check_bench.py`` (no repo imports —
+the gate also runs before the package installs).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+IDENTITY_FLAGS = ("verdicts_equal", "pair_sets_equal", "stores_equal")
+MIN_SPEEDUP = 1.0
+
+
+def _walk(node, path=""):
+    """Yield (dotted-path, key, value) for every leaf of a JSON tree."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, f"{path}[{i}]")
+    else:
+        key = path.rsplit(".", 1)[-1]
+        yield path, key, node
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable bench artifact ({e})"]
+    if not isinstance(data, dict):
+        return [f"{path.name}: top level must be a JSON object"]
+    n_speedups = 0
+    for dotted, key, value in _walk(data):
+        if key in IDENTITY_FLAGS:
+            if value is not True:
+                errors.append(f"{path.name}: {dotted} is {value!r}, "
+                              "expected true")
+        elif key.startswith("speedup"):
+            n_speedups += 1
+            if not isinstance(value, (int, float)) or value < MIN_SPEEDUP:
+                errors.append(f"{path.name}: {dotted} = {value!r} "
+                              f"(regression: every speedup must be "
+                              f">= {MIN_SPEEDUP})")
+    if n_speedups == 0:
+        errors.append(f"{path.name}: no speedup field found — schema "
+                      "missing or artifact truncated")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    paths = [pathlib.Path(p) for p in (argv or [])] \
+        or sorted(ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("bench gate FAILED: no BENCH_*.json artifacts found")
+        return 1
+    errors = []
+    for p in paths:
+        errors += check_file(p)
+    if errors:
+        print("bench gate FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"bench gate ok: {len(paths)} artifacts "
+          f"({', '.join(p.name for p in paths)}) — all identity flags true, "
+          f"all speedups >= {MIN_SPEEDUP}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

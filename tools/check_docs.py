@@ -1,8 +1,16 @@
 """CI docs-consistency check: the backend-knob surface must be documented.
 
-Every ``*backend`` kwarg accepted by ``JoinPlan.__init__`` (plus
-``build_backend``, which travels through ``build_opts`` to every filter's
-``build``) must appear, as a whole word, in both README.md and DESIGN.md —
+Two knob sources are scanned:
+
+* every ``*backend`` kwarg accepted by ``JoinPlan.__init__`` (plus
+  ``build_backend``, which travels through ``build_opts`` to every
+  filter's ``build``);
+* every ``--*-backend`` flag exposed by the distributed launcher
+  (``repro.launch.spatial_join``) — flags normalize to knob names
+  (``--filter-backend`` -> ``filter_backend``), so a launcher-only surface
+  cannot ship undocumented either.
+
+Each knob must appear, as a whole word, in both README.md and DESIGN.md —
 so a new stage backend cannot ship without landing in the "Pipeline stages
 & backends" table and its DESIGN section.
 
@@ -23,12 +31,25 @@ DOCS = ("README.md", "DESIGN.md")
 # build_backend is accepted by every IntermediateFilter.build (via the
 # JoinPlan build_opts dict), not as a named JoinPlan kwarg
 EXTRA_KNOBS = ("build_backend",)
+LAUNCHER = ROOT / "src" / "repro" / "launch" / "spatial_join.py"
+
+
+def plan_knobs() -> list[str]:
+    params = inspect.signature(JoinPlan.__init__).parameters
+    return [p for p in params if p.endswith("backend")]
+
+
+def launcher_knobs() -> list[str]:
+    """Knob names behind the launcher's ``--*-backend`` argparse flags."""
+    text = LAUNCHER.read_text()
+    flags = re.findall(r'add_argument\(\s*"(--[a-z][a-z-]*backend)"', text)
+    return [f.lstrip("-").replace("-", "_") for f in flags]
 
 
 def backend_knobs() -> list[str]:
-    params = inspect.signature(JoinPlan.__init__).parameters
-    knobs = [p for p in params if p.endswith("backend")]
-    return knobs + list(EXTRA_KNOBS)
+    knobs = plan_knobs() + list(EXTRA_KNOBS)
+    knobs += [k for k in launcher_knobs() if k not in knobs]
+    return knobs
 
 
 def main() -> int:
