@@ -11,7 +11,7 @@ import time
 from . import (adaptive_order, comparative, construction, effect_of_n,
                filter_throughput, granularity, join_order, kernel_bench,
                linestring, mbr_join, partitioning, refinement, selection,
-               size_variance, space, within_join)
+               service_throughput, size_variance, space, within_join)
 
 SUITES = {
     "table4_space": space,
@@ -33,6 +33,8 @@ SUITES = {
     "refinement": refinement,
     # emits BENCH_mbr.json: sequential vs batched candidate generation
     "mbr_join": mbr_join,
+    # emits BENCH_service.json: warm micro-batched serving vs cold joins
+    "service_throughput": service_throughput,
 }
 
 

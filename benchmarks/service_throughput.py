@@ -1,0 +1,166 @@
+"""BENCH_service: warm micro-batched serving vs per-request cold joins.
+
+The ISSUE-6 acceptance gate: a :class:`~repro.spatial.service.JoinService`
+with warm device-resident stores (LRU store cache + warm MBR bucket index)
+serving a micro-batched request trace must sustain >= 1.0x the throughput
+of per-request cold ``JoinPlan`` runs (each rebuilding its approximations,
+the pre-service behavior), with ``verdicts_equal`` true — batching and
+warm-store reuse are execution details that never change results.
+``benchmarks/run.py`` persists the result as BENCH_service.json and
+``tools/check_bench.py`` guards the committed artifact in CI.
+
+``python -m benchmarks.service_throughput --smoke`` is the CI quick-lane
+check: micro-batched verdicts == per-request sequential verdicts for every
+service predicate, plus the incremental-maintenance identity (mutated warm
+stores == fresh rebuild) on the serving path.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.datagen import make_dataset
+from repro.spatial import JoinPlan, JoinService
+
+N_ORDER = 8
+N_REQUESTS = 48
+
+
+def _queries(Q):
+    return [(Q.verts[i, : Q.nverts[i]],) for i in range(len(Q))]
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).reshape(-1, 2).tolist()))
+
+
+def _cold_requests(D, Q, predicate: str, method: str, n_order: int):
+    """Per-request cold runs: every request pays its own store build (the
+    pre-service behavior of every JoinPlan caller)."""
+    out = []
+    for i in range(len(Q)):
+        one = make_one(Q, i)
+        plan = JoinPlan(D, one, filter=method, n_order=n_order)
+        pairs, _ = plan.execute(predicate)
+        out.append(pairs)
+    return out
+
+
+def make_one(Q, i: int):
+    from repro.datagen.synthetic import PolygonDataset
+    nv = int(Q.nverts[i])
+    return PolygonDataset(name=f"q{i}", verts=Q.verts[i: i + 1, :nv],
+                          nverts=Q.nverts[i: i + 1])
+
+
+def bench_service(method: str = "april"):
+    D = make_dataset("T1", seed=5, count=400)
+    Q = make_dataset("T2", seed=6, count=N_REQUESTS)
+
+    # -- cold: one JoinPlan per request, stores rebuilt every time ----------
+    t0 = time.perf_counter()
+    cold = _cold_requests(D, Q, "selection", method, N_ORDER)
+    t_cold = time.perf_counter() - t0
+
+    # -- warm: micro-batched service over cached stores ---------------------
+    svc = JoinService(method=method, n_order=N_ORDER)
+    svc.register_dataset("T1", D)
+    svc.warm_store("T1")            # preprocessing, amortized (paper §1)
+    t0 = time.perf_counter()
+    tickets = [svc.submit("T1", "selection", Q.verts[i, : Q.nverts[i]])
+               for i in range(len(Q))]
+    svc.drain()
+    t_warm = time.perf_counter() - t0
+
+    # each cold run has a single query, so both sides carry query index 0
+    equal = all(_pairs_set(t.wait(10.0).pairs) == _pairs_set(cold[i])
+                for i, t in enumerate(tickets))
+    assert equal, "micro-batched verdicts diverged from cold per-request"
+
+    lat = svc.latency_stats()
+    return {
+        "dataset": "T1 x T2", "method": method, "n_order": N_ORDER,
+        "n_requests": N_REQUESTS,
+        "t_cold_per_request_s": round(t_cold, 4),
+        "t_warm_microbatched_s": round(t_warm, 4),
+        "cold_queries_per_s": round(N_REQUESTS / max(t_cold, 1e-9), 1),
+        "warm_queries_per_s": round(N_REQUESTS / max(t_warm, 1e-9), 1),
+        "speedup_warm_over_cold": round(t_cold / max(t_warm, 1e-9), 2),
+        "latency_p50_s": round(lat["p50_s"], 6),
+        "latency_p99_s": round(lat["p99_s"], 6),
+        "cache": dict(svc.cache.stats),
+        "verdicts_equal": bool(equal),
+    }
+
+
+def smoke() -> None:
+    """CI quick lane: micro-batched == per-request sequential for every
+    service predicate, and warm stores patched by insert/delete answer
+    identically to a fresh rebuild, for every filter method."""
+    from repro.spatial.filters import available_filters
+
+    D = make_dataset("T1", seed=21, count=90)
+    Q = make_dataset("T2", seed=22, count=8)
+
+    for method in ("april", "ri"):
+        svc = JoinService(method=method, n_order=6)
+        svc.register_dataset("d", D)
+        for predicate in ("selection", "intersects", "within"):
+            tickets = [svc.submit("d", predicate,
+                                  Q.verts[i, : Q.nverts[i]])
+                       for i in range(len(Q))]
+            assert svc.drain() == len(Q)
+            for i, t in enumerate(tickets):
+                ref, _ = JoinPlan(D, make_one(Q, i), filter=method,
+                                  n_order=6).execute(predicate)
+                assert _pairs_set(t.pairs) == _pairs_set(ref), \
+                    (method, predicate, i)
+        # window == selection with the rectangle's corner polygon
+        t = svc.submit("d", "window", (0.25, 0.25, 0.7, 0.7))
+        svc.drain()
+        rect = np.array([[0.25, 0.25], [0.7, 0.25], [0.7, 0.7], [0.25, 0.7]])
+        from repro.datagen.synthetic import PolygonDataset
+        ref, _ = JoinPlan(D, PolygonDataset(name="w", verts=rect[None],
+                                            nverts=np.array([4])),
+                          filter=method, n_order=6).execute("selection")
+        assert _pairs_set(t.wait(10.0).pairs) == _pairs_set(ref)
+        print(f"service smoke ok: {method} micro-batch == per-request")
+
+    # incremental identity on the serving path, every filter method
+    ins = Q.verts[0, : Q.nverts[0]] * 0.8 + 0.1
+    for method in available_filters():
+        svc = JoinService(method=method, n_order=6)
+        svc.register_dataset("d", D)
+        svc.warm_store("d")                      # build BEFORE mutating
+        svc.insert("d", ins)
+        svc.delete("d", 7)
+        t = svc.submit("d", "selection", Q.verts[1, : Q.nverts[1]])
+        svc.drain()
+        ref, _ = JoinPlan(svc.dataset("d"), make_one(Q, 1), filter=method,
+                          n_order=6).execute("selection")
+        assert _pairs_set(t.wait(10.0).pairs) == _pairs_set(ref), method
+        print(f"service smoke ok: {method} patched store == fresh rebuild")
+
+
+def run():
+    res = bench_service()
+    with open("BENCH_service.json", "w") as f:
+        json.dump(res, f, indent=2)
+    from .common import row
+    return [row("service_throughput",
+                1e6 * res["t_warm_microbatched_s"] / res["n_requests"],
+                f"warm_qps={res['warm_queries_per_s']};"
+                f"cold_qps={res['cold_queries_per_s']};"
+                f"speedup={res['speedup_warm_over_cold']}")]
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)

@@ -1,0 +1,11 @@
+"""Online spatial-join serving example: warm device-resident stores behind
+an LRU cache, micro-batched selection/window/intersects/within queries,
+incremental inserts/deletes patching the CSR interval stores in place.
+
+    PYTHONPATH=src python -m repro.launch.serve_join --queries 200
+    PYTHONPATH=src python examples/serve_spatial.py
+"""
+from repro.launch.serve_join import main
+
+if __name__ == "__main__":
+    main()

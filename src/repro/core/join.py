@@ -43,6 +43,7 @@ except Exception:  # pragma: no cover
 __all__ = [
     "TRUE_NEG", "TRUE_HIT", "INDECISIVE", "FILTER_BACKENDS",
     "check_filter_backend", "IntervalLists",
+    "csr_delete_row", "csr_append_row",
     "interval_join_pair", "april_verdict_pair", "within_verdict_pair",
     "linestring_verdict_pair", "pack_lists", "pack_csr_intervals",
     "overlap_rows_np", "contain_rows_np",
@@ -68,6 +69,35 @@ def check_filter_backend(backend: str) -> None:
     if backend not in FILTER_BACKENDS:
         raise ValueError(f"unknown filter backend {backend!r}; "
                          f"expected one of {FILTER_BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# CSR row splices (incremental store maintenance, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def csr_delete_row(off: np.ndarray, data: np.ndarray, i: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Splice row ``i`` out of a CSR (offsets [P+1], flat data) pair.
+
+    The flat segment ``data[off[i]:off[i+1]]`` is removed and later offsets
+    shift down — no other row's payload is recomputed. Works for any flat
+    axis-0 layout (interval tables [T, 2], cell-id vectors [T], ...).
+    """
+    off = np.asarray(off, np.int64)
+    lo, hi = int(off[i]), int(off[i + 1])
+    new_off = np.concatenate([off[:i + 1], off[i + 2:] - (hi - lo)])
+    new_data = np.concatenate([data[:lo], data[hi:]], axis=0)
+    return new_off, new_data
+
+
+def csr_append_row(off: np.ndarray, data: np.ndarray, row: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Append one row (flat payload ``row``) to a CSR pair; existing rows
+    are untouched."""
+    off = np.asarray(off, np.int64)
+    new_off = np.append(off, off[-1] + len(row))
+    new_data = np.concatenate([data, row], axis=0)
+    return new_off, new_data
 
 
 # ---------------------------------------------------------------------------
@@ -451,6 +481,26 @@ class IntervalLists:
                                                            np.int32)
             self._device = (jnp.asarray(s), jnp.asarray(l))
         return self._device
+
+    # -- incremental maintenance (row splices, DESIGN.md §10) ---------------
+
+    def delete_row(self, i: int) -> None:
+        """Splice row ``i`` out in place; only this row's endpoints move.
+        Drops the device copy — the next device batch re-uploads the
+        patched flat arrays."""
+        old_off = self.off
+        _, self.lasts = csr_delete_row(old_off, self.lasts, i)
+        self.off, self.starts = csr_delete_row(old_off, self.starts, i)
+        self._device = None
+
+    def append_row(self, starts: np.ndarray, lasts: np.ndarray) -> None:
+        """Append one row's biased-int32 endpoints in place."""
+        old_off = self.off
+        _, self.lasts = csr_append_row(old_off, self.lasts,
+                                       np.asarray(lasts, np.int32))
+        self.off, self.starts = csr_append_row(old_off, self.starts,
+                                               np.asarray(starts, np.int32))
+        self._device = None
 
 
 def _flat_rows(L: IntervalLists, idx: np.ndarray):

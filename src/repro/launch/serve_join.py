@@ -1,0 +1,162 @@
+"""Online spatial-join serving launcher (DESIGN.md §10).
+
+  PYTHONPATH=src python -m repro.launch.serve_join --queries 200
+
+Stands up a long-lived :class:`~repro.spatial.service.JoinService` — warm
+device-resident approximation stores behind the LRU store cache, warm MBR
+bucket index, micro-batching worker — and drives a seeded simulated
+traffic trace into it: a mix of ``selection`` / ``window`` /
+``intersects`` / ``within`` queries whose polygons are drawn from a second
+synthetic layer over the same map, interleaved with ``insert`` / ``delete``
+mutations that exercise the incremental store patches. Reports sustained
+queries/sec, p50/p99 latency, and cache hit/eviction stats; ``--ckpt-dir``
+periodically persists the stores + mutation log through
+:class:`~repro.runtime.checkpoint.CheckpointManager` (and resumes from the
+latest step on restart).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from ..datagen import make_dataset
+from ..runtime.checkpoint import CheckpointManager
+from ..spatial import JoinService
+from ..spatial.filters import available_filters
+
+_PREDICATE_MIX = ("selection", "selection", "window", "intersects", "within")
+
+
+def make_trace(rng: np.random.Generator, queries, n_requests: int):
+    """Seeded request trace: (predicate, query payload) tuples."""
+    trace = []
+    for _ in range(n_requests):
+        pred = _PREDICATE_MIX[rng.integers(len(_PREDICATE_MIX))]
+        if pred == "window":
+            c = rng.uniform(0.1, 0.9, 2)
+            w = rng.uniform(0.02, 0.2, 2)
+            payload = (c[0] - w[0], c[1] - w[1], c[0] + w[0], c[1] + w[1])
+        else:
+            qi = int(rng.integers(len(queries)))
+            payload = queries.verts[qi, : queries.nverts[qi]]
+        trace.append((pred, payload))
+    return trace
+
+
+def run_serve(dataset: str = "T1", count: int | None = 300,
+              query_layer: str = "T2", n_queries: int = 60,
+              n_requests: int = 100, method: str = "april",
+              n_order: int = 8, filter_backend: str = "numpy",
+              mbr_backend: str = "numpy", refine_backend: str = "numpy",
+              window_ms: float = 2.0, cache_mb: float = 256.0,
+              mutate_every: int = 25, ckpt_dir: str | None = None,
+              ckpt_every: int = 50, seed: int = 0,
+              background: bool = True) -> dict:
+    """Drive ``n_requests`` trace requests through a warm service; returns
+    the report dict (queries/sec, latency, cache + service stats)."""
+    rng = np.random.default_rng(seed)
+    D = make_dataset(dataset, seed=seed, count=count)
+    Q = make_dataset(query_layer, seed=seed + 1, count=n_queries)
+
+    svc = None
+    mgr = None
+    if ckpt_dir is not None:
+        mgr = CheckpointManager(ckpt_dir, async_save=False)
+        svc = JoinService.restore_checkpoint(
+            mgr, window_s=window_ms / 1e3,
+            cache_bytes=int(cache_mb * (1 << 20)),
+            filter_backend=filter_backend, mbr_backend=mbr_backend,
+            refine_backend=refine_backend)
+    if svc is None:
+        svc = JoinService(method=method, n_order=n_order,
+                          window_s=window_ms / 1e3,
+                          cache_bytes=int(cache_mb * (1 << 20)),
+                          filter_backend=filter_backend,
+                          mbr_backend=mbr_backend,
+                          refine_backend=refine_backend)
+        svc.register_dataset(dataset, D)
+
+    trace = make_trace(rng, Q, n_requests)
+    if background:
+        svc.start()
+    t0 = time.perf_counter()
+    tickets = []
+    step = 0
+    for i, (pred, payload) in enumerate(trace):
+        tickets.append(svc.submit(dataset, pred, payload))
+        if mutate_every and (i + 1) % mutate_every == 0:
+            # grow-and-shrink: the dataset size stays roughly constant
+            qi = int(rng.integers(len(Q)))
+            svc.insert(dataset, Q.verts[qi, : Q.nverts[qi]])
+            svc.delete(dataset, int(rng.integers(len(svc.dataset(dataset)))))
+        if mgr is not None and (i + 1) % ckpt_every == 0:
+            step += 1
+            svc.save_checkpoint(mgr, step)
+        if not background and len(svc._pending) >= 8:
+            svc.drain()
+    if background:
+        svc.stop()
+    else:
+        svc.drain()
+    for t in tickets:
+        t.wait(timeout=60.0)
+    elapsed = time.perf_counter() - t0
+    if mgr is not None:
+        step += 1
+        svc.save_checkpoint(mgr, step)
+
+    report = {
+        "dataset": dataset, "method": method, "n_order": n_order,
+        "n_requests": n_requests, "elapsed_s": elapsed,
+        "queries_per_s": n_requests / max(elapsed, 1e-9),
+        "latency": svc.latency_stats(),
+        "cache": dict(svc.cache.stats),
+        "service": dict(svc.stats),
+        "results_total": int(sum(len(t.pairs) for t in tickets)),
+    }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="T1")
+    ap.add_argument("--count", type=int, default=300)
+    ap.add_argument("--query-layer", default="T2")
+    ap.add_argument("--n-queries", type=int, default=60)
+    ap.add_argument("--queries", type=int, default=100,
+                    help="requests in the simulated traffic trace")
+    ap.add_argument("--method", default="april",
+                    choices=available_filters())
+    ap.add_argument("--n-order", type=int, default=8)
+    ap.add_argument("--filter-backend", default="numpy",
+                    help="verdict-stage execution path for every batch")
+    ap.add_argument("--mbr-backend", default="numpy",
+                    help="candidate-generation execution path")
+    ap.add_argument("--refine-backend", default="numpy",
+                    help="refinement-stage execution path")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="micro-batch accumulation window")
+    ap.add_argument("--cache-mb", type=float, default=256.0,
+                    help="store-cache byte budget (MiB)")
+    ap.add_argument("--mutate-every", type=int, default=25,
+                    help="insert+delete every N requests (0 disables)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    report = run_serve(
+        dataset=args.dataset, count=args.count,
+        query_layer=args.query_layer, n_queries=args.n_queries,
+        n_requests=args.queries, method=args.method, n_order=args.n_order,
+        filter_backend=args.filter_backend, mbr_backend=args.mbr_backend,
+        refine_backend=args.refine_backend, window_ms=args.window_ms,
+        cache_mb=args.cache_mb, mutate_every=args.mutate_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

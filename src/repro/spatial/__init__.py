@@ -1,4 +1,4 @@
-from .mbr_join import MBR_BACKENDS, adaptive_grid, mbr_join  # noqa: F401
+from .mbr_join import MBR_BACKENDS, MBRIndex, adaptive_grid, mbr_join  # noqa: F401,E501
 from .filters import (  # noqa: F401
     Approximation, FILTER_BACKENDS, IntermediateFilter, available_filters,
     get_filter, register_filter,
@@ -9,3 +9,5 @@ from .pipeline import (  # noqa: F401
     spatial_intersection_join, spatial_within_join,
     polygon_linestring_join, selection_queries,
 )
+from .store_cache import StoreCache  # noqa: F401
+from .service import JoinService, JoinTicket, SERVICE_PREDICATES  # noqa: F401

@@ -91,7 +91,53 @@ class AprilFilter(IntermediateFilter):
             store = build_april(dataset, n_order, extent, method,
                                 backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=n_order,
-                             extent=extent, kind=kind)
+                             extent=extent, kind=kind,
+                             meta={"build_opts": {"method": method}})
+
+    # -- incremental maintenance (row splice on the CSR interval lists) -----
+    def _store_append(self, approx, one) -> None:
+        store, o = approx.store, one.store
+        cache = approx.meta.get("interval_lists", {})
+        if isinstance(store, LineCellStore):
+            store.off, store.ids = join.csr_append_row(store.off, store.ids,
+                                                       o.ids)
+            if "line" in cache:
+                row = join.IntervalLists.from_unit_cells(o.off, o.ids)
+                cache["line"].append_row(row.starts, row.lasts)
+        else:
+            store.a_off, store.a_ints = join.csr_append_row(
+                store.a_off, store.a_ints, o.a_ints)
+            store.f_off, store.f_ints = join.csr_append_row(
+                store.f_off, store.f_ints, o.f_ints)
+            # splice the device-ready lists in place instead of rebuilding
+            # them: the biased-int32 conversion is elementwise, so a patched
+            # cache equals one freshly wrapped from the patched store
+            for kind, off, ints in (("A", o.a_off, o.a_ints),
+                                    ("F", o.f_off, o.f_ints)):
+                if kind in cache:
+                    row = join.IntervalLists.from_intervals(off, ints)
+                    cache[kind].append_row(row.starts, row.lasts)
+        if hasattr(store, "_interval_lists_cache"):
+            del store._interval_lists_cache
+
+    def _store_delete(self, approx, idx: int) -> None:
+        store = approx.store
+        cache = approx.meta.get("interval_lists", {})
+        if isinstance(store, LineCellStore):
+            store.off, store.ids = join.csr_delete_row(store.off, store.ids,
+                                                       idx)
+            if "line" in cache:
+                cache["line"].delete_row(idx)
+        else:
+            store.a_off, store.a_ints = join.csr_delete_row(
+                store.a_off, store.a_ints, idx)
+            store.f_off, store.f_ints = join.csr_delete_row(
+                store.f_off, store.f_ints, idx)
+            for kind in ("A", "F"):
+                if kind in cache:
+                    cache[kind].delete_row(idx)
+        if hasattr(store, "_interval_lists_cache"):
+            del store._interval_lists_cache
 
     # device-ready interval lists, built once per Approximation and reused
     # across JoinPlan calls (APRIL-C overrides with the bounded batch decode)
@@ -194,7 +240,28 @@ class AprilCompressedFilter(AprilFilter):
                 build_april(dataset, n_order, extent, method,
                             backend=build_backend))
         return Approximation(filter=self.name, store=store, n_order=n_order,
-                             extent=extent, kind=kind)
+                             extent=extent, kind=kind,
+                             meta={"build_opts": {"method": method}})
+
+    # VByte buffers are per-object python lists: splice is a list op; the
+    # line kind reuses the uncompressed CSR path of AprilFilter
+    def _store_append(self, approx, one) -> None:
+        store = approx.store
+        if isinstance(store, compress.CompressedAprilStore):
+            store.a_bufs.append(one.store.a_bufs[0])
+            store.f_bufs.append(one.store.f_bufs[0])
+            self._drop_derived(approx)
+        else:
+            super()._store_append(approx, one)
+
+    def _store_delete(self, approx, idx: int) -> None:
+        store = approx.store
+        if isinstance(store, compress.CompressedAprilStore):
+            del store.a_bufs[idx]
+            del store.f_bufs[idx]
+            self._drop_derived(approx)
+        else:
+            super()._store_delete(approx, idx)
 
     # -- bounded batch decode (DESIGN.md §9) --------------------------------
     # A lists decode once for the batch's unique objects (the AA-join needs

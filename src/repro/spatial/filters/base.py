@@ -128,6 +128,56 @@ class IntermediateFilter(abc.ABC):
                      predicate: str, **opts) -> int:
         raise NotImplementedError
 
+    # -- incremental maintenance (DESIGN.md §10) ----------------------------
+    def patch_insert(self, approx: Approximation, dataset_one) -> None:
+        """Append the approximation of ``dataset_one``'s single object to
+        ``approx`` in place (the new object gets id ``len(approx)``).
+
+        The one-object store comes from this filter's own :meth:`build`
+        under the ``build_opts`` recorded in ``approx.meta`` at build time;
+        construction is per-object independent (the batched build is
+        store-identical to the sequential per-object reference), so a
+        patched store equals a fresh rebuild over the extended dataset.
+        """
+        if len(dataset_one) != 1:
+            raise ValueError(f"patch_insert expects a 1-object dataset, "
+                             f"got {len(dataset_one)}")
+        opts = dict(approx.meta.get("build_opts", {}))
+        one = self.build(
+            dataset_one,
+            n_order=approx.n_order if approx.n_order is not None else 10,
+            extent=approx.extent if approx.extent is not None
+            else GLOBAL_EXTENT, kind=approx.kind, **opts)
+        self._store_append(approx, one)
+
+    def patch_delete(self, approx: Approximation, idx: int) -> None:
+        """Splice object ``idx`` out of ``approx`` in place; later ids
+        shift down by one (the numbering a fresh rebuild would use)."""
+        if not 0 <= int(idx) < len(approx):
+            raise IndexError(f"patch_delete: id {idx} out of range "
+                             f"[0, {len(approx)})")
+        self._store_delete(approx, int(idx))
+
+    def _store_append(self, approx: Approximation,
+                      one: Approximation) -> None:
+        raise NotImplementedError(
+            f"filter {self.name!r} has no incremental maintenance path")
+
+    def _store_delete(self, approx: Approximation, idx: int) -> None:
+        raise NotImplementedError(
+            f"filter {self.name!r} has no incremental maintenance path")
+
+    @staticmethod
+    def _drop_derived(approx: Approximation) -> None:
+        """Drop per-object derived caches that a row splice invalidates
+        (meta caches are index-keyed; ``core.join`` attaches a raw-store
+        interval-list cache)."""
+        for key in ("interval_lists", "pyramid"):
+            approx.meta.pop(key, None)
+        store = approx.store
+        if store is not None and hasattr(store, "_interval_lists_cache"):
+            del store._interval_lists_cache
+
     # -- optional mesh path (overridden by filters with a device kernel) ----
     def verdicts_mesh(self, approx_r, approx_s, pairs, *, mesh=None,
                       **opts) -> tuple[np.ndarray, dict]:

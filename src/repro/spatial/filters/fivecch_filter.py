@@ -32,6 +32,21 @@ class FiveCCHFilter(IntermediateFilter):
         return Approximation(filter=self.name, store=store, n_order=None,
                              extent=extent, kind=kind)
 
+    # -- incremental maintenance: pentagon row + hull CSR splice ------------
+    def _store_append(self, approx, one) -> None:
+        from ...core.join import csr_append_row
+        store, o = approx.store, one.store
+        store.pent = np.concatenate([store.pent, o.pent])
+        store.hull_off, store.hull_pts = csr_append_row(
+            store.hull_off, store.hull_pts, o.hull_pts)
+
+    def _store_delete(self, approx, idx: int) -> None:
+        from ...core.join import csr_delete_row
+        store = approx.store
+        store.pent = np.delete(store.pent, idx, axis=0)
+        store.hull_off, store.hull_pts = csr_delete_row(
+            store.hull_off, store.hull_pts, idx)
+
     def verdicts(self, approx_r, approx_s, pairs, *,
                  predicate: str = "intersects", backend: str = "numpy",
                  **opts) -> np.ndarray:

@@ -34,7 +34,29 @@ class RIFilter(IntermediateFilter):
             store = ri.build_ri(dataset, n_order, extent, enc,
                                 backend=build_backend)
         return Approximation(filter=self.name, store=store, n_order=n_order,
-                             extent=extent, kind=kind)
+                             extent=extent, kind=kind,
+                             meta={"build_opts": {"encoding": enc}})
+
+    # -- incremental maintenance: interval-row splice + bit-segment rebase --
+    def _store_append(self, approx, one) -> None:
+        from ...core.join import csr_append_row
+        store, o = approx.store, one.store
+        # per-interval bit offsets are absolute: rebase the appended
+        # object's segment past the existing bitstream
+        store.bit_off = np.concatenate(
+            [store.bit_off, o.bit_off[1:] + store.bit_off[-1]])
+        store.bits = np.concatenate([store.bits, o.bits])
+        store.off, store.ints = csr_append_row(store.off, store.ints, o.ints)
+
+    def _store_delete(self, approx, idx: int) -> None:
+        from ...core.join import csr_delete_row
+        store = approx.store
+        lo, hi = int(store.off[idx]), int(store.off[idx + 1])
+        b_lo, b_hi = int(store.bit_off[lo]), int(store.bit_off[hi])
+        store.bits = np.concatenate([store.bits[:b_lo], store.bits[b_hi:]])
+        store.bit_off = np.concatenate(
+            [store.bit_off[:lo], store.bit_off[hi:] - (b_hi - b_lo)])
+        store.off, store.ints = csr_delete_row(store.off, store.ints, idx)
 
     def verdicts(self, approx_r, approx_s, pairs, *,
                  predicate: str = "intersects", backend: str = "numpy",

@@ -47,7 +47,7 @@ import numpy as np
 __all__ = [
     "MBR_BACKENDS", "mbr_join", "mbr_intersect_mask", "adaptive_grid",
     "joint_extent", "bucket_ranges", "expand_buckets", "candidate_rows",
-    "pair_mask_body",
+    "pair_mask_body", "MBRIndex",
 ]
 
 MBR_BACKENDS = ("numpy", "jnp", "sequential")
@@ -203,6 +203,35 @@ def expand_buckets(lo: np.ndarray, hi: np.ndarray, k: int
     return obj, (lo[obj, 0] + ox) * k + (lo[obj, 1] + oy)
 
 
+def _cross_rows(obj_r: np.ndarray, buck_r: np.ndarray,
+                obj_s: np.ndarray, buck_s: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Cartesian co-bucket rows of two *bucket-sorted* (object, bucket)
+    tables: ``(ri, si, own)`` with ``own`` the shared bucket id. The single
+    definition of the sort-merge tail, shared between the one-shot
+    :func:`candidate_rows` and the warm :class:`MBRIndex` probe path."""
+    ur, start_r, cnt_r = np.unique(buck_r, return_index=True,
+                                   return_counts=True)
+    us, start_s, cnt_s = np.unique(buck_s, return_index=True,
+                                   return_counts=True)
+    common, ir, is_ = np.intersect1d(ur, us, assume_unique=True,
+                                     return_indices=True)
+    cr = cnt_r[ir]
+    cs = cnt_s[is_]
+    m = cr * cs
+    total = int(m.sum())
+    if total == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z
+    grp = np.repeat(np.arange(len(common), dtype=np.int64), m)
+    off = np.arange(total, dtype=np.int64) - (np.cumsum(m) - m)[grp]
+    a = off // cs[grp]
+    b = off % cs[grp]
+    ri = obj_r[start_r[ir][grp] + a]
+    si = obj_s[start_s[is_][grp] + b]
+    return ri, si, common[grp]
+
+
 def candidate_rows(mbrs_r: np.ndarray, mbrs_s: np.ndarray, k: int,
                    extent: tuple[float, float, float]
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -228,26 +257,10 @@ def candidate_rows(mbrs_r: np.ndarray, mbrs_s: np.ndarray, k: int,
     obj_r, buck_r = obj_r[order_r], buck_r[order_r]
     obj_s, buck_s = obj_s[order_s], buck_s[order_s]
 
-    ur, start_r, cnt_r = np.unique(buck_r, return_index=True,
-                                   return_counts=True)
-    us, start_s, cnt_s = np.unique(buck_s, return_index=True,
-                                   return_counts=True)
-    common, ir, is_ = np.intersect1d(ur, us, assume_unique=True,
-                                     return_indices=True)
-    cr = cnt_r[ir]
-    cs = cnt_s[is_]
-    m = cr * cs
-    total = int(m.sum())
-    if total == 0:
+    ri, si, own = _cross_rows(obj_r, buck_r, obj_s, buck_s)
+    if len(ri) == 0:
         z = np.zeros(0, np.int64)
         return z, z, z, z, lo_r, lo_s
-    grp = np.repeat(np.arange(len(common), dtype=np.int64), m)
-    off = np.arange(total, dtype=np.int64) - (np.cumsum(m) - m)[grp]
-    a = off // cs[grp]
-    b = off % cs[grp]
-    ri = obj_r[start_r[ir][grp] + a]
-    si = obj_s[start_s[is_][grp] + b]
-    own = common[grp]
     return ri, si, own // k, own % k, lo_r, lo_s
 
 
@@ -384,3 +397,97 @@ def mbr_join(mbrs_r: np.ndarray, mbrs_s: np.ndarray,
     mask_fn = _pair_mask_jnp if backend == "jnp" else _pair_mask_np
     keep = mask_fn(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y)
     return np.stack([ri[keep], si[keep]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Warm index: build the R-side bucket table once, probe many times
+# ---------------------------------------------------------------------------
+
+class MBRIndex:
+    """Grid-hash bucket table over one dataset's MBRs, built once and
+    probed by many query batches (the serving path of DESIGN.md §10).
+
+    A probe reuses the sorted (object, bucket) table instead of
+    re-expanding and re-sorting the indexed side per join. The pair *set*
+    is grid- and extent-invariant (``floor`` and ``clip`` are monotone, so
+    the reference-point ownership cell — the elementwise max of the two
+    clipped low cells — is covered by both objects' clipped cell ranges
+    even when a query MBR lies outside the index extent), hence
+    ``probe(q)`` equals ``mbr_join(self.mbrs, q)`` as a set for any grid.
+
+    ``insert`` / ``delete`` splice only the affected buckets' entries
+    (``stats["entries_touched"]`` counts them) — with the grid and extent
+    pinned at construction, a patched index is array-identical to one
+    freshly built over the patched MBRs with the same ``grid``/``extent``.
+    """
+
+    def __init__(self, mbrs: np.ndarray, grid: int | None = None,
+                 extent: tuple[float, float, float] | None = None):
+        self.mbrs = np.asarray(mbrs, np.float64).reshape(-1, 4).copy()
+        self.extent = extent or joint_extent(self.mbrs, self.mbrs)
+        self.k = _resolve_grid(grid, self.mbrs, self.mbrs, self.extent)
+        self.lo, hi = bucket_ranges(self.mbrs, self.k, self.extent)
+        obj, buck = expand_buckets(self.lo, hi, self.k)
+        order = np.argsort(buck, kind="stable")
+        self._obj, self._buck = obj[order], buck[order]
+        self.stats = {"inserts": 0, "deletes": 0, "probes": 0,
+                      "entries_touched": 0}
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._buck)
+
+    def probe(self, mbrs_q: np.ndarray, backend: str = "numpy"
+              ) -> np.ndarray:
+        """All (indexed, query) pairs with intersecting MBRs, [N,2] int64 —
+        pair-set-identical to ``mbr_join(self.mbrs, mbrs_q, backend)``."""
+        _check_backend(backend)
+        self.stats["probes"] += 1
+        mbrs_q = np.asarray(mbrs_q, np.float64).reshape(-1, 4)
+        if len(self.mbrs) == 0 or len(mbrs_q) == 0:
+            return np.zeros((0, 2), np.int64)
+        if backend == "sequential":
+            return _mbr_join_sequential(self.mbrs, mbrs_q, self.k,
+                                        self.extent)
+        lo_q, hi_q = bucket_ranges(mbrs_q, self.k, self.extent)
+        obj_q, buck_q = expand_buckets(lo_q, hi_q, self.k)
+        order = np.argsort(buck_q, kind="stable")
+        obj_q, buck_q = obj_q[order], buck_q[order]
+        ri, si, own = _cross_rows(self._obj, self._buck, obj_q, buck_q)
+        if len(ri) == 0:
+            return np.zeros((0, 2), np.int64)
+        mask_fn = _pair_mask_jnp if backend == "jnp" else _pair_mask_np
+        keep = mask_fn(self.mbrs, mbrs_q, self.lo, lo_q, ri, si,
+                       own // self.k, own % self.k)
+        return np.stack([ri[keep], si[keep]], axis=1)
+
+    def insert(self, mbr: np.ndarray) -> int:
+        """Add one MBR; returns its index id. Only the new object's
+        buckets gain entries (spliced at each bucket run's end, matching
+        the obj-ascending order of a fresh build)."""
+        mbr = np.asarray(mbr, np.float64).reshape(1, 4)
+        new_id = len(self.mbrs)
+        self.mbrs = np.concatenate([self.mbrs, mbr])
+        lo, hi = bucket_ranges(mbr, self.k, self.extent)
+        self.lo = np.concatenate([self.lo, lo])
+        obj, buck = expand_buckets(lo, hi, self.k)
+        pos = np.searchsorted(self._buck, buck, side="right")
+        self._obj = np.insert(self._obj, pos, new_id)
+        self._buck = np.insert(self._buck, pos, buck)
+        self.stats["inserts"] += 1
+        self.stats["entries_touched"] += len(buck)
+        return new_id
+
+    def delete(self, idx: int) -> None:
+        """Remove the MBR at ``idx``; later ids shift down by one (the
+        renumbering a fresh build over the remaining MBRs would use)."""
+        if not 0 <= idx < len(self.mbrs):
+            raise IndexError(f"MBRIndex.delete: id {idx} out of range "
+                             f"[0, {len(self.mbrs)})")
+        keep = self._obj != idx
+        self.stats["entries_touched"] += int((~keep).sum())
+        self._obj = self._obj[keep] - (self._obj[keep] > idx)
+        self._buck = self._buck[keep]
+        self.mbrs = np.delete(self.mbrs, idx, axis=0)
+        self.lo = np.delete(self.lo, idx, axis=0)
+        self.stats["deletes"] += 1

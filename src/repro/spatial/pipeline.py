@@ -5,7 +5,7 @@ the within/linestring/selection variants — are kept as thin wrappers so
 existing call sites continue to work. New code should use::
 
     from repro.spatial import JoinPlan
-    plan = JoinPlan(R, S, filter="ri", backend="jnp", n_order=10)
+    plan = JoinPlan(R, S, filter="ri", filter_backend="jnp", n_order=10)
     plan.build()
     results, stats = plan.execute("intersects")
 

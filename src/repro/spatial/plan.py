@@ -2,7 +2,7 @@
 
 Separates *preprocessing* from *execution*:
 
-    plan = JoinPlan(R, S, filter="ri", backend="numpy", n_order=9)
+    plan = JoinPlan(R, S, filter="ri", filter_backend="numpy", n_order=9)
     plan.build()                               # approximations, reusable
     hits, stats = plan.execute("intersects")   # batched filter + refinement
     within, st2 = plan.execute("within")       # same approximations, free
@@ -20,7 +20,8 @@ execution, never results.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -72,6 +73,24 @@ class JoinStats:
                 f"refine={self.t_refine:.3f}s[{self.refine_backend}] "
                 f"total={self.t_total:.3f}s results={self.n_results}")
 
+    def to_dict(self) -> dict:
+        """JSON-safe dict of every field (the service response envelope);
+        ``t_build`` rides along — warm-vs-cold build time is the headline
+        serving metric. Round-trips through :meth:`from_dict`."""
+        out = {}
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, (np.integer, np.floating)):
+                v = v.item()
+            out[f.name] = dict(v) if f.name == "extra" else v
+        out["t_total"] = self.t_total
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JoinStats":
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
 
 def _apply_verdicts(stats: JoinStats, verdicts: np.ndarray) -> None:
     stats.n_true_hits = int(np.sum(verdicts == TRUE_HIT))
@@ -87,7 +106,8 @@ class JoinPlan:
     verdict execution path of the intermediate-filter stage (``numpy`` |
     ``jnp`` | ``pallas`` | ``sequential``, DESIGN.md §9 — ``sequential``
     is the faithful per-pair reference every batched backend is
-    verdict-identical to; ``backend`` is its historical alias).
+    verdict-identical to; ``backend`` is its historical alias, deprecated —
+    passing it emits a ``DeprecationWarning``).
     ``r_kind``/``s_kind``
     mark a side as 'line' (open chains) for the linestring predicate.
     ``refine_backend`` selects the execution path of the final exact-geometry
@@ -108,12 +128,18 @@ class JoinPlan:
                  mbr_backend: str = "numpy", n_order: int = 10,
                  extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
                  s_kind: str = "polygon", mbr_grid: int | None = None,
+                 mbr_index: "MBRIndex | None" = None,
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
         if (filter_backend is not None and backend is not None
                 and filter_backend != backend):
             raise ValueError("pass filter_backend or its alias backend, "
                              f"not both ({filter_backend!r} vs {backend!r})")
+        if backend is not None:
+            warnings.warn(
+                "JoinPlan(backend=...) is a deprecated alias; "
+                "pass filter_backend=... instead",
+                DeprecationWarning, stacklevel=2)
         filter_backend = filter_backend or backend or "numpy"
         check_filter_backend(filter_backend)
         refine._check_backend(refine_backend)
@@ -130,6 +156,7 @@ class JoinPlan:
         self.r_kind = r_kind
         self.s_kind = s_kind
         self.mbr_grid = mbr_grid
+        self.mbr_index = mbr_index
         self.build_opts = dict(build_opts or {})
         self.filter_opts = dict(filter_opts or {})
         self.approx_r: Approximation | None = None
@@ -182,10 +209,18 @@ class JoinPlan:
         needs MBR *containment*, but containment implies intersection, so
         the (stricter) containment test runs on just the hash join's
         candidate rows.
+
+        A warm :class:`~repro.spatial.mbr_join.MBRIndex` over R
+        (``mbr_index``) replaces the per-call expansion + sort of the R
+        side with a probe against its prebuilt bucket table — the pair set
+        is identical either way (grid/extent invariance).
         """
         R, S = self.R, self.S
-        pairs = mbr_join(R.mbrs, S.mbrs, grid=self.mbr_grid,
-                         backend=self.mbr_backend)
+        if self.mbr_index is not None:
+            pairs = self.mbr_index.probe(S.mbrs, backend=self.mbr_backend)
+        else:
+            pairs = mbr_join(R.mbrs, S.mbrs, grid=self.mbr_grid,
+                             backend=self.mbr_backend)
         if predicate == "within":
             mr = R.mbrs[pairs[:, 0]]
             ms = S.mbrs[pairs[:, 1]]

@@ -1,0 +1,480 @@
+"""`JoinService`: the online spatial-join serving layer (DESIGN.md §10).
+
+The paper's approximations are built **once** in preprocessing and
+amortized across many joins; this module exercises that contract as a
+system. A long-lived service owns, per registered dataset:
+
+* the polygon arrays themselves (a mutable handle — ``insert`` / ``delete``
+  patch them in place),
+* a warm :class:`~repro.spatial.mbr_join.MBRIndex` (the R-side bucket
+  table of the §8 grid-hash join, built once and probed per batch),
+* warm :class:`~repro.spatial.filters.base.Approximation` stores behind a
+  byte-budgeted LRU :class:`~repro.spatial.store_cache.StoreCache` — the
+  CSR ``IntervalLists`` device uploads ride along in ``meta`` and are
+  reused across requests.
+
+In front sits a micro-batching request queue: concurrent ``selection`` /
+``window`` / ``intersects`` / ``within`` queries accumulate for a
+configurable window, are grouped by (dataset, predicate, method, n_order),
+and each group executes as ONE batched
+:class:`~repro.spatial.plan.JoinPlan` pass — the query polygons of every
+request in the group become one S-side dataset, and the result pairs
+scatter back per request. Batching is an execution detail: the verdicts
+equal the per-request sequential runs (asserted by
+``benchmarks/service_throughput.py --smoke``).
+
+Incremental maintenance keeps warm state warm: a mutation appends to the
+dataset handle's log, patches the arrays and the MBR index immediately,
+and cached stores replay their pending log suffix lazily on next use via
+the filter's ``patch_insert`` / ``patch_delete`` (row splices — a patched
+store is identical to a fresh rebuild). ``save_checkpoint`` persists host
+copies of the datasets and interval-CSR stores plus each store's synced
+position in the mutation log through
+:class:`~repro.runtime.checkpoint.CheckpointManager`; restore re-creates
+the stores and replays what they missed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.april import AprilStore
+from ..core.ri import RIStore
+from ..core.rasterize import Extent, GLOBAL_EXTENT
+from ..datagen.synthetic import PolygonDataset
+from .filters import get_filter
+from .mbr_join import MBRIndex
+from .plan import JoinPlan
+from .store_cache import StoreCache, DEFAULT_BUDGET
+
+__all__ = ["JoinService", "JoinTicket", "SERVICE_PREDICATES"]
+
+#: request predicates; 'window' is a rectangle query executed as
+#: 'selection' with the rectangle's 4-corner polygon
+SERVICE_PREDICATES = ("selection", "window", "intersects", "within")
+
+
+def _pad_verts(verts: np.ndarray, vmax: int) -> np.ndarray:
+    """Zero-pad [P, V, 2] along V (padding is masked by ``nverts``
+    everywhere downstream)."""
+    if verts.shape[1] == vmax:
+        return verts
+    pad = np.zeros((verts.shape[0], vmax - verts.shape[1], 2), np.float64)
+    return np.concatenate([verts, pad], axis=1)
+
+
+def _one_polygon_dataset(verts: np.ndarray) -> PolygonDataset:
+    verts = np.asarray(verts, np.float64).reshape(-1, 2)
+    return PolygonDataset(name="_patch", verts=verts[None],
+                          nverts=np.array([len(verts)], np.int64))
+
+
+@dataclass
+class JoinTicket:
+    """Handle returned by :meth:`JoinService.submit`; resolved at drain.
+
+    ``pairs`` is [K, 2] int64 — (data object id, local query index) for the
+    request's query polygons; ``stats`` is the executed group's
+    ``JoinStats.to_dict()`` envelope (shared by every request in the
+    micro-batch); ``latency`` is submit-to-resolution seconds.
+    """
+    dataset_id: str
+    predicate: str
+    pairs: np.ndarray | None = None
+    stats: dict | None = None
+    latency: float | None = None
+    done: threading.Event = field(default_factory=threading.Event)
+
+    def wait(self, timeout: float | None = None) -> "JoinTicket":
+        if not self.done.wait(timeout):
+            raise TimeoutError("join request not resolved "
+                               f"(dataset={self.dataset_id!r})")
+        return self
+
+
+@dataclass
+class _Request:
+    ticket: JoinTicket
+    exec_predicate: str
+    method: str
+    n_order: int
+    verts: np.ndarray        # [Q, V, 2]
+    nverts: np.ndarray       # [Q]
+    t_submit: float = 0.0
+
+
+class _DatasetHandle:
+    """One registered dataset: mutable arrays + warm MBR index + the
+    mutation log cached stores sync against."""
+
+    def __init__(self, dataset: PolygonDataset, extent: Extent):
+        self.dataset = dataset
+        self.extent = extent
+        self.log: list[tuple] = []      # ("insert", verts[V,2]) | ("delete", id)
+        self._index: MBRIndex | None = None
+
+    @property
+    def seq(self) -> int:
+        return len(self.log)
+
+    @property
+    def index(self) -> MBRIndex:
+        if self._index is None:
+            self._index = MBRIndex(self.dataset.mbrs)
+        return self._index
+
+    def insert(self, verts: np.ndarray) -> int:
+        verts = np.asarray(verts, np.float64).reshape(-1, 2)
+        ds = self.dataset
+        vmax = max(ds.verts.shape[1], len(verts))
+        row = _pad_verts(verts[None], vmax)
+        self.dataset = PolygonDataset(
+            name=ds.name, verts=np.concatenate(
+                [_pad_verts(ds.verts, vmax), row]),
+            nverts=np.append(ds.nverts, len(verts)))
+        new_id = len(self.dataset) - 1
+        if self._index is not None:
+            self._index.insert(self.dataset.mbrs[new_id])
+        self.log.append(("insert", verts))
+        return new_id
+
+    def delete(self, obj_id: int) -> None:
+        ds = self.dataset
+        if not 0 <= obj_id < len(ds):
+            raise IndexError(f"delete: object id {obj_id} out of range "
+                             f"[0, {len(ds)})")
+        self.dataset = PolygonDataset(
+            name=ds.name, verts=np.delete(ds.verts, obj_id, axis=0),
+            nverts=np.delete(ds.nverts, obj_id))
+        if self._index is not None:
+            self._index.delete(obj_id)
+        self.log.append(("delete", int(obj_id)))
+
+
+class JoinService:
+    """Long-lived spatial-join server over warm device-resident stores.
+
+    ``window_s`` is the micro-batch accumulation window of the background
+    worker (:meth:`start`); without a worker, call :meth:`drain` to execute
+    everything pending synchronously (what tests and benchmarks do).
+    Backend knobs mirror :class:`~repro.spatial.plan.JoinPlan` and apply to
+    every batched pass.
+    """
+
+    def __init__(self, *, cache_bytes: int = DEFAULT_BUDGET,
+                 window_s: float = 0.002, method: str = "april",
+                 n_order: int = 10, filter_backend: str = "numpy",
+                 refine_backend: str = "numpy", mbr_backend: str = "numpy"):
+        self.cache = StoreCache(cache_bytes)
+        self.window_s = float(window_s)
+        self.method = method
+        self.n_order = int(n_order)
+        self.filter_backend = filter_backend
+        self.refine_backend = refine_backend
+        self.mbr_backend = mbr_backend
+        self.datasets: dict[str, _DatasetHandle] = {}
+        self._pending: list[_Request] = []
+        self._lock = threading.Lock()
+        # serializes store/index/dataset access between the micro-batch
+        # worker and mutating callers (mutations are cheap splices; queries
+        # inside a batch still run fully vectorized)
+        self._exec_lock = threading.Lock()
+        self._have_work = threading.Event()
+        self._worker: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._latencies: list[float] = []
+        self.stats = {"requests": 0, "batches": 0, "batched_requests": 0,
+                      "inserts": 0, "deletes": 0}
+
+    # -- datasets and mutations ---------------------------------------------
+
+    def register_dataset(self, dataset_id: str, dataset: PolygonDataset,
+                         extent: Extent = GLOBAL_EXTENT) -> None:
+        if dataset_id in self.datasets:
+            raise ValueError(f"dataset {dataset_id!r} already registered")
+        self.datasets[dataset_id] = _DatasetHandle(dataset, extent)
+
+    def dataset(self, dataset_id: str) -> PolygonDataset:
+        return self._handle(dataset_id).dataset
+
+    def _handle(self, dataset_id: str) -> _DatasetHandle:
+        try:
+            return self.datasets[dataset_id]
+        except KeyError:
+            raise KeyError(f"unknown dataset {dataset_id!r}; registered: "
+                           f"{sorted(self.datasets)}") from None
+
+    def insert(self, dataset_id: str, verts: np.ndarray) -> int:
+        """Add one polygon; returns its object id. Warm stores are patched
+        lazily (each replays the mutation log suffix it has not seen on its
+        next use) — nothing is rebuilt."""
+        with self._exec_lock:
+            new_id = self._handle(dataset_id).insert(verts)
+        self.stats["inserts"] += 1
+        return new_id
+
+    def delete(self, dataset_id: str, obj_id: int) -> None:
+        """Remove one polygon; later ids shift down by one (rebuild
+        numbering)."""
+        with self._exec_lock:
+            self._handle(dataset_id).delete(obj_id)
+        self.stats["deletes"] += 1
+
+    # -- warm store access --------------------------------------------------
+
+    def warm_store(self, dataset_id: str, method: str | None = None,
+                   n_order: int | None = None):
+        """The cached Approximation for (dataset, method, n_order), built
+        on miss and brought current with the mutation log on hit."""
+        method = method or self.method
+        n_order = self.n_order if n_order is None else int(n_order)
+        handle = self._handle(dataset_id)
+        key = (dataset_id, method, n_order)
+        approx = self.cache.get(key)
+        filt = get_filter(method)
+        if approx is None:
+            approx = filt.build(handle.dataset, n_order=n_order,
+                                extent=handle.extent, kind="polygon",
+                                side="r")
+            approx.meta["mutation_seq"] = handle.seq
+            self.cache.put(key, approx)
+            return approx
+        seq = approx.meta.get("mutation_seq", 0)
+        if seq < handle.seq:
+            for op in handle.log[seq:]:
+                if op[0] == "insert":
+                    filt.patch_insert(approx, _one_polygon_dataset(op[1]))
+                else:
+                    filt.patch_delete(approx, op[1])
+            approx.meta["mutation_seq"] = handle.seq
+            self.cache.resize(key)
+        return approx
+
+    # -- the request queue --------------------------------------------------
+
+    def submit(self, dataset_id: str, predicate: str, query,
+               nverts: np.ndarray | None = None, *,
+               method: str | None = None,
+               n_order: int | None = None) -> JoinTicket:
+        """Enqueue one query; returns a :class:`JoinTicket`.
+
+        ``query``: a polygon [V, 2] (``selection`` / ``intersects`` /
+        ``within``), a rectangle ``(x0, y0, x1, y1)`` (``window``), or a
+        padded batch [Q, V, 2] with ``nverts`` [Q].
+        """
+        if predicate not in SERVICE_PREDICATES:
+            raise ValueError(f"unknown predicate {predicate!r}; expected "
+                             f"one of {SERVICE_PREDICATES}")
+        self._handle(dataset_id)
+        if predicate == "window":
+            x0, y0, x1, y1 = (float(v) for v in np.asarray(query).ravel())
+            query = np.array([[x0, y0], [x1, y0], [x1, y1], [x0, y1]])
+        query = np.asarray(query, np.float64)
+        if query.ndim == 2:
+            query = query[None]
+        if nverts is None:
+            nverts = np.full(len(query), query.shape[1], np.int64)
+        exec_predicate = {"window": "selection"}.get(predicate, predicate)
+        ticket = JoinTicket(dataset_id=dataset_id, predicate=predicate)
+        req = _Request(ticket=ticket, exec_predicate=exec_predicate,
+                       method=method or self.method,
+                       n_order=self.n_order if n_order is None
+                       else int(n_order),
+                       verts=query, nverts=np.asarray(nverts, np.int64),
+                       t_submit=time.perf_counter())
+        with self._lock:
+            self._pending.append(req)
+            self.stats["requests"] += 1
+        self._have_work.set()
+        return ticket
+
+    def drain(self) -> int:
+        """Execute everything pending: one batched JoinPlan pass per
+        (dataset, predicate, method, n_order) group. Returns the number of
+        requests resolved."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+            self._have_work.clear()
+        if not batch:
+            return 0
+        groups: dict[tuple, list[_Request]] = {}
+        for req in batch:
+            key = (req.ticket.dataset_id, req.exec_predicate, req.method,
+                   req.n_order)
+            groups.setdefault(key, []).append(req)
+        for (did, predicate, method, n_order), reqs in groups.items():
+            with self._exec_lock:
+                self._run_group(did, predicate, method, n_order, reqs)
+        self.stats["batches"] += len(groups)
+        self.stats["batched_requests"] += len(batch)
+        return len(batch)
+
+    def _run_group(self, dataset_id: str, predicate: str, method: str,
+                   n_order: int, reqs: list[_Request]) -> None:
+        handle = self._handle(dataset_id)
+        approx = self.warm_store(dataset_id, method, n_order)
+        vmax = max(r.verts.shape[1] for r in reqs)
+        q_verts = np.concatenate([_pad_verts(r.verts, vmax) for r in reqs])
+        q_nverts = np.concatenate([r.nverts for r in reqs])
+        queries = PolygonDataset(name="_queries", verts=q_verts,
+                                 nverts=q_nverts)
+        plan = JoinPlan(handle.dataset, queries, filter=method,
+                        n_order=n_order, extent=handle.extent,
+                        filter_backend=self.filter_backend,
+                        refine_backend=self.refine_backend,
+                        mbr_backend=self.mbr_backend,
+                        mbr_index=handle.index)
+        plan.build(prebuilt=(approx, None))
+        pairs, stats = plan.execute(predicate)
+        stats.extra["batched_requests"] = len(reqs)
+        stats.extra["cache"] = dict(self.cache.stats)
+        envelope = stats.to_dict()
+        # scatter: each request owns a contiguous run of query indices
+        offs = np.cumsum([0] + [len(r.nverts) for r in reqs])
+        order = np.argsort(pairs[:, 1], kind="stable")
+        pairs = pairs[order]
+        bounds = np.searchsorted(pairs[:, 1], offs)
+        now = time.perf_counter()
+        for i, req in enumerate(reqs):
+            mine = pairs[bounds[i]: bounds[i + 1]].copy()
+            mine[:, 1] -= offs[i]
+            t = req.ticket
+            t.pairs, t.stats = mine, envelope
+            t.latency = now - req.t_submit
+            self._latencies.append(t.latency)
+            t.done.set()
+
+    # -- background micro-batching worker -----------------------------------
+
+    def start(self) -> None:
+        """Run the micro-batch loop in a daemon thread: wait for the first
+        pending request, accumulate for ``window_s``, drain."""
+        if self._worker is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self._have_work.wait(timeout=0.05):
+                    continue
+                time.sleep(self.window_s)
+                self.drain()
+
+        self._worker = threading.Thread(target=loop, daemon=True)
+        self._worker.start()
+
+    def stop(self) -> None:
+        if self._worker is None:
+            return
+        self._stop.set()
+        self._worker.join()
+        self._worker = None
+        self.drain()
+
+    # -- accounting ---------------------------------------------------------
+
+    def latency_stats(self) -> dict:
+        """p50/p99 submit-to-resolution latency over resolved requests."""
+        lat = np.asarray(self._latencies, np.float64)
+        if len(lat) == 0:
+            return {"n": 0, "p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+        return {"n": int(len(lat)),
+                "p50_s": float(np.percentile(lat, 50)),
+                "p99_s": float(np.percentile(lat, 99)),
+                "mean_s": float(lat.mean())}
+
+    # -- checkpointing ------------------------------------------------------
+
+    def save_checkpoint(self, manager, step: int) -> None:
+        """Persist datasets, interval-CSR stores (APRIL/RI) and the
+        mutation log through a
+        :class:`~repro.runtime.checkpoint.CheckpointManager`.
+
+        Stores whose arrays are not flat-checkpointable (RA ragged grids,
+        APRIL-C byte buffers, 5C+CH is cheap to rebuild) are rebuilt on
+        first use after restore; each persisted store records the log
+        position it is synced to, so restore replays exactly the mutations
+        it missed.
+        """
+        tree: dict = {}
+        extra: dict = {"datasets": {}, "stores": [],
+                       "service": {"method": self.method,
+                                   "n_order": self.n_order}}
+        for did, h in self.datasets.items():
+            tree[f"ds/{did}/verts"] = h.dataset.verts
+            tree[f"ds/{did}/nverts"] = h.dataset.nverts
+            extra["datasets"][did] = {
+                "name": h.dataset.name,
+                "extent": [h.extent.x0, h.extent.y0, h.extent.side],
+                "log": [["insert", v.tolist()] if op == "insert"
+                        else ["delete", v] for op, v in h.log],
+            }
+        for (did, method, n_order), approx in self.cache.items():
+            store = approx.store
+            if isinstance(store, AprilStore):
+                leaves = {"a_off": store.a_off, "a_ints": store.a_ints,
+                          "f_off": store.f_off, "f_ints": store.f_ints}
+            elif isinstance(store, RIStore):
+                leaves = {"off": store.off, "ints": store.ints,
+                          "bit_off": store.bit_off, "bits": store.bits}
+            else:
+                continue
+            rec = {"dataset_id": did, "method": method, "n_order": n_order,
+                   "seq": int(approx.meta.get("mutation_seq", 0)),
+                   "build_opts": dict(approx.meta.get("build_opts", {}))}
+            if isinstance(store, RIStore):
+                rec["encoding"] = store.encoding
+            extra["stores"].append(rec)
+            for name, arr in leaves.items():
+                tree[f"store/{did}/{method}/{n_order}/{name}"] = arr
+        manager.save(step, tree, extra=extra, block=True)
+
+    @classmethod
+    def restore_checkpoint(cls, manager, step: int | None = None,
+                           **service_opts) -> "JoinService | None":
+        """Rebuild a service from a checkpoint written by
+        :meth:`save_checkpoint`; returns ``None`` when no step exists."""
+        res = manager.restore(step)
+        if res is None:
+            return None
+        _, flat, extra = res
+        svc = cls(method=extra["service"]["method"],
+                  n_order=extra["service"]["n_order"], **service_opts)
+        for did, meta in extra["datasets"].items():
+            ds = PolygonDataset(name=meta["name"],
+                                verts=flat[f"ds/{did}/verts"],
+                                nverts=flat[f"ds/{did}/nverts"])
+            svc.register_dataset(did, ds, extent=Extent(*meta["extent"]))
+            h = svc.datasets[did]
+            h.log = [("insert", np.asarray(v, np.float64)) if op == "insert"
+                     else ("delete", int(v))
+                     for op, v in meta["log"]]
+        for rec in extra["stores"]:
+            did, method, n_order = (rec["dataset_id"], rec["method"],
+                                    rec["n_order"])
+            h = svc.datasets[did]
+            pre = f"store/{did}/{method}/{n_order}"
+            if method == "ri":
+                store = RIStore(n_order=n_order, extent=h.extent,
+                                encoding=rec["encoding"],
+                                off=flat[f"{pre}/off"],
+                                ints=flat[f"{pre}/ints"],
+                                bit_off=flat[f"{pre}/bit_off"],
+                                bits=flat[f"{pre}/bits"])
+            else:
+                store = AprilStore(n_order=n_order, extent=h.extent,
+                                   a_off=flat[f"{pre}/a_off"],
+                                   a_ints=flat[f"{pre}/a_ints"],
+                                   f_off=flat[f"{pre}/f_off"],
+                                   f_ints=flat[f"{pre}/f_ints"])
+            from .filters import Approximation
+            approx = Approximation(
+                filter=method, store=store, n_order=n_order, extent=h.extent,
+                kind="polygon",
+                meta={"build_opts": rec["build_opts"],
+                      "mutation_seq": rec["seq"]})
+            svc.cache.put((did, method, n_order), approx)
+        return svc

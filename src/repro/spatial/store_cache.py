@@ -1,0 +1,98 @@
+"""LRU cache of warm approximation stores for the join service
+(DESIGN.md §10).
+
+The paper's contract is *build once, query forever*: approximations are
+preprocessing artifacts amortized across many joins. :class:`StoreCache`
+holds built :class:`~repro.spatial.filters.base.Approximation`\\ s — with
+their device-resident ``IntervalLists`` caches riding along in ``meta`` —
+keyed by ``(dataset_id, filter_method, n_order)`` under a byte budget.
+Least-recently-used stores are evicted when the budget is exceeded;
+:attr:`stats` tracks hits / misses / evictions / resident bytes so the
+service can report cache efficiency per traffic trace.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from .filters import Approximation
+
+__all__ = ["StoreCache"]
+
+#: default byte budget: plenty for the synthetic datasets, small enough
+#: that a launcher flag can force eviction traffic in benchmarks
+DEFAULT_BUDGET = 256 << 20
+
+
+class StoreCache:
+    """Byte-budgeted LRU of built approximation stores.
+
+    Keys are ``(dataset_id, filter_method, n_order)`` tuples; values are
+    :class:`Approximation`. ``get`` refreshes recency; ``put`` evicts from
+    the LRU end until the new entry fits. A single store larger than the
+    whole budget is still admitted (the service must be able to run) but
+    evicts everything else.
+    """
+
+    def __init__(self, budget_bytes: int = DEFAULT_BUDGET):
+        if budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self._entries: OrderedDict[tuple, Approximation] = OrderedDict()
+        self._bytes: dict[tuple, int] = {}
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "resident_bytes": 0, "puts": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def get(self, key: tuple) -> Approximation | None:
+        approx = self._entries.get(key)
+        if approx is None:
+            self.stats["misses"] += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats["hits"] += 1
+        return approx
+
+    def put(self, key: tuple, approx: Approximation) -> None:
+        if key in self._entries:
+            self._drop(key)
+        size = approx.size_bytes()
+        while self._entries and \
+                self.stats["resident_bytes"] + size > self.budget_bytes:
+            old_key, _ = self._entries.popitem(last=False)
+            self.stats["resident_bytes"] -= self._bytes.pop(old_key)
+            self.stats["evictions"] += 1
+        self._entries[key] = approx
+        self._bytes[key] = size
+        self.stats["resident_bytes"] += size
+        self.stats["puts"] += 1
+
+    def resize(self, key: tuple) -> None:
+        """Re-measure one entry after an in-place store patch."""
+        if key in self._entries:
+            size = self._entries[key].size_bytes()
+            self.stats["resident_bytes"] += size - self._bytes[key]
+            self._bytes[key] = size
+
+    def pop(self, key: tuple) -> Approximation | None:
+        approx = self._entries.get(key)
+        if approx is not None:
+            self._drop(key)
+        return approx
+
+    def _drop(self, key: tuple) -> None:
+        del self._entries[key]
+        self.stats["resident_bytes"] -= self._bytes.pop(key)
+
+    def items(self):
+        """(key, approx) pairs, least-recently-used first."""
+        return list(self._entries.items())
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes.clear()
+        self.stats["resident_bytes"] = 0

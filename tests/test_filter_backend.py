@@ -169,7 +169,8 @@ def test_filter_backend_knob_and_stats():
 def test_filter_backend_alias_and_validation():
     R = make_dataset("T1", seed=11, count=5)
     S = make_dataset("T2", seed=12, count=5)
-    plan = JoinPlan(R, S, filter="none", backend="jnp")
+    with pytest.warns(DeprecationWarning, match="deprecated alias"):
+        plan = JoinPlan(R, S, filter="none", backend="jnp")
     assert plan.filter_backend == "jnp"
     assert plan.backend == "jnp"
     with pytest.raises(ValueError, match="not both"):

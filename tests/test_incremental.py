@@ -1,0 +1,194 @@
+"""Incremental store maintenance (DESIGN.md §10): insert/delete patches
+must leave every filter's store identical to a fresh rebuild — arrays and
+verdicts — and the warm MBR index identical to a rebuilt bucket table."""
+import numpy as np
+import pytest
+
+from repro.core.join import IntervalLists, csr_append_row, csr_delete_row
+from repro.datagen import make_dataset
+from repro.datagen.synthetic import PolygonDataset
+from repro.spatial import JoinPlan, available_filters, get_filter
+from repro.spatial.mbr_join import MBRIndex, mbr_intersect_mask
+
+N_ORDER = 6
+
+
+def _subset(ds, ids):
+    return PolygonDataset(name=ds.name, verts=ds.verts[ids],
+                          nverts=ds.nverts[ids])
+
+
+def _stores_equal(a, b):
+    if a is None or b is None:
+        return a is b
+    for k, v in vars(a).items():
+        w = getattr(b, k)
+        if isinstance(v, np.ndarray):
+            if v.shape != w.shape or not np.array_equal(v, w):
+                return False
+        elif isinstance(v, list):
+            if len(v) != len(w):
+                return False
+            for x, y in zip(v, w):
+                if isinstance(x, np.ndarray):
+                    if not np.array_equal(x, y):
+                        return False
+                elif x != y:
+                    return False
+        elif v != w:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# CSR splice primitives
+# ---------------------------------------------------------------------------
+
+def test_csr_row_splices():
+    rng = np.random.default_rng(0)
+    rows = [rng.integers(0, 50, size=n).astype(np.int32)
+            for n in (3, 0, 4, 2)]
+    off = np.cumsum([0] + [len(r) for r in rows]).astype(np.int64)
+    data = np.concatenate(rows)
+
+    off2, data2 = csr_delete_row(off, data, 2)
+    ref = rows[:2] + rows[3:]
+    assert np.array_equal(off2, np.cumsum([0] + [len(r) for r in ref]))
+    assert np.array_equal(data2, np.concatenate(ref))
+
+    new = np.array([9, 9, 9], np.int32)
+    off3, data3 = csr_append_row(off2, data2, new)
+    ref.append(new)
+    assert np.array_equal(off3, np.cumsum([0] + [len(r) for r in ref]))
+    assert np.array_equal(data3, np.concatenate(ref))
+
+
+def test_interval_lists_patch_matches_rebuild():
+    rng = np.random.default_rng(1)
+    rows = [np.sort(rng.integers(0, 99, size=rng.integers(0, 6)))
+            .astype(np.int32) for _ in range(5)]
+    off = np.cumsum([0] + [len(r) for r in rows]).astype(np.int64)
+    starts = np.concatenate(rows)
+    il = IntervalLists(off=off, starts=starts.copy(),
+                       lasts=(starts + 2).copy())
+    il.delete_row(1)
+    new = np.array([4, 40], np.int32)
+    il.append_row(new, new + 2)
+    ref_rows = rows[:1] + rows[2:] + [new]
+    ref_off = np.cumsum([0] + [len(r) for r in ref_rows]).astype(np.int64)
+    ref_starts = np.concatenate(ref_rows)
+    assert np.array_equal(il.off, ref_off)
+    assert np.array_equal(il.starts, ref_starts)
+    assert np.array_equal(il.lasts, ref_starts + 2)
+    assert il._device is None   # patch drops the stale device upload
+
+
+# ---------------------------------------------------------------------------
+# Warm MBR index
+# ---------------------------------------------------------------------------
+
+def test_mbr_index_probe_matches_oracle_all_backends():
+    R = make_dataset("T1", seed=31, count=70)
+    Q = make_dataset("T2", seed=32, count=40)
+    index = MBRIndex(R.mbrs)
+    ref = set(map(tuple, np.stack(
+        np.nonzero(mbr_intersect_mask(R.mbrs, Q.mbrs)), axis=1).tolist()))
+    for backend in ("numpy", "jnp", "sequential"):
+        got = set(map(tuple, index.probe(Q.mbrs, backend=backend).tolist()))
+        assert got == ref, backend
+    # queries far outside the index extent still produce the oracle set
+    far = Q.mbrs + 50.0
+    ref_far = set(map(tuple, np.stack(
+        np.nonzero(mbr_intersect_mask(R.mbrs, far)), axis=1).tolist()))
+    assert set(map(tuple, index.probe(far).tolist())) == ref_far
+
+
+def test_mbr_index_patch_equals_rebuild():
+    R = make_dataset("T1", seed=33, count=50)
+    extra = make_dataset("T2", seed=34, count=1)
+    index = MBRIndex(R.mbrs)
+    new_id = index.insert(extra.mbrs[0])
+    assert new_id == 50
+    index.delete(4)
+    patched_mbrs = np.delete(
+        np.concatenate([R.mbrs, extra.mbrs[:1]]), 4, axis=0)
+    fresh = MBRIndex(patched_mbrs, grid=index.k, extent=index.extent)
+    assert np.array_equal(index._obj, fresh._obj)
+    assert np.array_equal(index._buck, fresh._buck)
+    assert np.array_equal(index.mbrs, fresh.mbrs)
+    assert index.stats["inserts"] == 1 and index.stats["deletes"] == 1
+    assert index.stats["entries_touched"] > 0
+
+
+def test_join_plan_mbr_index_hook_identical_results():
+    R = make_dataset("T1", seed=35, count=60)
+    S = make_dataset("T2", seed=36, count=45)
+    base, _ = JoinPlan(R, S, filter="april", n_order=N_ORDER).execute()
+    warm, _ = JoinPlan(R, S, filter="april", n_order=N_ORDER,
+                       mbr_index=MBRIndex(R.mbrs)).execute()
+    assert set(map(tuple, base.tolist())) == set(map(tuple, warm.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# The identity property, every filter method
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", available_filters())
+def test_patched_store_equals_rebuild(method):
+    """insert + delete patches == fresh rebuild: store arrays AND verdicts
+    (the ISSUE-6 acceptance property)."""
+    D = make_dataset("T1", seed=41, count=30)
+    Q = make_dataset("T2", seed=42, count=10)
+    filt = get_filter(method)
+    ids = np.arange(30)
+
+    # build on 29 objects, patch in the 30th, delete object 5
+    approx = filt.build(_subset(D, ids[:29]), n_order=N_ORDER)
+    filt.patch_insert(approx, _subset(D, ids[29:30]))
+    filt.patch_delete(approx, 5)
+
+    patched_D = _subset(D, np.delete(ids, 5))
+    fresh = filt.build(patched_D, n_order=N_ORDER)
+    assert _stores_equal(approx.store, fresh.store), method
+
+    # verdict identity through the full pipeline on the patched store
+    plan = JoinPlan(patched_D, Q, filter=method, n_order=N_ORDER)
+    plan.build(prebuilt=(approx, None))
+    got, _ = plan.execute("intersects")
+    ref, _ = JoinPlan(patched_D, Q, filter=method,
+                      n_order=N_ORDER).execute("intersects")
+    assert set(map(tuple, got.tolist())) == set(map(tuple, ref.tolist()))
+
+
+@pytest.mark.parametrize("method", ["april", "ri"])
+def test_patch_preserves_warm_interval_caches(method):
+    """Patching must not poison warm device-ready caches: verdicts after a
+    patch equal a cold plan's, even when the IntervalLists cache was
+    populated (and for APRIL spliced in place) before the mutation."""
+    D = make_dataset("T1", seed=43, count=25)
+    Q = make_dataset("T2", seed=44, count=8)
+    filt = get_filter(method)
+    approx = filt.build(D, n_order=N_ORDER)
+    # populate warm caches with one execution
+    plan = JoinPlan(D, Q, filter=method, n_order=N_ORDER)
+    plan.build(prebuilt=(approx, None))
+    plan.execute("intersects")
+
+    filt.patch_delete(approx, 3)
+    patched_D = _subset(D, np.delete(np.arange(25), 3))
+    warm = JoinPlan(patched_D, Q, filter=method, n_order=N_ORDER)
+    warm.build(prebuilt=(approx, None))
+    got, _ = warm.execute("intersects")
+    ref, _ = JoinPlan(patched_D, Q, filter=method,
+                      n_order=N_ORDER).execute("intersects")
+    assert set(map(tuple, got.tolist())) == set(map(tuple, ref.tolist()))
+
+
+def test_patch_validation():
+    D = make_dataset("T1", seed=45, count=10)
+    filt = get_filter("april")
+    approx = filt.build(D, n_order=N_ORDER)
+    with pytest.raises(ValueError, match="1-object"):
+        filt.patch_insert(approx, D)
+    with pytest.raises(IndexError, match="out of range"):
+        filt.patch_delete(approx, 10)

@@ -1,0 +1,233 @@
+"""JoinService (DESIGN.md §10): micro-batched serving == per-request runs,
+LRU store cache accounting, incremental mutations through the serving
+path, JoinStats JSON envelope, and CheckpointManager restoring spatial
+stores via the extra-dict path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset
+from repro.datagen.synthetic import PolygonDataset
+from repro.runtime.checkpoint import CheckpointManager
+from repro.spatial import (JoinPlan, JoinService, JoinStats, StoreCache,
+                           get_filter)
+
+N_ORDER = 6
+
+
+def _one(Q, i):
+    nv = int(Q.nverts[i])
+    return PolygonDataset(name=f"q{i}", verts=Q.verts[i: i + 1, :nv],
+                          nverts=Q.nverts[i: i + 1])
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).reshape(-1, 2).tolist()))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return (make_dataset("T1", seed=51, count=80),
+            make_dataset("T2", seed=52, count=10))
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching
+# ---------------------------------------------------------------------------
+
+def test_microbatch_matches_per_request(data):
+    D, Q = data
+    svc = JoinService(method="april", n_order=N_ORDER)
+    svc.register_dataset("d", D)
+    tickets = {}
+    for predicate in ("selection", "intersects", "within"):
+        tickets[predicate] = [
+            svc.submit("d", predicate, Q.verts[i, : Q.nverts[i]])
+            for i in range(len(Q))]
+    # all predicates pending at once: one drain, one batched pass per group
+    assert svc.drain() == 3 * len(Q)
+    assert svc.stats["batches"] == 3
+    for predicate, ts in tickets.items():
+        for i, t in enumerate(ts):
+            ref, _ = JoinPlan(D, _one(Q, i), filter="april",
+                              n_order=N_ORDER).execute(predicate)
+            assert _pairs_set(t.wait(5.0).pairs) == _pairs_set(ref), \
+                (predicate, i)
+            assert t.stats["predicate"] == predicate
+            assert t.stats["extra"]["batched_requests"] == len(Q)
+            assert t.latency is not None and t.latency >= 0
+    lat = svc.latency_stats()
+    assert lat["n"] == 3 * len(Q)
+    assert lat["p99_s"] >= lat["p50_s"] >= 0
+
+
+def test_window_is_selection_on_rect_polygon(data):
+    D, _ = data
+    svc = JoinService(method="ri", n_order=N_ORDER)
+    svc.register_dataset("d", D)
+    t = svc.submit("d", "window", (0.2, 0.3, 0.7, 0.8))
+    svc.drain()
+    rect = np.array([[0.2, 0.3], [0.7, 0.3], [0.7, 0.8], [0.2, 0.8]])
+    ref, _ = JoinPlan(D, PolygonDataset(name="w", verts=rect[None],
+                                        nverts=np.array([4])),
+                      filter="ri", n_order=N_ORDER).execute("selection")
+    assert _pairs_set(t.wait(5.0).pairs) == _pairs_set(ref)
+
+
+def test_background_worker_resolves_tickets(data):
+    D, Q = data
+    svc = JoinService(method="april", n_order=N_ORDER, window_s=0.01)
+    svc.register_dataset("d", D)
+    svc.start()
+    try:
+        tickets = [svc.submit("d", "selection", Q.verts[i, : Q.nverts[i]])
+                   for i in range(4)]
+        for t in tickets:
+            t.wait(10.0)
+        assert all(t.pairs is not None for t in tickets)
+    finally:
+        svc.stop()
+
+
+def test_submit_validation(data):
+    D, Q = data
+    svc = JoinService()
+    svc.register_dataset("d", D)
+    with pytest.raises(ValueError, match="unknown predicate"):
+        svc.submit("d", "crosses", Q.verts[0, : Q.nverts[0]])
+    with pytest.raises(KeyError, match="unknown dataset"):
+        svc.submit("nope", "selection", Q.verts[0, : Q.nverts[0]])
+
+
+# ---------------------------------------------------------------------------
+# Store cache
+# ---------------------------------------------------------------------------
+
+def test_store_cache_hits_and_reuse(data):
+    D, Q = data
+    svc = JoinService(method="april", n_order=N_ORDER)
+    svc.register_dataset("d", D)
+    for i in range(3):
+        svc.submit("d", "selection", Q.verts[i, : Q.nverts[i]])
+        svc.drain()
+    # one miss (the cold build), then warm hits
+    assert svc.cache.stats["misses"] == 1
+    assert svc.cache.stats["hits"] == 2
+    assert svc.cache.stats["resident_bytes"] > 0
+
+
+def test_store_cache_lru_eviction():
+    cache = StoreCache(budget_bytes=1)   # everything evicts everything
+    D = make_dataset("T1", seed=53, count=10)
+    filt = get_filter("april")
+    a = filt.build(D, n_order=N_ORDER)
+    b = filt.build(D, n_order=N_ORDER + 1)
+    cache.put(("d", "april", N_ORDER), a)
+    cache.put(("d", "april", N_ORDER + 1), b)
+    assert cache.stats["evictions"] == 1
+    assert cache.get(("d", "april", N_ORDER)) is None
+    assert cache.get(("d", "april", N_ORDER + 1)) is b
+    assert len(cache) == 1
+
+
+def test_store_cache_rejects_bad_budget():
+    with pytest.raises(ValueError, match="budget_bytes"):
+        StoreCache(budget_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental mutations through the serving path
+# ---------------------------------------------------------------------------
+
+def test_mutations_replay_into_warm_store(data):
+    D, Q = data
+    svc = JoinService(method="april", n_order=N_ORDER)
+    svc.register_dataset("d", D)
+    svc.warm_store("d")                      # cold build BEFORE mutations
+    new_poly = Q.verts[0, : Q.nverts[0]] * 0.7 + 0.15
+    new_id = svc.insert("d", new_poly)
+    assert new_id == len(D)
+    svc.delete("d", 2)
+    t = svc.submit("d", "selection", Q.verts[1, : Q.nverts[1]])
+    svc.drain()
+    # warm patched store answers like a fresh plan over the mutated dataset
+    ref, _ = JoinPlan(svc.dataset("d"), _one(Q, 1), filter="april",
+                      n_order=N_ORDER).execute("selection")
+    assert _pairs_set(t.wait(5.0).pairs) == _pairs_set(ref)
+    assert svc.cache.stats["misses"] == 1    # never rebuilt
+
+
+# ---------------------------------------------------------------------------
+# JoinStats envelope (the service response format)
+# ---------------------------------------------------------------------------
+
+def test_join_stats_json_round_trip(data):
+    D, Q = data
+    _, stats = JoinPlan(D, Q, filter="april", n_order=N_ORDER).execute()
+    d = stats.to_dict()
+    assert d["t_build"] == stats.t_build     # headline serving metric
+    assert d["t_total"] == stats.t_total
+    back = JoinStats.from_dict(json.loads(json.dumps(d)))
+    assert back.to_dict() == d
+    assert back.n_results == stats.n_results
+    assert back.filter_backend == stats.filter_backend
+
+
+def test_join_plan_backend_alias_warns(data):
+    D, Q = data
+    with pytest.warns(DeprecationWarning, match="deprecated alias"):
+        plan = JoinPlan(D, Q, filter="none", backend="numpy")
+    assert plan.filter_backend == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager: spatial stores through the extra-dict path
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_extra_dict_round_trip(tmp_path):
+    """The extra dict rides the JSON manifest: store metadata and the
+    mutation log must survive save -> restore verbatim."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    extra = {"stores": [{"dataset_id": "d", "method": "april",
+                         "n_order": 6, "seq": 2}],
+             "datasets": {"d": {"log": [["delete", 3]]}}}
+    mgr.save(1, {"x": np.arange(4)}, extra=extra)
+    step, flat, got = mgr.restore()
+    assert step == 1
+    assert got == extra
+    assert np.array_equal(flat["x"], np.arange(4))
+
+
+def test_service_checkpoint_restore_verdict_identity(data, tmp_path):
+    """save -> restore -> identical verdicts, including mutations that
+    postdate the persisted store (replayed from the extra-dict log)."""
+    D, Q = data
+    for method in ("april", "ri"):           # the persisted-array stores
+        svc = JoinService(method=method, n_order=N_ORDER)
+        svc.register_dataset("d", D)
+        svc.warm_store("d")
+        svc.insert("d", Q.verts[0, : Q.nverts[0]] * 0.8 + 0.1)
+        svc.delete("d", 5)
+        # checkpoint AFTER the mutations but with the store synced earlier:
+        # warm_store above synced to seq 0; mutations are pending replay
+        mgr = CheckpointManager(str(tmp_path / method), async_save=False)
+        svc.save_checkpoint(mgr, step=7)
+
+        restored = JoinService.restore_checkpoint(mgr)
+        assert restored is not None
+        key = ("d", method, N_ORDER)
+        assert key in restored.cache         # store came back warm
+        assert restored.cache.get(key).meta["mutation_seq"] == 0
+        t = restored.submit("d", "selection", Q.verts[1, : Q.nverts[1]])
+        restored.drain()
+        ref, _ = JoinPlan(svc.dataset("d"), _one(Q, 1), filter=method,
+                          n_order=N_ORDER).execute("selection")
+        assert _pairs_set(t.wait(5.0).pairs) == _pairs_set(ref), method
+        # the replay brought the restored store current
+        assert restored.cache.get(key).meta["mutation_seq"] == 2
+
+
+def test_service_checkpoint_restore_none_when_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    assert JoinService.restore_checkpoint(mgr) is None

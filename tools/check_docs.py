@@ -5,10 +5,10 @@ Two knob sources are scanned:
 * every ``*backend`` kwarg accepted by ``JoinPlan.__init__`` (plus
   ``build_backend``, which travels through ``build_opts`` to every
   filter's ``build``);
-* every ``--*-backend`` flag exposed by the distributed launcher
-  (``repro.launch.spatial_join``) — flags normalize to knob names
-  (``--filter-backend`` -> ``filter_backend``), so a launcher-only surface
-  cannot ship undocumented either.
+* every ``--*-backend`` flag exposed by the launchers
+  (``repro.launch.spatial_join`` and ``repro.launch.serve_join``) — flags
+  normalize to knob names (``--filter-backend`` -> ``filter_backend``), so
+  a launcher-only surface cannot ship undocumented either.
 
 Each knob must appear, as a whole word, in both README.md and DESIGN.md —
 so a new stage backend cannot ship without landing in the "Pipeline stages
@@ -31,7 +31,10 @@ DOCS = ("README.md", "DESIGN.md")
 # build_backend is accepted by every IntermediateFilter.build (via the
 # JoinPlan build_opts dict), not as a named JoinPlan kwarg
 EXTRA_KNOBS = ("build_backend",)
-LAUNCHER = ROOT / "src" / "repro" / "launch" / "spatial_join.py"
+LAUNCHERS = (
+    ROOT / "src" / "repro" / "launch" / "spatial_join.py",
+    ROOT / "src" / "repro" / "launch" / "serve_join.py",
+)
 
 
 def plan_knobs() -> list[str]:
@@ -40,10 +43,17 @@ def plan_knobs() -> list[str]:
 
 
 def launcher_knobs() -> list[str]:
-    """Knob names behind the launcher's ``--*-backend`` argparse flags."""
-    text = LAUNCHER.read_text()
-    flags = re.findall(r'add_argument\(\s*"(--[a-z][a-z-]*backend)"', text)
-    return [f.lstrip("-").replace("-", "_") for f in flags]
+    """Knob names behind the launchers' ``--*-backend`` argparse flags."""
+    knobs: list[str] = []
+    for launcher in LAUNCHERS:
+        text = launcher.read_text()
+        flags = re.findall(
+            r'add_argument\(\s*"(--[a-z][a-z-]*backend)"', text)
+        for f in flags:
+            knob = f.lstrip("-").replace("-", "_")
+            if knob not in knobs:
+                knobs.append(knob)
+    return knobs
 
 
 def backend_knobs() -> list[str]:
