@@ -28,10 +28,20 @@ def lines(seed: int = 0, count: int = 400):
     return make_linestrings(seed=seed, count=count)
 
 
+def sync(x):
+    """Barrier before reading a benchmark timer: block until any device
+    work backing ``x`` is done (JAX dispatch is async — without this the
+    timer measures dispatch, not execution). No-op on host values."""
+    import jax
+    jax.block_until_ready(x)
+    return x
+
+
 def timeit(fn, *args, repeats: int = 1, **kw):
     t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args, **kw)
+    sync(out)
     dt = (time.perf_counter() - t0) / repeats
     return out, dt
 

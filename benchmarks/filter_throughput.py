@@ -27,7 +27,7 @@ from repro.datagen import make_dataset
 from repro.spatial import get_filter
 from repro.spatial.mbr_join import mbr_join
 
-from .common import row
+from .common import row, sync
 
 N_ORDER = 10
 METHODS = ("none", "april", "april-c", "ri", "ra", "5cch")
@@ -55,17 +55,18 @@ def bench_filters(min_pairs: int = 10_000):
         filt = get_filter(m)
         t0 = time.perf_counter()
         ar, as_ = _built(filt, R, S, N_ORDER)
+        sync((ar.store, as_.store))
         t_build = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        v_seq = filt.verdicts(ar, as_, pairs, backend="sequential")
+        v_seq = sync(filt.verdicts(ar, as_, pairs, backend="sequential"))
         t_seq = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        v_cold = filt.verdicts(ar, as_, pairs)   # populates resident caches
+        v_cold = sync(filt.verdicts(ar, as_, pairs))  # populates caches
         t_cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        v_bat = filt.verdicts(ar, as_, pairs)
+        v_bat = sync(filt.verdicts(ar, as_, pairs))
         t_bat = time.perf_counter() - t0
         equal = bool((v_seq == v_bat).all() and (v_seq == v_cold).all())
         assert equal, f"{m}: batched verdicts diverged"

@@ -25,6 +25,8 @@ import numpy as np
 from repro.datagen import make_dataset
 from repro.spatial import JoinPlan, JoinService
 
+from .common import sync
+
 N_ORDER = 8
 N_REQUESTS = 48
 
@@ -62,7 +64,7 @@ def bench_service(method: str = "april"):
 
     # -- cold: one JoinPlan per request, stores rebuilt every time ----------
     t0 = time.perf_counter()
-    cold = _cold_requests(D, Q, "selection", method, N_ORDER)
+    cold = sync(_cold_requests(D, Q, "selection", method, N_ORDER))
     t_cold = time.perf_counter() - t0
 
     # -- warm: micro-batched service over cached stores ---------------------
@@ -73,6 +75,7 @@ def bench_service(method: str = "april"):
     tickets = [svc.submit("T1", "selection", Q.verts[i, : Q.nverts[i]])
                for i in range(len(Q))]
     svc.drain()
+    sync([t.pairs for t in tickets])
     t_warm = time.perf_counter() - t0
 
     # each cold run has a single query, so both sides carry query index 0

@@ -91,7 +91,8 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
 
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
              seed=0, count_r=None, count_s=None, mesh=None, method="april",
-             backend="jnp", refine_backend="numpy", mbr_backend="numpy"):
+             backend="jnp", refine_backend="numpy", mbr_backend="numpy",
+             build_backend="numpy"):
     filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
@@ -99,8 +100,10 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
 
     t0 = time.perf_counter()
     parting = partition_mod.partition_space([R, S], parts_per_dim=parts)
-    approx_r = parting.build_approx(filt, R, n_order, side="r")
-    approx_s = parting.build_approx(filt, S, n_order, side="s")
+    approx_r = parting.build_approx(filt, R, n_order, side="r",
+                                    build_backend=build_backend)
+    approx_s = parting.build_approx(filt, S, n_order, side="s",
+                                    build_backend=build_backend)
     t_build = time.perf_counter() - t0
 
     mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
@@ -166,13 +169,17 @@ def main():
     ap.add_argument("--mbr-backend", default="numpy",
                     help="candidate-generation backend: numpy/jnp/sequential "
                          "(jnp generates candidates sharded over the mesh)")
+    ap.add_argument("--build-backend", default="numpy",
+                    help="store-build backend: numpy/jnp (threaded to every "
+                         "per-partition filter build via build_opts)")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
              count_s=args.count_s, method=args.method,
              backend=args.filter_backend or args.backend,
              refine_backend=args.refine_backend,
-             mbr_backend=args.mbr_backend)
+             mbr_backend=args.mbr_backend,
+             build_backend=args.build_backend)
 
 
 if __name__ == "__main__":

@@ -138,7 +138,8 @@ class JoinPlan:
         if backend is not None:
             warnings.warn(
                 "JoinPlan(backend=...) is a deprecated alias; "
-                "pass filter_backend=... instead",
+                "pass filter_backend=... instead (alias removed after "
+                "2026-12-01)",
                 DeprecationWarning, stacklevel=2)
         filter_backend = filter_backend or backend or "numpy"
         check_filter_backend(filter_backend)

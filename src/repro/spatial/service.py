@@ -177,11 +177,15 @@ class JoinService:
         self.mbr_backend = mbr_backend
         self.datasets: dict[str, _DatasetHandle] = {}
         self._pending: list[_Request] = []
+        # guards the request queue, stats, latencies and worker lifecycle
         self._lock = threading.Lock()
         # serializes store/index/dataset access between the micro-batch
         # worker and mutating callers (mutations are cheap splices; queries
-        # inside a batch still run fully vectorized)
-        self._exec_lock = threading.Lock()
+        # inside a batch still run fully vectorized).  Reentrant: _run_group
+        # holds it across _handle/warm_store, which take it themselves when
+        # called directly.  Order: _exec_lock outer, _lock inner — never
+        # acquire _exec_lock while holding _lock.
+        self._exec_lock = threading.RLock()
         self._have_work = threading.Event()
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
@@ -193,19 +197,23 @@ class JoinService:
 
     def register_dataset(self, dataset_id: str, dataset: PolygonDataset,
                          extent: Extent = GLOBAL_EXTENT) -> None:
-        if dataset_id in self.datasets:
-            raise ValueError(f"dataset {dataset_id!r} already registered")
-        self.datasets[dataset_id] = _DatasetHandle(dataset, extent)
+        with self._exec_lock:
+            if dataset_id in self.datasets:
+                raise ValueError(
+                    f"dataset {dataset_id!r} already registered")
+            self.datasets[dataset_id] = _DatasetHandle(dataset, extent)
 
     def dataset(self, dataset_id: str) -> PolygonDataset:
         return self._handle(dataset_id).dataset
 
     def _handle(self, dataset_id: str) -> _DatasetHandle:
-        try:
-            return self.datasets[dataset_id]
-        except KeyError:
-            raise KeyError(f"unknown dataset {dataset_id!r}; registered: "
-                           f"{sorted(self.datasets)}") from None
+        with self._exec_lock:
+            try:
+                return self.datasets[dataset_id]
+            except KeyError:
+                raise KeyError(
+                    f"unknown dataset {dataset_id!r}; registered: "
+                    f"{sorted(self.datasets)}") from None
 
     def insert(self, dataset_id: str, verts: np.ndarray) -> int:
         """Add one polygon; returns its object id. Warm stores are patched
@@ -213,7 +221,8 @@ class JoinService:
         next use) — nothing is rebuilt."""
         with self._exec_lock:
             new_id = self._handle(dataset_id).insert(verts)
-        self.stats["inserts"] += 1
+        with self._lock:
+            self.stats["inserts"] += 1
         return new_id
 
     def delete(self, dataset_id: str, obj_id: int) -> None:
@@ -221,7 +230,8 @@ class JoinService:
         numbering)."""
         with self._exec_lock:
             self._handle(dataset_id).delete(obj_id)
-        self.stats["deletes"] += 1
+        with self._lock:
+            self.stats["deletes"] += 1
 
     # -- warm store access --------------------------------------------------
 
@@ -231,27 +241,29 @@ class JoinService:
         on miss and brought current with the mutation log on hit."""
         method = method or self.method
         n_order = self.n_order if n_order is None else int(n_order)
-        handle = self._handle(dataset_id)
-        key = (dataset_id, method, n_order)
-        approx = self.cache.get(key)
-        filt = get_filter(method)
-        if approx is None:
-            approx = filt.build(handle.dataset, n_order=n_order,
-                                extent=handle.extent, kind="polygon",
-                                side="r")
-            approx.meta["mutation_seq"] = handle.seq
-            self.cache.put(key, approx)
+        with self._exec_lock:
+            handle = self._handle(dataset_id)
+            key = (dataset_id, method, n_order)
+            approx = self.cache.get(key)
+            filt = get_filter(method)
+            if approx is None:
+                approx = filt.build(handle.dataset, n_order=n_order,
+                                    extent=handle.extent, kind="polygon",
+                                    side="r")
+                approx.meta["mutation_seq"] = handle.seq
+                self.cache.put(key, approx)
+                return approx
+            seq = approx.meta.get("mutation_seq", 0)
+            if seq < handle.seq:
+                for op in handle.log[seq:]:
+                    if op[0] == "insert":
+                        filt.patch_insert(approx,
+                                          _one_polygon_dataset(op[1]))
+                    else:
+                        filt.patch_delete(approx, op[1])
+                approx.meta["mutation_seq"] = handle.seq
+                self.cache.resize(key)
             return approx
-        seq = approx.meta.get("mutation_seq", 0)
-        if seq < handle.seq:
-            for op in handle.log[seq:]:
-                if op[0] == "insert":
-                    filt.patch_insert(approx, _one_polygon_dataset(op[1]))
-                else:
-                    filt.patch_delete(approx, op[1])
-            approx.meta["mutation_seq"] = handle.seq
-            self.cache.resize(key)
-        return approx
 
     # -- the request queue --------------------------------------------------
 
@@ -306,31 +318,33 @@ class JoinService:
                    req.n_order)
             groups.setdefault(key, []).append(req)
         for (did, predicate, method, n_order), reqs in groups.items():
-            with self._exec_lock:
-                self._run_group(did, predicate, method, n_order, reqs)
-        self.stats["batches"] += len(groups)
-        self.stats["batched_requests"] += len(batch)
+            self._run_group(did, predicate, method, n_order, reqs)
+        with self._lock:
+            self.stats["batches"] += len(groups)
+            self.stats["batched_requests"] += len(batch)
         return len(batch)
 
     def _run_group(self, dataset_id: str, predicate: str, method: str,
                    n_order: int, reqs: list[_Request]) -> None:
-        handle = self._handle(dataset_id)
-        approx = self.warm_store(dataset_id, method, n_order)
-        vmax = max(r.verts.shape[1] for r in reqs)
-        q_verts = np.concatenate([_pad_verts(r.verts, vmax) for r in reqs])
-        q_nverts = np.concatenate([r.nverts for r in reqs])
-        queries = PolygonDataset(name="_queries", verts=q_verts,
-                                 nverts=q_nverts)
-        plan = JoinPlan(handle.dataset, queries, filter=method,
-                        n_order=n_order, extent=handle.extent,
-                        filter_backend=self.filter_backend,
-                        refine_backend=self.refine_backend,
-                        mbr_backend=self.mbr_backend,
-                        mbr_index=handle.index)
-        plan.build(prebuilt=(approx, None))
-        pairs, stats = plan.execute(predicate)
-        stats.extra["batched_requests"] = len(reqs)
-        stats.extra["cache"] = dict(self.cache.stats)
+        with self._exec_lock:
+            handle = self._handle(dataset_id)
+            approx = self.warm_store(dataset_id, method, n_order)
+            vmax = max(r.verts.shape[1] for r in reqs)
+            q_verts = np.concatenate(
+                [_pad_verts(r.verts, vmax) for r in reqs])
+            q_nverts = np.concatenate([r.nverts for r in reqs])
+            queries = PolygonDataset(name="_queries", verts=q_verts,
+                                     nverts=q_nverts)
+            plan = JoinPlan(handle.dataset, queries, filter=method,
+                            n_order=n_order, extent=handle.extent,
+                            filter_backend=self.filter_backend,
+                            refine_backend=self.refine_backend,
+                            mbr_backend=self.mbr_backend,
+                            mbr_index=handle.index)
+            plan.build(prebuilt=(approx, None))
+            pairs, stats = plan.execute(predicate)
+            stats.extra["batched_requests"] = len(reqs)
+            stats.extra["cache"] = dict(self.cache.stats)
         envelope = stats.to_dict()
         # scatter: each request owns a contiguous run of query indices
         offs = np.cumsum([0] + [len(r.nverts) for r in reqs])
@@ -344,7 +358,8 @@ class JoinService:
             t = req.ticket
             t.pairs, t.stats = mine, envelope
             t.latency = now - req.t_submit
-            self._latencies.append(t.latency)
+            with self._lock:
+                self._latencies.append(t.latency)
             t.done.set()
 
     # -- background micro-batching worker -----------------------------------
@@ -352,9 +367,6 @@ class JoinService:
     def start(self) -> None:
         """Run the micro-batch loop in a daemon thread: wait for the first
         pending request, accumulate for ``window_s``, drain."""
-        if self._worker is not None:
-            return
-        self._stop.clear()
 
         def loop():
             while not self._stop.is_set():
@@ -363,22 +375,29 @@ class JoinService:
                 time.sleep(self.window_s)
                 self.drain()
 
-        self._worker = threading.Thread(target=loop, daemon=True)
-        self._worker.start()
+        with self._lock:
+            if self._worker is not None:
+                return
+            self._stop.clear()
+            self._worker = threading.Thread(target=loop, daemon=True)
+            self._worker.start()
 
     def stop(self) -> None:
-        if self._worker is None:
+        with self._lock:
+            worker, self._worker = self._worker, None
+        if worker is None:
             return
         self._stop.set()
-        self._worker.join()
-        self._worker = None
+        # join outside _lock: the worker's drain() takes _lock itself
+        worker.join()
         self.drain()
 
     # -- accounting ---------------------------------------------------------
 
     def latency_stats(self) -> dict:
         """p50/p99 submit-to-resolution latency over resolved requests."""
-        lat = np.asarray(self._latencies, np.float64)
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
         if len(lat) == 0:
             return {"n": 0, "p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
         return {"n": int(len(lat)),
@@ -403,33 +422,35 @@ class JoinService:
         extra: dict = {"datasets": {}, "stores": [],
                        "service": {"method": self.method,
                                    "n_order": self.n_order}}
-        for did, h in self.datasets.items():
-            tree[f"ds/{did}/verts"] = h.dataset.verts
-            tree[f"ds/{did}/nverts"] = h.dataset.nverts
-            extra["datasets"][did] = {
-                "name": h.dataset.name,
-                "extent": [h.extent.x0, h.extent.y0, h.extent.side],
-                "log": [["insert", v.tolist()] if op == "insert"
-                        else ["delete", v] for op, v in h.log],
-            }
-        for (did, method, n_order), approx in self.cache.items():
-            store = approx.store
-            if isinstance(store, AprilStore):
-                leaves = {"a_off": store.a_off, "a_ints": store.a_ints,
-                          "f_off": store.f_off, "f_ints": store.f_ints}
-            elif isinstance(store, RIStore):
-                leaves = {"off": store.off, "ints": store.ints,
-                          "bit_off": store.bit_off, "bits": store.bits}
-            else:
-                continue
-            rec = {"dataset_id": did, "method": method, "n_order": n_order,
-                   "seq": int(approx.meta.get("mutation_seq", 0)),
-                   "build_opts": dict(approx.meta.get("build_opts", {}))}
-            if isinstance(store, RIStore):
-                rec["encoding"] = store.encoding
-            extra["stores"].append(rec)
-            for name, arr in leaves.items():
-                tree[f"store/{did}/{method}/{n_order}/{name}"] = arr
+        with self._exec_lock:
+            for did, h in self.datasets.items():
+                tree[f"ds/{did}/verts"] = h.dataset.verts
+                tree[f"ds/{did}/nverts"] = h.dataset.nverts
+                extra["datasets"][did] = {
+                    "name": h.dataset.name,
+                    "extent": [h.extent.x0, h.extent.y0, h.extent.side],
+                    "log": [["insert", v.tolist()] if op == "insert"
+                            else ["delete", v] for op, v in h.log],
+                }
+            for (did, method, n_order), approx in self.cache.items():
+                store = approx.store
+                if isinstance(store, AprilStore):
+                    leaves = {"a_off": store.a_off, "a_ints": store.a_ints,
+                              "f_off": store.f_off, "f_ints": store.f_ints}
+                elif isinstance(store, RIStore):
+                    leaves = {"off": store.off, "ints": store.ints,
+                              "bit_off": store.bit_off, "bits": store.bits}
+                else:
+                    continue
+                rec = {"dataset_id": did, "method": method,
+                       "n_order": n_order,
+                       "seq": int(approx.meta.get("mutation_seq", 0)),
+                       "build_opts": dict(approx.meta.get("build_opts", {}))}
+                if isinstance(store, RIStore):
+                    rec["encoding"] = store.encoding
+                extra["stores"].append(rec)
+                for name, arr in leaves.items():
+                    tree[f"store/{did}/{method}/{n_order}/{name}"] = arr
         manager.save(step, tree, extra=extra, block=True)
 
     @classmethod

@@ -9,9 +9,14 @@ keyed by ``(dataset_id, filter_method, n_order)`` under a byte budget.
 Least-recently-used stores are evicted when the budget is exceeded;
 :attr:`stats` tracks hits / misses / evictions / resident bytes so the
 service can report cache efficiency per traffic trace.
+
+The cache is internally thread-safe: the service's micro-batch worker and
+mutating caller threads hit it concurrently, so every method holds
+``self._lock`` (reentrant — ``put``/``pop`` call ``_drop`` under it).
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 
 from .filters import Approximation
@@ -41,58 +46,68 @@ class StoreCache:
         self._bytes: dict[tuple, int] = {}
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
                       "resident_bytes": 0, "puts": 0}
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def get(self, key: tuple) -> Approximation | None:
-        approx = self._entries.get(key)
-        if approx is None:
-            self.stats["misses"] += 1
-            return None
-        self._entries.move_to_end(key)
-        self.stats["hits"] += 1
-        return approx
+        with self._lock:
+            approx = self._entries.get(key)
+            if approx is None:
+                self.stats["misses"] += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats["hits"] += 1
+            return approx
 
     def put(self, key: tuple, approx: Approximation) -> None:
-        if key in self._entries:
-            self._drop(key)
-        size = approx.size_bytes()
-        while self._entries and \
-                self.stats["resident_bytes"] + size > self.budget_bytes:
-            old_key, _ = self._entries.popitem(last=False)
-            self.stats["resident_bytes"] -= self._bytes.pop(old_key)
-            self.stats["evictions"] += 1
-        self._entries[key] = approx
-        self._bytes[key] = size
-        self.stats["resident_bytes"] += size
-        self.stats["puts"] += 1
+        with self._lock:
+            if key in self._entries:
+                self._drop(key)
+            size = approx.size_bytes()
+            while self._entries and \
+                    self.stats["resident_bytes"] + size > self.budget_bytes:
+                old_key, _ = self._entries.popitem(last=False)
+                self.stats["resident_bytes"] -= self._bytes.pop(old_key)
+                self.stats["evictions"] += 1
+            self._entries[key] = approx
+            self._bytes[key] = size
+            self.stats["resident_bytes"] += size
+            self.stats["puts"] += 1
 
     def resize(self, key: tuple) -> None:
         """Re-measure one entry after an in-place store patch."""
-        if key in self._entries:
-            size = self._entries[key].size_bytes()
-            self.stats["resident_bytes"] += size - self._bytes[key]
-            self._bytes[key] = size
+        with self._lock:
+            if key in self._entries:
+                size = self._entries[key].size_bytes()
+                self.stats["resident_bytes"] += size - self._bytes[key]
+                self._bytes[key] = size
 
     def pop(self, key: tuple) -> Approximation | None:
-        approx = self._entries.get(key)
-        if approx is not None:
-            self._drop(key)
-        return approx
+        with self._lock:
+            approx = self._entries.get(key)
+            if approx is not None:
+                self._drop(key)
+            return approx
 
     def _drop(self, key: tuple) -> None:
-        del self._entries[key]
-        self.stats["resident_bytes"] -= self._bytes.pop(key)
+        with self._lock:
+            del self._entries[key]
+            self.stats["resident_bytes"] -= self._bytes.pop(key)
 
     def items(self):
         """(key, approx) pairs, least-recently-used first."""
-        return list(self._entries.items())
+        with self._lock:
+            return list(self._entries.items())
 
     def clear(self) -> None:
-        self._entries.clear()
-        self._bytes.clear()
-        self.stats["resident_bytes"] = 0
+        with self._lock:
+            self._entries.clear()
+            self._bytes.clear()
+            self.stats["resident_bytes"] = 0

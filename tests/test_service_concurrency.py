@@ -1,0 +1,147 @@
+"""Concurrency regression for JoinService/StoreCache (DESIGN.md §10/§11).
+
+The lock-discipline analyze pass (LD001/LD002) proved every shared field
+is *lexically* guarded; this test proves the guarded implementation is
+actually safe under load: caller threads hammer submit / insert / delete /
+warm_store / latency_stats / checkpoint-style cache iteration while the
+background micro-batch worker drains, with a cache budget small enough to
+force eviction traffic.  The assertions are exactness ones — every ticket
+resolves, stats counters add up, and the cache's resident-byte accounting
+matches a from-scratch recount — so a lost update or torn read fails the
+test rather than merely racing.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset
+from repro.spatial import JoinService, StoreCache
+
+N_ORDER = 5
+N_THREADS = 4
+N_ROUNDS = 12
+
+
+@pytest.fixture(scope="module")
+def data():
+    return (make_dataset("T1", seed=71, count=60),
+            make_dataset("T2", seed=72, count=12))
+
+
+def _square(cx, cy, r=0.01):
+    return np.array([[cx - r, cy - r], [cx + r, cy - r],
+                     [cx + r, cy + r], [cx - r, cy + r]], np.float64)
+
+
+def test_hammer_submit_patch_evict(data):
+    D, Q = data
+    # tiny budget: every (method, n_order) store rotation forces evictions
+    svc = JoinService(cache_bytes=64 << 10, window_s=0.001,
+                      n_order=N_ORDER)
+    svc.register_dataset("T1", D)
+    svc.start()
+    errors: list[BaseException] = []
+    tickets_lock = threading.Lock()
+    tickets = []
+    inserted = []
+
+    def caller(tid: int):
+        rng = np.random.default_rng(100 + tid)
+        try:
+            for r in range(N_ROUNDS):
+                i = int(rng.integers(len(Q)))
+                t = svc.submit("T1", "selection",
+                               Q.verts[i, : Q.nverts[i]])
+                with tickets_lock:
+                    tickets.append(t)
+                if r % 3 == 0:
+                    new_id = svc.insert(
+                        "T1", _square(rng.random(), rng.random()))
+                    with tickets_lock:
+                        inserted.append(new_id)
+                if r % 4 == 1:
+                    # rotate n_order so warm stores churn through the LRU
+                    svc.warm_store("T1", n_order=N_ORDER + (r % 3))
+                if r % 5 == 2:
+                    svc.delete("T1", int(rng.integers(len(D))))
+                svc.latency_stats()
+                for key, approx in svc.cache.items():
+                    assert approx.size_bytes() >= 0
+        except BaseException as exc:  # noqa: BLE001 - reraised below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=caller, args=(tid,))
+               for tid in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    svc.stop()
+
+    assert not errors, errors
+    # every ticket resolved (worker or final drain), none torn
+    for t in tickets:
+        t.wait(10.0)
+        assert t.pairs is not None and t.pairs.shape[1] == 2
+        assert t.latency is not None and t.latency >= 0.0
+    # stats counters: no lost updates
+    assert svc.stats["requests"] == N_THREADS * N_ROUNDS
+    assert svc.stats["batched_requests"] == svc.stats["requests"]
+    assert svc.stats["inserts"] == len(inserted)
+    assert svc.stats["deletes"] == N_THREADS * len(
+        [r for r in range(N_ROUNDS) if r % 5 == 2])
+    assert len(svc.latency_stats()) == 4
+    assert svc.latency_stats()["n"] == svc.stats["requests"]
+
+
+def test_store_cache_byte_accounting_under_contention():
+    cache = StoreCache(48 << 10)
+    D = make_dataset("T3", seed=73, count=12)
+    from repro.spatial import get_filter
+    filt = get_filter("april")
+    protos = [filt.build(D, n_order=n, side="r") for n in (4, 5, 6)]
+    errors: list[BaseException] = []
+
+    def worker(tid: int):
+        rng = np.random.default_rng(tid)
+        try:
+            for i in range(200):
+                key = (f"d{int(rng.integers(6))}", "april",
+                       int(rng.integers(3)))
+                op = int(rng.integers(4))
+                if op == 0:
+                    cache.put(key, protos[key[2]])
+                elif op == 1:
+                    cache.get(key)
+                elif op == 2:
+                    cache.pop(key)
+                else:
+                    cache.resize(key)
+                assert cache.stats["resident_bytes"] >= 0
+        except BaseException as exc:  # noqa: BLE001 - reraised below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(tid,))
+               for tid in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert not errors, errors
+    # quiescent recount: resident_bytes equals the sum over live entries
+    expect = sum(a.size_bytes() for _, a in cache.items())
+    assert cache.stats["resident_bytes"] == expect
+    assert len(cache) == len(cache.items())
+
+
+def test_stop_is_idempotent_and_joins(data):
+    D, _ = data
+    svc = JoinService(n_order=N_ORDER)
+    svc.register_dataset("T1", D)
+    svc.start()
+    svc.start()                  # second start is a no-op, not a second worker
+    t = svc.submit("T1", "selection", _square(0.5, 0.5))
+    svc.stop()
+    svc.stop()                   # second stop is a no-op
+    assert t.done.is_set()

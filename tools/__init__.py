@@ -1,0 +1,3 @@
+"""Repo tooling: the `check_bench` CI gate, the static-analysis suite
+(`tools.analyze`, DESIGN.md §11), and the deprecated `check_docs` shim
+(absorbed into the backend-parity pass)."""

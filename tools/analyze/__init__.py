@@ -1,0 +1,43 @@
+"""`tools.analyze`: the repo-invariant static-analysis suite.
+
+See DESIGN.md §11 for the rule catalog and suppression policy.  CLI::
+
+    PYTHONPATH=src python -m tools.analyze --check src tools benchmarks
+
+Passes (rule prefixes): host-sync (HS), precision (FP), lock-discipline
+(LD), backend-parity (BE), pallas-constraint (PL), deprecation (DP).
+"""
+from __future__ import annotations
+
+from .backend_parity import BackendParityPass
+from .core import (BASELINE_PATH, ROOT, AnalysisPass, BaselineDiff, Finding,
+                   SourceFile, collect_files, diff_baseline, load_baseline,
+                   run_passes, save_baseline)
+from .deprecation import DeprecationPass
+from .host_sync import HostSyncPass
+from .lock_discipline import LockDisciplinePass
+from .pallas_constraint import PallasConstraintPass
+from .precision import PrecisionPass
+
+__all__ = [
+    "ALL_PASSES", "AnalysisPass", "BaselineDiff", "Finding", "SourceFile",
+    "BASELINE_PATH", "ROOT", "collect_files", "diff_baseline",
+    "load_baseline", "run_passes", "save_baseline", "all_rules",
+]
+
+#: registration order == report order; add new passes here
+ALL_PASSES: tuple[AnalysisPass, ...] = (
+    HostSyncPass(),
+    PrecisionPass(),
+    LockDisciplinePass(),
+    BackendParityPass(),
+    PallasConstraintPass(),
+    DeprecationPass(),
+)
+
+
+def all_rules() -> dict[str, str]:
+    out: dict[str, str] = {}
+    for p in ALL_PASSES:
+        out.update(p.rules)
+    return out

@@ -1,0 +1,71 @@
+"""CLI of the static-analysis suite (DESIGN.md §11).
+
+    PYTHONPATH=src python -m tools.analyze [--check|--baseline] [paths...]
+
+Default paths: ``src tools benchmarks``.  Modes:
+
+* (default) report non-baselined findings; exit 1 if any.
+* ``--check``  CI gate: also fail on *stale* baseline entries, so the
+  committed baseline can only shrink.
+* ``--baseline``  rewrite ``tools/analyze/baseline.json`` from the
+  current findings (deliberate re-grandfathering).
+* ``--list-rules``  print the rule catalog.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (ALL_PASSES, BASELINE_PATH, all_rules, collect_files,
+               diff_baseline, load_baseline, run_passes, save_baseline)
+
+DEFAULT_PATHS = ("src", "tools", "benchmarks")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repo-invariant static-analysis suite")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS))
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: fail on new findings AND stale "
+                         "baseline entries")
+    ap.add_argument("--baseline", action="store_true",
+                    help="rewrite the committed baseline from current "
+                         "findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, doc in sorted(all_rules().items()):
+            print(f"{rule}  {doc}")
+        return 0
+
+    files = collect_files(args.paths or list(DEFAULT_PATHS))
+    findings = run_passes(ALL_PASSES, files)
+
+    if args.baseline:
+        save_baseline(findings)
+        print(f"analyze: baseline rewritten with {len(findings)} "
+              f"finding(s) -> {BASELINE_PATH}")
+        return 0
+
+    diff = diff_baseline(findings, load_baseline())
+    n_base = len(findings) - len(diff.new)
+    for f in diff.new:
+        print(f.render())
+    if diff.stale and args.check:
+        for rule, path, snippet, n in diff.stale:
+            print(f"{path}: STALE baseline entry {rule} x{n}: {snippet!r} "
+                  f"(finding fixed? regenerate with --baseline)")
+    ok = not diff.new and not (args.check and diff.stale)
+    print(f"analyze: {len(files)} files, {len(findings)} finding(s) "
+          f"({n_base} baselined, {len(diff.new)} new, "
+          f"{len(diff.stale)} stale baseline entr"
+          f"{'y' if len(diff.stale) == 1 else 'ies'}) -> "
+          f"{'ok' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,264 @@
+"""Framework of the repo-invariant static-analysis suite (DESIGN.md §11).
+
+The paper's pipeline only pays off while every stage stays vectorized,
+device-resident, and verdict-identical to its sequential oracle.  Those are
+*mechanical* invariants — an implicit device->host sync, an unguarded f32
+sign test, a shared service field touched off-lock — and this module gives
+them a linter so they fail in CI before they fail in a benchmark.
+
+Building blocks:
+
+* :class:`Finding` — one diagnostic: ``(rule, path, line, message)`` plus
+  the stripped source ``snippet`` that keys baseline matching (line numbers
+  shift; code lines rarely do).
+* :class:`AnalysisPass` — subclass per invariant family; ``rules`` maps
+  rule ids (``HS001`` ...) to one-line docs, :meth:`scope` selects files,
+  :meth:`run` yields findings.  Registration is a module-level list in
+  ``tools.analyze`` (:data:`tools.analyze.ALL_PASSES`).
+* inline suppressions — ``# analyze: ignore[HS001]`` on the flagged line
+  (or a standalone comment on the line above) silences that rule there;
+  ``# analyze: ignore`` silences every rule.  Suppressions are for
+  *explained* exceptions: the comment should say why the invariant does
+  not apply.
+* a committed baseline (``tools/analyze/baseline.json``) grandfathers
+  pre-existing findings by ``(rule, path, snippet)`` multiset.  ``--check``
+  fails on findings not in the baseline AND on stale baseline entries, so
+  the baseline can only shrink unless deliberately regenerated with
+  ``--baseline``.
+
+Run from the repo root::
+
+    PYTHONPATH=src python -m tools.analyze --check src tools benchmarks
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent.parent
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*analyze:\s*ignore(?:\[(?P<rules>[A-Z]{2}\d{3}"
+    r"(?:\s*,\s*[A-Z]{2}\d{3})*)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic. ``snippet`` is the stripped source line — the
+    line-number-independent identity used for baseline matching."""
+    rule: str
+    path: str          # repo-relative, posix separators
+    line: int
+    message: str
+    snippet: str = ""
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.snippet)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """A parsed python file shared by every pass (one parse per file)."""
+
+    def __init__(self, path: Path, root: Path = ROOT):
+        self.abspath = path
+        self.path = path.resolve().relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self._parents: dict[ast.AST, ast.AST] | None = None
+
+    # -- helpers shared by passes ------------------------------------------
+    def line_at(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def snippet(self, lineno: int) -> str:
+        return self.line_at(lineno).strip()
+
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        """child -> parent map over the module tree (built lazily)."""
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def suppressed(self, lineno: int, rule: str) -> bool:
+        """``# analyze: ignore[RULE]`` on the line, or as a standalone
+        comment on the line above."""
+        for cand in (self.line_at(lineno), ):
+            m = _SUPPRESS_RE.search(cand)
+            if m and (m.group("rules") is None
+                      or rule in re.split(r"\s*,\s*", m.group("rules"))):
+                return True
+        above = self.line_at(lineno - 1).strip()
+        if above.startswith("#"):
+            m = _SUPPRESS_RE.search(above)
+            if m and (m.group("rules") is None
+                      or rule in re.split(r"\s*,\s*", m.group("rules"))):
+                return True
+        return False
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        lineno = (node_or_line if isinstance(node_or_line, int)
+                  else node_or_line.lineno)
+        return Finding(rule=rule, path=self.path, line=lineno,
+                       message=message, snippet=self.snippet(lineno))
+
+
+class AnalysisPass:
+    """One invariant family. Subclasses set ``name``/``rules`` and
+    implement :meth:`run`; :meth:`scope` narrows which files are visited."""
+
+    name: str = "?"
+    rules: dict[str, str] = {}
+
+    def scope(self, path: str) -> bool:
+        """Repo-relative posix path filter; default: every scanned file."""
+        return True
+
+    def run(self, files: list[SourceFile], root: Path) -> list[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# shared AST utilities
+# ---------------------------------------------------------------------------
+
+def call_name(node: ast.Call) -> str:
+    """Dotted name of a call's callee ('' when not a name/attribute)."""
+    return dotted(node.func)
+
+
+def dotted(node: ast.AST) -> str:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def assigned_names(target: ast.AST) -> list[str]:
+    """Flat simple names bound by an assignment target (tuples unpacked)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    return []
+
+
+def iter_functions(tree: ast.AST):
+    """Every FunctionDef/AsyncFunctionDef in the tree (nested included)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# file collection and the runner
+# ---------------------------------------------------------------------------
+
+def collect_files(paths: list[str], root: Path = ROOT) -> list[SourceFile]:
+    seen: dict[str, SourceFile] = {}
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        candidates = ([p] if p.is_file()
+                      else sorted(p.rglob("*.py")) if p.is_dir() else [])
+        if not candidates:
+            raise FileNotFoundError(f"analyze: no such path {raw!r}")
+        for f in candidates:
+            if "__pycache__" in f.parts or f.suffix != ".py":
+                continue
+            sf = SourceFile(f, root)
+            seen.setdefault(sf.path, sf)
+    return list(seen.values())
+
+
+def run_passes(passes, files: list[SourceFile],
+               root: Path = ROOT) -> list[Finding]:
+    """All non-suppressed findings, sorted by (path, line, rule)."""
+    by_path = {f.path: f for f in files}
+    findings: list[Finding] = []
+    for p in passes:
+        scoped = [f for f in files if p.scope(f.path)]
+        for fnd in p.run(scoped, root):
+            src = by_path.get(fnd.path)
+            if src is not None and src.suppressed(fnd.line, fnd.rule):
+                continue
+            findings.append(fnd)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BaselineDiff:
+    new: list[Finding] = field(default_factory=list)
+    #: (rule, path, snippet, surplus count) entries no current finding matches
+    stale: list[tuple[str, str, str, int]] = field(default_factory=list)
+
+    @property
+    def clean(self) -> bool:
+        return not self.new and not self.stale
+
+
+def load_baseline(path: Path = BASELINE_PATH) -> Counter:
+    if not path.exists():
+        return Counter()
+    data = json.loads(path.read_text())
+    out: Counter = Counter()
+    for e in data.get("findings", []):
+        out[(e["rule"], e["path"], e["snippet"])] += int(e.get("count", 1))
+    return out
+
+
+def save_baseline(findings: list[Finding],
+                  path: Path = BASELINE_PATH) -> None:
+    counts = Counter(f.key for f in findings)
+    entries = [{"rule": r, "path": p, "snippet": s, "count": c}
+               for (r, p, s), c in sorted(counts.items())]
+    path.write_text(json.dumps(
+        {"comment": "grandfathered findings; regenerate with "
+                    "`python -m tools.analyze --baseline <paths>` "
+                    "(shrink-only under --check)",
+         "findings": entries}, indent=2) + "\n")
+
+
+def diff_baseline(findings: list[Finding],
+                  baseline: Counter) -> BaselineDiff:
+    diff = BaselineDiff()
+    remaining = Counter(baseline)
+    for f in findings:
+        if remaining[f.key] > 0:
+            remaining[f.key] -= 1
+        else:
+            diff.new.append(f)
+    for (rule, path, snippet), n in sorted(remaining.items()):
+        if n > 0:
+            diff.stale.append((rule, path, snippet, n))
+    return diff

@@ -1,0 +1,51 @@
+"""deprecation pass: no new uses of deprecated kwargs in-repo (DP001).
+
+`JoinPlan(backend=...)` has been a `DeprecationWarning`-emitting alias of
+``filter_backend`` since PR 6 and is scheduled for removal after
+**2026-12-01** (see ``spatial/plan.py``); ``use_jnp=`` on the pipeline
+shims is the same vintage.  Warnings only fire at runtime on exercised
+paths — this rule keeps new *in-repo* call sites from accumulating while
+the alias ages out.
+
+* **DP001** — a call passes a deprecated kwarg listed in
+  :data:`DEPRECATED_KWARGS` (callee matched by trailing name, so
+  ``spatial.JoinPlan(...)`` and ``JoinPlan(...)`` both match).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .core import AnalysisPass, Finding, SourceFile, call_name
+
+#: (callee trailing name, kwarg) -> replacement note.  Removal dates live
+#: in the deprecation warnings at the definition sites.
+DEPRECATED_KWARGS: dict[tuple[str, str], str] = {
+    ("JoinPlan", "backend"):
+        "pass filter_backend= (alias removed after 2026-12-01)",
+    ("spatial_intersection_join", "use_jnp"):
+        "pass filter_backend='jnp' (legacy switch, removed with the shims)",
+}
+
+
+class DeprecationPass(AnalysisPass):
+    name = "deprecation"
+    rules = {
+        "DP001": "call site uses a deprecated kwarg",
+    }
+
+    def run(self, files: list[SourceFile], root: Path) -> list[Finding]:
+        out: list[Finding] = []
+        for src in files:
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = call_name(node).split(".")[-1]
+                for kw in node.keywords:
+                    note = DEPRECATED_KWARGS.get((callee, kw.arg))
+                    if note is not None:
+                        out.append(src.finding(
+                            "DP001", node,
+                            f"deprecated kwarg `{kw.arg}=` on "
+                            f"`{callee}(...)`: {note}"))
+        return out

@@ -1,0 +1,209 @@
+"""host-sync pass: implicit device->host transfers (rules HS001/HS002).
+
+3DPipe's fused-pipeline result (PAPERS.md) hinges on *not* syncing to host
+between stages: every ``float()`` / ``bool()`` / ``.item()`` /
+``np.asarray()`` on a jnp value is a blocking device->host transfer that
+serializes dispatch.  Conversely, a benchmark that reads
+``time.perf_counter()`` without draining the device first times dispatch,
+not work (JAX is async).  Both directions are statically visible:
+
+* **HS001** — ``float(x)`` / ``bool(x)`` / ``int(x)`` / ``np.asarray(x)``
+  / ``np.array(x)`` / ``x.item()`` where ``x`` is a *device value*: a name
+  assigned (anywhere in the enclosing function) from a ``jnp.*`` /
+  ``jax.*`` expression or from calling a jit/shard_map/pallas-wrapped
+  callable defined in the module.  Intended stage-boundary syncs are
+  grandfathered in the baseline or carry an explaining suppression.
+* **HS002** — in ``benchmarks/``, an elapsed-time read
+  ``time.perf_counter() - t0`` whose timed region contains no
+  ``block_until_ready`` / ``sync`` call: the number measures async
+  dispatch, not device work.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .core import (AnalysisPass, Finding, SourceFile, assigned_names,
+                   call_name, dotted, iter_functions)
+
+#: host-converting callables (argument position 0)
+_CONVERTERS = ("float", "bool", "int", "np.asarray", "np.array",
+               "numpy.asarray", "numpy.array")
+#: calls that wrap a function into a device-executing one
+_DEVICE_WRAPPERS = ("jax.jit", "jit", "pl.pallas_call", "pallas_call",
+                    "shard_map", "jax.experimental.shard_map.shard_map")
+#: calls that force/await the transfer explicitly — the sanctioned idiom
+_SYNC_CALLS = ("block_until_ready", "sync")
+
+
+def _is_device_rooted(node: ast.AST, device_fns: set[str]) -> bool:
+    """Expression rooted at jnp./jax. or at a known device callable."""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        root = name.split(".", 1)[0]
+        if root in ("jnp", "jax") and not name.startswith("jax.config"):
+            return True
+        if name in device_fns:
+            return True
+        return False
+    if isinstance(node, (ast.Subscript, ast.Attribute)):
+        return _is_device_rooted(node.value, device_fns)
+    if isinstance(node, ast.BinOp):
+        return (_is_device_rooted(node.left, device_fns)
+                or _is_device_rooted(node.right, device_fns))
+    return False
+
+
+def _module_device_fns(tree: ast.Module) -> set[str]:
+    """Names bound (anywhere) to jit/shard_map/pallas_call results, plus
+    functions decorated with them."""
+    fns: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if call_name(node.value) in _DEVICE_WRAPPERS:
+                for t in node.targets:
+                    fns.update(assigned_names(t))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                name = (call_name(dec) if isinstance(dec, ast.Call)
+                        else dotted(dec))
+                if name in _DEVICE_WRAPPERS or (
+                        isinstance(dec, ast.Call)
+                        and call_name(dec) in ("partial", "functools.partial")
+                        and dec.args
+                        and dotted(dec.args[0]) in _DEVICE_WRAPPERS):
+                    fns.add(node.name)
+    return fns
+
+
+def _device_names(fn: ast.AST, device_fns: set[str]) -> set[str]:
+    """Local names assigned from device-rooted expressions in ``fn``."""
+    names: set[str] = set()
+    # two sweeps: a name assigned from a device fn may feed a later
+    # assignment that appears earlier in the walk order
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                value_dev = _is_device_rooted(node.value, device_fns) or (
+                    isinstance(node.value, ast.Name)
+                    and node.value.id in names)
+                if value_dev:
+                    for t in node.targets:
+                        names.update(assigned_names(t))
+    return names
+
+
+class HostSyncPass(AnalysisPass):
+    name = "host-sync"
+    rules = {
+        "HS001": "implicit device->host transfer "
+                 "(float/bool/int/np.asarray/.item on a jnp value)",
+        "HS002": "benchmark elapsed-time read without a device sync "
+                 "(block_until_ready) in the timed region",
+    }
+
+    _SCOPE = ("src/repro/spatial/", "src/repro/core/",
+              "src/repro/kernels/", "benchmarks/")
+
+    def scope(self, path: str) -> bool:
+        return path.startswith(self._SCOPE)
+
+    def run(self, files: list[SourceFile], root: Path) -> list[Finding]:
+        out: list[Finding] = []
+        for src in files:
+            out.extend(self._hs001(src))
+            if src.path.startswith("benchmarks/"):
+                out.extend(self._hs002(src))
+        return out
+
+    # -- HS001 -------------------------------------------------------------
+    def _hs001(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        device_fns = _module_device_fns(src.tree)
+        # scope = one outermost function with everything nested inside it
+        # (closures share the enclosing function's names), or the module
+        # body outside any function
+        parents = src.parents()
+        scopes: list[tuple[ast.AST, list[ast.Call]]] = []
+        claimed: set[int] = set()
+        for fn in iter_functions(src.tree):
+            anc, outer = parents.get(fn), True
+            while anc is not None:
+                if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    outer = False
+                    break
+                anc = parents.get(anc)
+            if outer:
+                calls = [n for n in ast.walk(fn)
+                         if isinstance(n, ast.Call)]
+                claimed.update(id(c) for c in calls)
+                scopes.append((fn, calls))
+        scopes.append((src.tree, [n for n in ast.walk(src.tree)
+                                  if isinstance(n, ast.Call)
+                                  and id(n) not in claimed]))
+        for scope, calls in scopes:
+            local = _device_names(scope, device_fns)
+            for node in calls:
+                name = call_name(node)
+                what = None
+                if name in _CONVERTERS and node.args:
+                    arg = node.args[0]
+                    if ((isinstance(arg, ast.Name) and arg.id in local)
+                            or _is_device_rooted(arg, device_fns)):
+                        what = f"{name}(...)"
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item"):
+                    base = node.func.value
+                    if ((isinstance(base, ast.Name) and base.id in local)
+                            or _is_device_rooted(base, device_fns)):
+                        what = ".item()"
+                if what is not None:
+                    out.append(src.finding(
+                        "HS001", node,
+                        f"implicit device->host transfer: {what} on a jnp "
+                        f"value blocks dispatch; keep the stage on device "
+                        f"or sync explicitly with jax.block_until_ready"))
+        return out
+
+    # -- HS002 -------------------------------------------------------------
+    @staticmethod
+    def _is_perf_counter(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and call_name(node) in ("time.perf_counter", "perf_counter"))
+
+    def _hs002(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        for fn in iter_functions(src.tree):
+            starts: dict[str, list[int]] = {}  # name -> linenos of t0 = pc()
+            reads: list[tuple[ast.AST, str]] = []
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and self._is_perf_counter(node.value)):
+                    for t in node.targets:
+                        for n in assigned_names(t):
+                            starts.setdefault(n, []).append(node.lineno)
+                if (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, ast.Sub)
+                        and self._is_perf_counter(node.left)
+                        and isinstance(node.right, ast.Name)):
+                    reads.append((node, node.right.id))
+            if not reads:
+                continue
+            sync_lines = sorted(
+                node.lineno for node in ast.walk(fn)
+                if isinstance(node, ast.Call)
+                and (call_name(node).split(".")[-1] in _SYNC_CALLS))
+            for node, t0 in reads:
+                # the timed region opens at the closest preceding start
+                cands = [ln for ln in starts.get(t0, ())
+                         if ln <= node.lineno]
+                if not cands:
+                    continue
+                lo = max(cands)
+                if not any(lo <= s <= node.lineno for s in sync_lines):
+                    out.append(src.finding(
+                        "HS002", node,
+                        f"timed region [{t0}={lo} .. {node.lineno}] has no "
+                        f"block_until_ready/sync before the perf_counter "
+                        f"read: measures async dispatch, not device work"))
+        return out

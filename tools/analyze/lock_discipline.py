@@ -1,0 +1,256 @@
+"""lock-discipline pass: guarded access to service state (LD001/LD002).
+
+`JoinService` runs a background micro-batch worker thread next to caller
+threads that submit, mutate datasets, and read stats; `StoreCache` is the
+shared warm-store table between them.  Every *shared mutable* field of a
+lock-owning class must be touched under one of the class's locks, and lock
+acquisition order must be consistent — the two invariants this pass checks
+lexically, per class:
+
+* a class participates when it assigns a ``threading.Lock()`` /
+  ``threading.RLock()`` to ``self.<attr>`` in ``__init__``;
+* *thread-entry* methods are those passed as ``target=`` to
+  ``threading.Thread`` (closures count as part of their defining method);
+  the worker-reachable set is their transitive ``self.f()`` call closure;
+* a field is *shared mutable* when it is mutated outside ``__init__`` and
+  either (a) it is accessed by a worker-reachable method, or (b) it is
+  mutated in two or more distinct methods.  Fields holding inherently
+  thread-safe primitives (``threading.Event`` / ``Condition`` / locks /
+  queues) are exempt.
+
+* **LD001** — a read or mutation of a shared mutable field lexically
+  outside every ``with self.<lock>:`` block (``__init__`` exempt).
+* **LD002** — lock-order inversion: ``with self.B:`` nested inside
+  ``with self.A:`` in one method and the opposite nesting elsewhere.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .core import AnalysisPass, Finding, SourceFile, call_name
+
+_LOCK_CTORS = ("threading.Lock", "threading.RLock", "Lock", "RLock")
+_SAFE_CTORS = ("threading.Event", "threading.Condition", "Event",
+               "Condition", "queue.Queue", "Queue") + _LOCK_CTORS
+#: method names that mutate their receiver in place
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "add", "discard", "put", "move_to_end",
+    "resize", "sort", "reverse", "appendleft", "popleft",
+})
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """'x' for an expression rooted at ``self.x``; None otherwise."""
+    while isinstance(node, (ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class _MethodInfo:
+    def __init__(self, node: ast.FunctionDef):
+        self.node = node
+        self.name = node.name
+        self.reads: list[ast.Attribute] = []      # self.f loads
+        self.mutations: list[ast.AST] = []        # nodes mutating self.f
+        self.mutated_fields: set[str] = set()
+        self.accessed_fields: set[str] = set()
+        self.calls: set[str] = set()              # self.f() call targets
+        self.thread_targets: set[str] = set()     # local defs passed to Thread
+
+
+def _scan_method(m: _MethodInfo) -> None:
+    fn = m.node
+    local_defs = {n.name for n in ast.walk(fn)
+                  if isinstance(n, ast.FunctionDef) and n is not fn}
+    for node in ast.walk(fn):
+        # Thread(target=...) — the entry point of a worker thread
+        if isinstance(node, ast.Call) and \
+                call_name(node).split(".")[-1] == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    tgt = kw.value
+                    if isinstance(tgt, ast.Name) and tgt.id in local_defs:
+                        m.thread_targets.add(m.name)     # closure: this method
+                    elif (attr := _self_attr(tgt)) is not None:
+                        m.thread_targets.add(attr)
+        # self.f(...) call graph edges
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id == "self":
+            m.calls.add(node.func.attr)
+        # mutations: self.f = / self.f op= / self.f[k] = / del self.f[k]
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                f = _self_attr(t)
+                if f is not None:
+                    m.mutations.append(t)
+                    m.mutated_fields.add(f)
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                f = _self_attr(t)
+                if f is not None:
+                    m.mutations.append(t)
+                    m.mutated_fields.add(f)
+        # mutator method calls: self.f.append(...)
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATORS:
+            f = _self_attr(node.func.value)
+            if f is not None:
+                m.mutations.append(node)
+                m.mutated_fields.add(f)
+        # every self.f access
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            m.reads.append(node)
+            m.accessed_fields.add(node.attr)
+
+
+def _init_field_ctors(cls: ast.ClassDef) -> dict[str, str]:
+    """field -> ctor dotted name for ``self.x = <ctor>()`` in __init__."""
+    out: dict[str, str] = {}
+    for fn in cls.body:
+        if isinstance(fn, ast.FunctionDef) and fn.name == "__init__":
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and \
+                        isinstance(node.value, ast.Call):
+                    for t in node.targets:
+                        f = _self_attr(t)
+                        if f is not None:
+                            out[f] = call_name(node.value)
+    return out
+
+
+def _with_lock_stack(node: ast.AST, parents: dict, locks: set[str]
+                     ) -> list[str]:
+    """Lock attrs held (innermost last) at ``node`` by lexical With blocks."""
+    stack: list[str] = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                f = _self_attr(item.context_expr)
+                if f in locks:
+                    stack.append(f)
+        cur = parents.get(cur)
+    return list(reversed(stack))
+
+
+class LockDisciplinePass(AnalysisPass):
+    name = "lock-discipline"
+    rules = {
+        "LD001": "shared mutable field of a lock-owning class accessed "
+                 "outside every `with self.<lock>:` block",
+        "LD002": "lock-order inversion between two locks of one class",
+    }
+
+    def run(self, files: list[SourceFile], root: Path) -> list[Finding]:
+        out: list[Finding] = []
+        for src in files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef):
+                    out.extend(self._check_class(src, node))
+        return out
+
+    def _check_class(self, src: SourceFile,
+                     cls: ast.ClassDef) -> list[Finding]:
+        ctors = _init_field_ctors(cls)
+        locks = {f for f, c in ctors.items() if c in _LOCK_CTORS}
+        if not locks:
+            return []
+        safe = {f for f, c in ctors.items() if c in _SAFE_CTORS}
+
+        methods: dict[str, _MethodInfo] = {}
+        for fn in cls.body:
+            if isinstance(fn, ast.FunctionDef):
+                m = _MethodInfo(fn)
+                _scan_method(m)
+                methods[fn.name] = m
+
+        # worker-reachable set: transitive self-call closure of thread entries
+        entries: set[str] = set()
+        for m in methods.values():
+            entries |= m.thread_targets & set(methods)
+        worker: set[str] = set(entries)
+        frontier = list(entries)
+        while frontier:
+            for callee in methods[frontier.pop()].calls:
+                if callee in methods and callee not in worker:
+                    worker.add(callee)
+                    frontier.append(callee)
+
+        mutated_by: dict[str, set[str]] = {}
+        accessed_in_worker: set[str] = set()
+        for m in methods.values():
+            if m.name == "__init__":
+                continue
+            for f in m.mutated_fields:
+                mutated_by.setdefault(f, set()).add(m.name)
+            if m.name in worker:
+                accessed_in_worker |= m.accessed_fields
+
+        # exclude method names: `self._handle(k).insert(...)` mutates the
+        # *returned* object, not a field named `_handle`
+        shared = {
+            f for f, muts in mutated_by.items()
+            if f not in safe and f not in locks and f not in methods
+            and (f in accessed_in_worker or len(muts) >= 2)
+        }
+        if not shared:
+            return []
+
+        parents = src.parents()
+        out: list[Finding] = []
+        seen_lines: set[tuple[str, int]] = set()
+        for m in methods.values():
+            if m.name == "__init__":
+                continue
+            for node in m.reads:
+                f = node.attr
+                if f not in shared:
+                    continue
+                if _with_lock_stack(node, parents, locks):
+                    continue
+                key = (f, node.lineno)
+                if key in seen_lines:
+                    continue
+                seen_lines.add(key)
+                role = ("worker-reachable " if m.name in worker else "")
+                out.append(src.finding(
+                    "LD001", node,
+                    f"{cls.name}.{m.name}: access to shared field "
+                    f"`{f}` outside every lock of "
+                    f"{sorted(locks)} ({role}method; field is mutated in "
+                    f"{sorted(mutated_by.get(f, ()))})"))
+
+        # LD002: lock-order inversion over lexical nesting
+        order_sites: dict[tuple[str, str], ast.AST] = {}
+        for m in methods.values():
+            for node in ast.walk(m.node):
+                if not isinstance(node, ast.With):
+                    continue
+                inner = {f for item in node.items
+                         if (f := _self_attr(item.context_expr)) in locks}
+                if not inner:
+                    continue
+                outer = _with_lock_stack(node, parents, locks)
+                for o in outer:
+                    for i in inner:
+                        if o != i:
+                            order_sites.setdefault((o, i), node)
+        for (a, b), node in sorted(order_sites.items()):
+            if (b, a) in order_sites and a < b:
+                other = order_sites[(b, a)]
+                out.append(src.finding(
+                    "LD002", node,
+                    f"{cls.name}: lock order inversion — `{a}` then `{b}` "
+                    f"here, but `{b}` then `{a}` at line {other.lineno}"))
+        return out

@@ -1,0 +1,241 @@
+"""pallas-constraint pass: TPU kernel shape/trace rules (PL001-003).
+
+The Pallas kernels (DESIGN.md §§7,9) assume: block shapes are powers of
+two (the (8,128) VPU tile and the pow-2 bucketing contract of
+``core.join``), kernel bodies are straight-line vector code (Python
+branches on traced values either fail to trace or silently specialize),
+and kernels close over nothing mutable on the host (captured state bakes
+into the compiled executable and goes stale).  A *kernel function* is one
+whose parameters are ``*_ref`` Refs.
+
+* **PL001** — a ``block_*`` parameter default or ``block_*=`` call
+  argument that is not a power of two, in a pallas-importing module.
+* **PL002** — a Python ``if`` / ``while`` / ``assert`` in a kernel
+  function whose test involves a traced value (a Ref load, a value
+  derived from one, or ``pl.program_id``).  Use ``jnp.where`` /
+  ``pl.when`` instead.
+* **PL003** — a kernel function closing over host state: free names that
+  are not module imports, module-level constants, module-level function
+  defs, or builtins.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from pathlib import Path
+
+from .core import (AnalysisPass, Finding, SourceFile, assigned_names,
+                   call_name, is_pow2, iter_functions)
+
+
+def _imports_pallas(src: SourceFile) -> bool:
+    return "pallas" in src.text
+
+
+def _is_kernel_fn(fn: ast.FunctionDef) -> bool:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    return any(n.endswith("_ref") for n in names) and len(names) > 0
+
+
+def _module_allowed_names(tree: ast.Module) -> set[str]:
+    allowed: set[str] = set(dir(builtins))
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            allowed.update(a.asname or a.name.split(".")[0]
+                           for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            allowed.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            allowed.add(node.name)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+            # module constants: literal scalars/tuples only
+            value = node.value
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            if value is not None and _is_const_expr(value):
+                for t in targets:
+                    allowed.update(assigned_names(t))
+    return allowed
+
+
+def _is_const_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_const_expr(e) for e in node.elts)
+    if isinstance(node, ast.BinOp):
+        return _is_const_expr(node.left) and _is_const_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_const_expr(node.operand)
+    return False
+
+
+def _traced_names(fn: ast.FunctionDef) -> set[str]:
+    """Locals derived from Ref loads or pl.program_id (fixpoint sweep)."""
+    ref_params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                  if a.arg.endswith("_ref")}
+
+    def rooted(node: ast.AST, traced: set[str]) -> bool:
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            return ((isinstance(base, ast.Name)
+                     and (base.id in ref_params or base.id in traced))
+                    or rooted(base, traced))
+        if isinstance(node, ast.Call):
+            if call_name(node) in ("pl.program_id", "program_id"):
+                return True
+            return any(rooted(a, traced) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in traced
+        if isinstance(node, ast.BinOp):
+            return rooted(node.left, traced) or rooted(node.right, traced)
+        if isinstance(node, (ast.Attribute, ast.UnaryOp)):
+            inner = (node.value if isinstance(node, ast.Attribute)
+                     else node.operand)
+            return rooted(inner, traced)
+        if isinstance(node, ast.Compare):
+            return rooted(node.left, traced) or any(
+                rooted(c, traced) for c in node.comparators)
+        return False
+
+    traced: set[str] = set()
+    for _ in range(3):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and rooted(node.value, traced):
+                for t in node.targets:
+                    traced.update(assigned_names(t))
+    return traced
+
+
+class PallasConstraintPass(AnalysisPass):
+    name = "pallas-constraint"
+    rules = {
+        "PL001": "non-power-of-two block shape in a pallas module",
+        "PL002": "Python branch on a traced value inside a kernel "
+                 "function (use jnp.where / pl.when)",
+        "PL003": "kernel function captures host state (free name that is "
+                 "not an import, module constant, or module function)",
+    }
+
+    def scope(self, path: str) -> bool:
+        return path.startswith("src/repro/kernels/")
+
+    def run(self, files: list[SourceFile], root: Path) -> list[Finding]:
+        out: list[Finding] = []
+        for src in files:
+            if not _imports_pallas(src):
+                continue
+            out.extend(self._pl001(src))
+            allowed = _module_allowed_names(src.tree)
+            for fn in iter_functions(src.tree):
+                if not _is_kernel_fn(fn):
+                    continue
+                out.extend(self._pl002(src, fn))
+                out.extend(self._pl003(src, fn, allowed))
+        return out
+
+    # -- PL001 -------------------------------------------------------------
+    def _pl001(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        for fn in iter_functions(src.tree):
+            args = fn.args
+            pairs = list(zip(args.kwonlyargs, args.kw_defaults))
+            n_def = len(args.defaults)
+            if n_def:
+                pairs += list(zip(args.args[-n_def:], args.defaults))
+            for a, d in pairs:
+                if a.arg.startswith("block_") and \
+                        isinstance(d, ast.Constant) and \
+                        isinstance(d.value, int) and not is_pow2(d.value):
+                    out.append(src.finding(
+                        "PL001", fn,
+                        f"`{fn.name}` default {a.arg}={d.value} is not a "
+                        f"power of two (breaks the pow-2 tiling contract)"))
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg and kw.arg.startswith("block_") and \
+                            isinstance(kw.value, ast.Constant) and \
+                            isinstance(kw.value.value, int) and \
+                            not is_pow2(kw.value.value):
+                        out.append(src.finding(
+                            "PL001", node,
+                            f"call passes {kw.arg}={kw.value.value}, not a "
+                            f"power of two"))
+        return out
+
+    # -- PL002 -------------------------------------------------------------
+    def _pl002(self, src: SourceFile,
+               fn: ast.FunctionDef) -> list[Finding]:
+        out: list[Finding] = []
+        traced = _traced_names(fn)
+        ref_params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                      if a.arg.endswith("_ref")}
+
+        def mentions_traced(node: ast.AST) -> bool:
+            for n in ast.walk(node):
+                if isinstance(n, ast.Name) and (
+                        n.id in traced or n.id in ref_params):
+                    return True
+                if isinstance(n, ast.Call) and \
+                        call_name(n) in ("pl.program_id", "program_id"):
+                    return True
+            return False
+
+        for node in ast.walk(fn):
+            test = None
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            if test is not None and mentions_traced(test):
+                kind = type(node).__name__.lower()
+                out.append(src.finding(
+                    "PL002", node,
+                    f"kernel `{fn.name}`: Python `{kind}` on a traced "
+                    f"value — use jnp.where / pl.when (branches do not "
+                    f"trace)"))
+        return out
+
+    # -- PL003 -------------------------------------------------------------
+    def _pl003(self, src: SourceFile, fn: ast.FunctionDef,
+               allowed: set[str]) -> list[Finding]:
+        out: list[Finding] = []
+        bound: set[str] = set()
+        a = fn.args
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                    + ([a.vararg] if a.vararg else [])
+                    + ([a.kwarg] if a.kwarg else [])):
+            bound.add(arg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    bound.update(assigned_names(t))
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                tgt = node.target
+                bound.update(assigned_names(tgt))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                bound.add(node.name)
+                for arg in (node.args.posonlyargs + node.args.args
+                            + node.args.kwonlyargs):
+                    bound.add(arg.arg)
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                bound.update(assigned_names(node.optional_vars))
+        reported: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load):
+                name = node.id
+                if name in bound or name in allowed or name in reported:
+                    continue
+                reported.add(name)
+                out.append(src.finding(
+                    "PL003", node,
+                    f"kernel `{fn.name}` captures host name `{name}` "
+                    f"(not an import/constant/module function): captured "
+                    f"state bakes into the compiled kernel"))
+        return out

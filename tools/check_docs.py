@@ -1,81 +1,35 @@
-"""CI docs-consistency check: the backend-knob surface must be documented.
+"""DEPRECATED shim: the docs-consistency check now lives in the
+backend-parity pass of the static-analysis suite (rules BE002/BE003 —
+see ``tools/analyze/backend_parity.py`` and DESIGN.md §11).
 
-Two knob sources are scanned:
+This entry point is kept so existing invocations keep working; it runs
+only the absorbed knob checks.  Prefer the full gate::
 
-* every ``*backend`` kwarg accepted by ``JoinPlan.__init__`` (plus
-  ``build_backend``, which travels through ``build_opts`` to every
-  filter's ``build``);
-* every ``--*-backend`` flag exposed by the launchers
-  (``repro.launch.spatial_join`` and ``repro.launch.serve_join``) — flags
-  normalize to knob names (``--filter-backend`` -> ``filter_backend``), so
-  a launcher-only surface cannot ship undocumented either.
-
-Each knob must appear, as a whole word, in both README.md and DESIGN.md —
-so a new stage backend cannot ship without landing in the "Pipeline stages
-& backends" table and its DESIGN section.
-
-Run from the repo root: ``PYTHONPATH=src python tools/check_docs.py``
+    PYTHONPATH=src python -m tools.analyze --check src tools benchmarks
 """
 from __future__ import annotations
 
-import inspect
 import pathlib
-import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
 
-from repro.spatial import JoinPlan  # noqa: E402
-DOCS = ("README.md", "DESIGN.md")
-# build_backend is accepted by every IntermediateFilter.build (via the
-# JoinPlan build_opts dict), not as a named JoinPlan kwarg
-EXTRA_KNOBS = ("build_backend",)
-LAUNCHERS = (
-    ROOT / "src" / "repro" / "launch" / "spatial_join.py",
-    ROOT / "src" / "repro" / "launch" / "serve_join.py",
-)
-
-
-def plan_knobs() -> list[str]:
-    params = inspect.signature(JoinPlan.__init__).parameters
-    return [p for p in params if p.endswith("backend")]
-
-
-def launcher_knobs() -> list[str]:
-    """Knob names behind the launchers' ``--*-backend`` argparse flags."""
-    knobs: list[str] = []
-    for launcher in LAUNCHERS:
-        text = launcher.read_text()
-        flags = re.findall(
-            r'add_argument\(\s*"(--[a-z][a-z-]*backend)"', text)
-        for f in flags:
-            knob = f.lstrip("-").replace("-", "_")
-            if knob not in knobs:
-                knobs.append(knob)
-    return knobs
-
-
-def backend_knobs() -> list[str]:
-    knobs = plan_knobs() + list(EXTRA_KNOBS)
-    knobs += [k for k in launcher_knobs() if k not in knobs]
-    return knobs
+from tools.analyze.backend_parity import (  # noqa: E402
+    BackendParityPass, collect_knobs)
 
 
 def main() -> int:
-    missing = []
-    texts = {doc: (ROOT / doc).read_text() for doc in DOCS}
-    for knob in backend_knobs():
-        for doc, text in texts.items():
-            if not re.search(rf"\b{re.escape(knob)}\b", text):
-                missing.append(f"{doc}: missing `{knob}`")
-    if missing:
-        print("docs-consistency check FAILED:")
-        for m in missing:
-            print(f"  {m}")
+    findings = BackendParityPass()._be002_003(ROOT)
+    if findings:
+        print("docs-consistency check FAILED "
+              "(run `python -m tools.analyze` for the full gate):")
+        for f in findings:
+            print(f"  {f.render()}")
         return 1
-    print(f"docs-consistency ok: {backend_knobs()} documented in "
-          f"{' and '.join(DOCS)}")
+    print(f"docs-consistency ok: {collect_knobs(ROOT)} documented and "
+          f"threaded (absorbed into tools.analyze rules BE002/BE003)")
     return 0
 
 
