@@ -8,6 +8,7 @@ polygon/cell-size ratios are kept comparable).
 """
 from __future__ import annotations
 
+import sys
 import time
 from functools import lru_cache
 
@@ -48,3 +49,21 @@ def timeit(fn, *args, repeats: int = 1, **kw):
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def smoke_requested(argv: list[str] | None = None) -> bool:
+    """The ONE place that interprets the ``--smoke`` flag — every
+    benchmark entry point (module ``__main__`` and ``benchmarks.run``)
+    routes through here, so the flag means the same thing everywhere."""
+    return "--smoke" in (sys.argv[1:] if argv is None else argv)
+
+
+def bench_main(run_fn, smoke_fn=None, argv: list[str] | None = None) -> None:
+    """Uniform benchmark-module entry point: ``--smoke`` runs the CI
+    quick-lane identity check, anything else prints the CSV rows."""
+    if smoke_fn is not None and smoke_requested(argv):
+        smoke_fn()
+        return
+    print("name,us_per_call,derived")
+    for line in run_fn():
+        print(line)

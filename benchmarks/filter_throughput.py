@@ -18,7 +18,6 @@ sequential trichotomy — as the CI quick-lane smoke.
 from __future__ import annotations
 
 import json
-import sys
 import time
 
 import numpy as np
@@ -121,9 +120,5 @@ def run():
 
 
 if __name__ == "__main__":
-    if "--smoke" in sys.argv[1:]:
-        smoke()
-    else:
-        print("name,us_per_call,derived")
-        for line in run():
-            print(line)
+    from .common import bench_main
+    bench_main(run, smoke)

@@ -1,0 +1,129 @@
+"""BENCH_pipeline: fused single-dispatch chain vs staged stage boundaries.
+
+The ISSUE-8 acceptance gate: ``JoinPlan(pipeline_mode="fused")`` runs the
+whole MBR -> filter -> refine chain device-resident (DESIGN.md §12) —
+on-device compaction between stages, one sanctioned host sync at the end —
+and must sustain >= 1.0x the end-to-end wall-clock of the staged chain
+with ``verdicts_equal`` true: fusing the boundaries is an execution
+detail that never changes results (same pairs, same ORDER).
+``benchmarks/run.py`` persists the result as BENCH_pipeline.json and
+``tools/check_bench.py`` guards the committed artifact in CI.
+
+``python -m benchmarks.pipeline_e2e --smoke`` is the CI quick-lane check:
+fused results are bitwise identical to staged for every filter method on
+intersects/within, plus empty and degenerate candidate frames through the
+compaction kernels.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.datagen import make_dataset
+from repro.spatial import JoinPlan
+
+from .common import row, sync
+
+N_ORDER = 8
+REPEATS = 5
+
+
+def _plan(R, S, mode: str, method: str = "april") -> JoinPlan:
+    plan = JoinPlan(R, S, filter=method, n_order=N_ORDER,
+                    pipeline_mode=mode)
+    plan.build()
+    return plan
+
+
+def _time_mode(plan: JoinPlan, predicate: str) -> tuple[np.ndarray, float]:
+    pairs, _ = plan.execute(predicate)      # warm-up: jit compile + caches
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        pairs, _ = sync(plan.execute(predicate))
+    return pairs, (time.perf_counter() - t0) / REPEATS
+
+
+def bench_pipeline(method: str = "april"):
+    R = make_dataset("T1", seed=11, count=420)
+    S = make_dataset("T2", seed=12, count=560)
+
+    staged = _plan(R, S, "staged", method)
+    fused = _plan(R, S, "fused", method)
+
+    # the gated headline: the paper's core intersection join, where the
+    # candidate frame is large enough that the staged chain's three host
+    # round-trips dominate. Tiny frames (this workload's `within` sees ~34
+    # candidates) stay faster staged — which is why staged is the default —
+    # so within contributes identity, not a gated speedup.
+    p_staged, t_staged = _time_mode(staged, "intersects")
+    p_fused, t_fused = _time_mode(fused, "intersects")
+    equal = np.array_equal(p_staged, p_fused)
+    stages = fused.last_stats.stage_times()
+
+    w_staged, tw_staged = _time_mode(staged, "within")
+    w_fused, tw_fused = _time_mode(fused, "within")
+    equal &= np.array_equal(w_staged, w_fused)
+    assert equal, "fused verdicts diverged from staged"
+
+    return {
+        "dataset": "T1 x T2", "method": method, "n_order": N_ORDER,
+        "repeats": REPEATS,
+        "t_staged_s": round(t_staged, 5),
+        "t_fused_s": round(t_fused, 5),
+        "n_results": int(len(p_staged)),
+        "speedup_fused_over_staged": round(t_staged / max(t_fused, 1e-9), 2),
+        "within_identity": {
+            "t_staged_s": round(tw_staged, 5),
+            "t_fused_s": round(tw_fused, 5),
+            "n_results": int(len(w_staged)),
+        },
+        "fused_stage_times_s": {k: round(v, 5) for k, v in stages.items()},
+        "verdicts_equal": bool(equal),
+    }
+
+
+def smoke() -> None:
+    """CI quick lane: fused == staged bitwise (pairs AND order) for every
+    filter method on intersects/within, and the degenerate frames — empty
+    candidate set, single-object datasets — survive the compaction
+    kernels."""
+    from repro.spatial.filters import available_filters
+
+    R = make_dataset("T1", seed=31, count=70)
+    S = make_dataset("T2", seed=32, count=90)
+    for method in available_filters():
+        for predicate in ("intersects", "within"):
+            ref, _ = _plan(R, S, "staged", method).execute(predicate)
+            got, stats = _plan(R, S, "fused", method).execute(predicate)
+            assert np.array_equal(ref, got), (method, predicate)
+            assert stats.pipeline_mode == "fused"
+        print(f"pipeline smoke ok: {method} fused == staged")
+
+    # degenerate frames: far-apart single polygons -> empty candidate set;
+    # identical single polygons -> every lane survives to refinement
+    from repro.datagen.synthetic import PolygonDataset
+    sq = np.array([[0.1, 0.1], [0.2, 0.1], [0.2, 0.2], [0.1, 0.2]])
+    one = PolygonDataset(name="a", verts=sq[None], nverts=np.array([4]))
+    far = PolygonDataset(name="b", verts=sq[None] + 0.6, nverts=np.array([4]))
+    for other, n_exp in ((far, 0), (one, 1)):
+        ref, _ = _plan(one, other, "staged").execute("intersects")
+        got, _ = _plan(one, other, "fused").execute("intersects")
+        assert np.array_equal(ref, got) and len(got) == n_exp
+    print("pipeline smoke ok: empty + degenerate candidate frames")
+
+
+def run():
+    res = bench_pipeline()
+    with open("BENCH_pipeline.json", "w") as f:
+        json.dump(res, f, indent=2)
+    return [row("pipeline_e2e_intersects", 1e6 * res["t_fused_s"],
+                f"staged_us={1e6 * res['t_staged_s']:.1f};"
+                f"results={res['n_results']};"
+                f"speedup={res['speedup_fused_over_staged']}")]
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+    bench_main(run, smoke)

@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
 ``python -m benchmarks.run table5 fig13 ...``; no args runs everything.
+``--smoke`` routes uniformly to every selected suite's CI quick-lane
+smoke check (``common.smoke_requested`` is the single interpretation of
+the flag) — suites without one are skipped with a comment line.
 """
 from __future__ import annotations
 
@@ -10,8 +13,10 @@ import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
                filter_throughput, granularity, join_order, kernel_bench,
-               linestring, mbr_join, partitioning, refinement, selection,
-               service_throughput, size_variance, space, within_join)
+               linestring, mbr_join, partitioning, pipeline_e2e, refinement,
+               selection, service_throughput, size_variance, space,
+               within_join)
+from .common import smoke_requested
 
 SUITES = {
     "table4_space": space,
@@ -35,19 +40,29 @@ SUITES = {
     "mbr_join": mbr_join,
     # emits BENCH_service.json: warm micro-batched serving vs cold joins
     "service_throughput": service_throughput,
+    # emits BENCH_pipeline.json: fused single-dispatch chain vs staged
+    "pipeline_e2e": pipeline_e2e,
 }
 
 
 def main() -> None:
-    want = sys.argv[1:]
+    smoke = smoke_requested()
+    want = [a for a in sys.argv[1:] if a != "--smoke"]
     print("name,us_per_call,derived")
     for name, mod in SUITES.items():
         if want and not any(w in name for w in want):
             continue
         t0 = time.time()
         try:
-            for line in mod.run():
-                print(line)
+            if smoke:
+                if hasattr(mod, "smoke"):
+                    mod.smoke()
+                else:
+                    print(f"# suite {name} has no smoke mode, skipped")
+                    continue
+            else:
+                for line in mod.run():
+                    print(line)
         except Exception as e:  # keep the suite going; surface the failure
             print(f"{name}_FAILED,0,{e!r}")
         print(f"# suite {name} took {time.time() - t0:.1f}s", flush=True)

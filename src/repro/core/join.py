@@ -51,7 +51,7 @@ __all__ = [
     "linestring_trichotomy_rows",
     "batch_overlap_np", "batch_overlap_jnp", "april_filter_batch",
     "within_filter_batch", "linestring_filter_batch",
-    "containment_join_pair", "adaptive_order",
+    "containment_join_pair", "adaptive_order", "fused_status_rows",
 ]
 
 TRUE_NEG, TRUE_HIT, INDECISIVE = 0, 1, 2
@@ -783,6 +783,131 @@ def _april_trichotomy_pallas(Xa, Xf, Ya, Yf, ri, si,
         verdicts[sel] = np.asarray(batch_april_trichotomy(
             *ra, *rf, *sa, *sf, interpret=interpret))
     return verdicts
+
+
+# -- fused device status lanes (DESIGN.md §12) -------------------------------
+
+_FUSED_STATUS_FNS: dict = {}
+
+
+def _fused_tri_bucket_jnp(xa_s, xa_l, xalo, xacnt, xf_s, xf_l, xflo, xfcnt,
+                          ya_s, ya_l, yalo, yacnt, yf_s, yf_l, yflo, yfcnt,
+                          Wxa: int, Wxf: int, Wya: int, Wyf: int):
+    """One bucket of the fused APRIL trichotomy: AA + AF + FA evaluated
+    branch-free over every row (no host compaction of AA survivors) and the
+    verdict select, all in one traced program."""
+    xas, xal = _device_gather(xa_s, xa_l, xalo, xacnt, Wxa)
+    xfs, xfl = _device_gather(xf_s, xf_l, xflo, xfcnt, Wxf)
+    yas, yal = _device_gather(ya_s, ya_l, yalo, yacnt, Wya)
+    yfs, yfl = _device_gather(yf_s, yf_l, yflo, yfcnt, Wyf)
+    aa = batch_overlap_jnp(xas, xal, xacnt, yas, yal, yacnt)
+    af = batch_overlap_jnp(xas, xal, xacnt, yfs, yfl, yfcnt)
+    fa = batch_overlap_jnp(xfs, xfl, xfcnt, yas, yal, yacnt)
+    return jnp.where(~aa, TRUE_NEG,
+                     jnp.where(af | fa, TRUE_HIT, INDECISIVE)).astype(jnp.int8)
+
+
+def _fused_within_bucket_jnp(xa_s, xa_l, xalo, xacnt, ya_s, ya_l, yalo, yacnt,
+                             yf_s, yf_l, yflo, yfcnt,
+                             Wxa: int, Wya: int, Wyf: int):
+    """One bucket of the fused within trichotomy: AA overlap + A(r)-in-F(s)
+    containment, verdict select in one traced program."""
+    xas, xal = _device_gather(xa_s, xa_l, xalo, xacnt, Wxa)
+    yas, yal = _device_gather(ya_s, ya_l, yalo, yacnt, Wya)
+    yfs, yfl = _device_gather(yf_s, yf_l, yflo, yfcnt, Wyf)
+    aa = batch_overlap_jnp(xas, xal, xacnt, yas, yal, yacnt)
+    cont = batch_containment_jnp(xas, xal, xacnt, yfs, yfl, yfcnt)
+    return jnp.where(~aa, TRUE_NEG,
+                     jnp.where(cont, TRUE_HIT, INDECISIVE)).astype(jnp.int8)
+
+
+def _fused_line_bucket_jnp(c_s, c_l, clo, ccnt, ya_s, ya_l, yalo, yacnt,
+                           yf_s, yf_l, yflo, yfcnt,
+                           Wc: int, Wya: int, Wyf: int):
+    """One bucket of the fused linestring trichotomy: chain cells against
+    A(s) and F(s), verdict select in one traced program."""
+    cs, cl = _device_gather(c_s, c_l, clo, ccnt, Wc)
+    yas, yal = _device_gather(ya_s, ya_l, yalo, yacnt, Wya)
+    yfs, yfl = _device_gather(yf_s, yf_l, yflo, yfcnt, Wyf)
+    aa = batch_overlap_jnp(cs, cl, ccnt, yas, yal, yacnt)
+    fhit = batch_overlap_jnp(cs, cl, ccnt, yfs, yfl, yfcnt)
+    return jnp.where(~aa, TRUE_NEG,
+                     jnp.where(fhit, TRUE_HIT, INDECISIVE)).astype(jnp.int8)
+
+
+def _fused_status_fn(kind: str):
+    if jax is None:  # pragma: no cover
+        raise RuntimeError("jax unavailable for the fused filter stage")
+    if kind not in _FUSED_STATUS_FNS:
+        fn, widths = {
+            "intersects": (_fused_tri_bucket_jnp,
+                           ("Wxa", "Wxf", "Wya", "Wyf")),
+            "within": (_fused_within_bucket_jnp, ("Wxa", "Wya", "Wyf")),
+            "linestring": (_fused_line_bucket_jnp, ("Wc", "Wya", "Wyf")),
+        }[kind]
+        _FUSED_STATUS_FNS[kind] = jax.jit(fn, static_argnames=widths)
+    return _FUSED_STATUS_FNS[kind]
+
+
+def _bucket_args(L: IntervalLists, idx, cnt, sel, Bp: int):
+    """Per-bucket device args for one list side: the resident flat endpoint
+    arrays plus padded [Bp] row offsets/counts (padding rows count 0)."""
+    lo = np.zeros(Bp, np.int64)
+    ct = np.zeros(Bp, np.int32)
+    lo[:len(sel)] = L.off[idx[sel]]
+    ct[:len(sel)] = cnt[sel]
+    fs, fl = L.device()
+    return fs, fl, jnp.asarray(lo), jnp.asarray(ct)
+
+
+def fused_status_rows(predicate: str, Xa: IntervalLists,
+                      Xf: "IntervalLists | None", Ya: IntervalLists,
+                      Yf: IntervalLists, ri: np.ndarray, si: np.ndarray):
+    """Device int8 status lane over ALL rows — the fused chain's filter
+    stage (DESIGN.md §12).
+
+    Unlike the staged drivers above, nothing returns to host: every live
+    row's full trichotomy evaluates branch-free per power-of-two width
+    bucket and scatters into the [N] device lane (rows with an empty A list
+    on either side stay TRUE_NEG, like the staged paths). ``predicate`` is
+    'intersects' (Xf required), 'within' (Xf unused) or 'linestring' (Xa is
+    the chain's unit-cell lists). Verdict-identical to the staged drivers.
+    """
+    ri = np.asarray(ri, np.int64)
+    si = np.asarray(si, np.int64)
+    N = len(ri)
+    lane = jnp.zeros(N, jnp.int8)               # TRUE_NEG
+    if N == 0:
+        return lane
+    ca_r = Xa.counts(ri)
+    ca_s = Ya.counts(si)
+    cf_s = Yf.counts(si)
+    live = (ca_r > 0) & (ca_s > 0)
+    if predicate == "intersects":
+        cf_r = Xf.counts(ri)
+        widths = np.maximum.reduce([ca_r, cf_r, ca_s, cf_s])
+    else:
+        widths = np.maximum.reduce([ca_r, ca_s, cf_s])
+    fn = _fused_status_fn(predicate)
+    for sel in size_buckets(np.where(live, np.maximum(widths, 1), 0),
+                            _BUCKET_CHUNK):
+        Bp = _pow2(len(sel))
+        args = _bucket_args(Xa, ri, ca_r, sel, Bp)
+        kw = {}
+        if predicate == "intersects":
+            args += _bucket_args(Xf, ri, cf_r, sel, Bp)
+            kw["Wxa"] = _pow2(ca_r[sel].max())
+            kw["Wxf"] = _pow2(max(1, cf_r[sel].max()))
+        else:
+            key = "Wc" if predicate == "linestring" else "Wxa"
+            kw[key] = _pow2(ca_r[sel].max())
+        args += _bucket_args(Ya, si, ca_s, sel, Bp)
+        args += _bucket_args(Yf, si, cf_s, sel, Bp)
+        kw["Wya"] = _pow2(ca_s[sel].max())
+        kw["Wyf"] = _pow2(max(1, cf_s[sel].max()))
+        st = fn(*args, **kw)
+        lane = lane.at[jnp.asarray(sel)].set(st[:len(sel)])
+    return lane
 
 
 def within_trichotomy_rows(

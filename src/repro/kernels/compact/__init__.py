@@ -1,0 +1,1 @@
+from .ops import compact_mask  # noqa: F401

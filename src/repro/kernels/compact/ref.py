@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the compaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_mask_ref(mask):
+    """Same contract as compact_mask: (perm [N] int32, count [] int32).
+
+    Stable argsort of the negated mask — True rows first, each side in
+    ascending index order — is the definitional front-pack permutation.
+    """
+    perm = jnp.argsort(~mask.astype(bool), stable=True).astype(jnp.int32)
+    return perm, jnp.sum(mask, dtype=jnp.int32)

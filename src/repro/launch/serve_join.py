@@ -9,7 +9,10 @@ traffic trace into it: a mix of ``selection`` / ``window`` /
 ``intersects`` / ``within`` queries whose polygons are drawn from a second
 synthetic layer over the same map, interleaved with ``insert`` / ``delete``
 mutations that exercise the incremental store patches. Reports sustained
-queries/sec, p50/p99 latency, and cache hit/eviction stats; ``--ckpt-dir``
+queries/sec, p50/p99 latency with the per-stage device-time breakdown
+(``t_mbr``/``t_filter``/``t_refine``/``t_sync``), and cache hit/eviction
+stats; ``--pipeline-mode fused`` routes every micro-batched group through
+the device-resident fused chain (DESIGN.md §12); ``--ckpt-dir``
 periodically persists the stores + mutation log through
 :class:`~repro.runtime.checkpoint.CheckpointManager` (and resumes from the
 latest step on restart).
@@ -51,6 +54,7 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
               n_requests: int = 100, method: str = "april",
               n_order: int = 8, filter_backend: str = "numpy",
               mbr_backend: str = "numpy", refine_backend: str = "numpy",
+              pipeline_mode: str = "staged",
               window_ms: float = 2.0, cache_mb: float = 256.0,
               mutate_every: int = 25, ckpt_dir: str | None = None,
               ckpt_every: int = 50, seed: int = 0,
@@ -69,14 +73,15 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
             mgr, window_s=window_ms / 1e3,
             cache_bytes=int(cache_mb * (1 << 20)),
             filter_backend=filter_backend, mbr_backend=mbr_backend,
-            refine_backend=refine_backend)
+            refine_backend=refine_backend, pipeline_mode=pipeline_mode)
     if svc is None:
         svc = JoinService(method=method, n_order=n_order,
                           window_s=window_ms / 1e3,
                           cache_bytes=int(cache_mb * (1 << 20)),
                           filter_backend=filter_backend,
                           mbr_backend=mbr_backend,
-                          refine_backend=refine_backend)
+                          refine_backend=refine_backend,
+                          pipeline_mode=pipeline_mode)
         svc.register_dataset(dataset, D)
 
     trace = make_trace(rng, Q, n_requests)
@@ -110,6 +115,7 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
 
     report = {
         "dataset": dataset, "method": method, "n_order": n_order,
+        "pipeline_mode": pipeline_mode,
         "n_requests": n_requests, "elapsed_s": elapsed,
         "queries_per_s": n_requests / max(elapsed, 1e-9),
         "latency": svc.latency_stats(),
@@ -137,6 +143,10 @@ def main():
                     help="candidate-generation execution path")
     ap.add_argument("--refine-backend", default="numpy",
                     help="refinement-stage execution path")
+    ap.add_argument("--pipeline-mode", default="staged",
+                    help="staged (default) or fused: run each micro-batched "
+                         "group as one device-resident dispatch chain "
+                         "(DESIGN.md §12)")
     ap.add_argument("--window-ms", type=float, default=2.0,
                     help="micro-batch accumulation window")
     ap.add_argument("--cache-mb", type=float, default=256.0,
@@ -152,7 +162,8 @@ def main():
         query_layer=args.query_layer, n_queries=args.n_queries,
         n_requests=args.queries, method=args.method, n_order=args.n_order,
         filter_backend=args.filter_backend, mbr_backend=args.mbr_backend,
-        refine_backend=args.refine_backend, window_ms=args.window_ms,
+        refine_backend=args.refine_backend,
+        pipeline_mode=args.pipeline_mode, window_ms=args.window_ms,
         cache_mb=args.cache_mb, mutate_every=args.mutate_every,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed)
     print(json.dumps(report, indent=2))

@@ -22,19 +22,21 @@ import numpy as np
 
 from ..core import partition as partition_mod
 from ..core.join import INDECISIVE, TRUE_HIT
-from ..datagen import make_dataset
+from ..datagen import PolygonDataset, make_dataset
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.elastic import WorkQueue
 from ..spatial import refine
-from ..spatial.distributed import (distributed_filter, distributed_mbr_join,
-                                   distributed_refine, make_join_mesh)
+from ..spatial.distributed import (distributed_filter, distributed_fused_join,
+                                   distributed_mbr_join, distributed_refine,
+                                   make_join_mesh)
 from ..spatial.filters import get_filter
+from ..spatial.fused import check_pipeline_mode
 from ..spatial.mbr_join import mbr_join
 
 
 def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
                    backend: str = "jnp", refine_backend: str = "numpy",
-                   mbr_backend: str = "numpy"):
+                   mbr_backend: str = "numpy", pipeline_mode: str = "staged"):
     """Filter + refine all candidate pairs owned by partition ``pidx``.
 
     ``mbr_backend='jnp'`` generates the partition's candidates sharded over
@@ -42,7 +44,13 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
     gathered); other values run the host grid-hash join.
     ``refine_backend='jnp'`` refines the indecisive remainder sharded over
     the mesh (verdicts stay sharded end-to-end, DESIGN.md §7); other
-    backends run the batched host refinement."""
+    backends run the batched host refinement.
+    ``pipeline_mode='fused'`` (APRIL only) runs the partition's whole
+    MBR -> filter -> refine chain as one sharded dispatch
+    (:func:`~repro.spatial.distributed.distributed_fused_join`) with the
+    cross-partition ownership dedup applied to the joined pairs — the
+    result set is identical to the staged chain; per-partition counts
+    then cover the partition's full candidate frame."""
     part = parting.partitions[pidx]
     ridx = part.obj_idx[R.name]
     sidx = part.obj_idx[S.name]
@@ -51,6 +59,27 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
         return np.zeros((0, 2), np.int64), {}
     if filt.name != "none" and (ar is None or as_ is None):
         return np.zeros((0, 2), np.int64), {}
+
+    if pipeline_mode == "fused":
+        if filt.name != "april":
+            raise ValueError("pipeline_mode='fused' in the distributed "
+                             "launcher needs --method april (the sharded "
+                             f"fused chain), got {filt.name!r}")
+        Rp = PolygonDataset(name=R.name, verts=R.verts[ridx],
+                            nverts=R.nverts[ridx])
+        Sp = PolygonDataset(name=S.name, verts=S.verts[sidx],
+                            nverts=S.nverts[sidx])
+        local_pairs, counts = distributed_fused_join(Rp, Sp, ar, as_,
+                                                     mesh=mesh)
+        if len(local_pairs) == 0:
+            return np.zeros((0, 2), np.int64), counts
+        own = partition_mod.reference_partitions(
+            parting.parts_per_dim, R.mbrs[ridx[local_pairs[:, 0]]],
+            S.mbrs[sidx[local_pairs[:, 1]]]) == pidx
+        local_pairs = local_pairs[own]
+        out = np.stack([ridx[local_pairs[:, 0]], sidx[local_pairs[:, 1]]],
+                       axis=1)
+        return out, counts
 
     if mbr_backend == "jnp":
         local_pairs, _ = distributed_mbr_join(R.mbrs[ridx], S.mbrs[sidx],
@@ -92,7 +121,8 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
              seed=0, count_r=None, count_s=None, mesh=None, method="april",
              backend="jnp", refine_backend="numpy", mbr_backend="numpy",
-             build_backend="numpy"):
+             build_backend="numpy", pipeline_mode="staged"):
+    check_pipeline_mode(pipeline_mode)
     filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
@@ -128,7 +158,8 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
         res, counts = join_partition(R, S, approx_r, approx_s, parting, p,
                                      mesh, filt, backend=backend,
                                      refine_backend=refine_backend,
-                                     mbr_backend=mbr_backend)
+                                     mbr_backend=mbr_backend,
+                                     pipeline_mode=pipeline_mode)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -172,6 +203,10 @@ def main():
     ap.add_argument("--build-backend", default="numpy",
                     help="store-build backend: numpy/jnp (threaded to every "
                          "per-partition filter build via build_opts)")
+    ap.add_argument("--pipeline-mode", default="staged",
+                    help="staged (host stage boundaries, default) or fused "
+                         "(whole partition chain as one sharded dispatch, "
+                         "DESIGN.md §12; APRIL only)")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
@@ -179,7 +214,8 @@ def main():
              backend=args.filter_backend or args.backend,
              refine_backend=args.refine_backend,
              mbr_backend=args.mbr_backend,
-             build_backend=args.build_backend)
+             build_backend=args.build_backend,
+             pipeline_mode=args.pipeline_mode)
 
 
 if __name__ == "__main__":

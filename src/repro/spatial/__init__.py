@@ -3,7 +3,7 @@ from .filters import (  # noqa: F401
     Approximation, FILTER_BACKENDS, IntermediateFilter, available_filters,
     get_filter, register_filter,
 )
-from .plan import JoinPlan, JoinStats  # noqa: F401
+from .plan import PIPELINE_MODES, JoinPlan, JoinStats  # noqa: F401
 from .refine import REFINE_BACKENDS  # noqa: F401
 from .pipeline import (  # noqa: F401
     spatial_intersection_join, spatial_within_join,

@@ -43,12 +43,13 @@ except AttributeError:                  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
 from ..core.join import INDECISIVE, TRUE_HIT, TRUE_NEG, pack_lists
+from .fused import to_host
 
 __all__ = [
     "PackedPairs", "pack_pair_batch", "bucket_pairs",
     "april_filter_kernel_jnp", "distributed_april_filter",
-    "distributed_filter", "distributed_mbr_join", "distributed_refine",
-    "make_join_mesh",
+    "distributed_filter", "distributed_fused_join", "distributed_mbr_join",
+    "distributed_refine", "make_join_mesh",
 ]
 
 I32_MAX = np.int32(np.iinfo(np.int32).max)
@@ -185,7 +186,8 @@ def distributed_april_filter(packed: PackedPairs, mesh: Mesh | None = None):
 
     verd, counts = jax.jit(step)(
         {k: jnp.asarray(a) for k, a in batch.items()}, jnp.asarray(valid))
-    return (np.asarray(verd),
+    verd, counts = to_host(verd, counts)
+    return (verd,
             {"true_neg": int(counts[0]), "true_hit": int(counts[1]),
              "indecisive": int(counts[2])})
 
@@ -281,9 +283,10 @@ def distributed_mbr_join(mbrs_r: np.ndarray, mbrs_s: np.ndarray,
     with enable_x64():
         keep, count = step(*[jnp.asarray(a) for a in (
             mbrs_r, mbrs_s, lo_r, lo_s, pri, psi, pox, poy, valid)])
-    keep = np.asarray(keep)[:n]
-    pairs = np.stack([ri[keep], si[keep]], axis=1)
-    return pairs, {"mbr_candidates": int(n), "mbr_pairs": int(count)}
+    keep_h, count_h = to_host(keep, count)
+    keep_h = keep_h[:n]
+    pairs = np.stack([ri[keep_h], si[keep_h]], axis=1)
+    return pairs, {"mbr_candidates": int(n), "mbr_pairs": int(count_h)}
 
 
 # ---------------------------------------------------------------------------
@@ -363,12 +366,116 @@ def distributed_refine(R, S, pairs: np.ndarray,
         with enable_x64():
             res, unc, count = step(*[jnp.asarray(a) for a in args],
                                    jnp.asarray(valid))
-        res = np.array(res)[: len(p)]             # writable copy
-        unc = np.asarray(unc)[: len(p)]
-        n_true += int(count)
-        if unc.any():      # guard-band pairs: exact host re-check
-            res[unc] = refine_mod.refine(R, S, p[unc], predicate=predicate,
-                                         backend="numpy")
-            n_true += int(res[unc].sum())
-        out[sel] = res
+        res_h, unc_h, count_h = to_host(res, unc, count)
+        res_h = res_h[: len(p)].copy()
+        unc_h = unc_h[: len(p)]
+        n_true += int(count_h)
+        if unc_h.any():    # guard-band pairs: exact host re-check
+            res_h[unc_h] = refine_mod.refine(R, S, p[unc_h],
+                                             predicate=predicate,
+                                             backend="numpy")
+            n_true += int(res_h[unc_h].sum())
+        out[sel] = res_h
     return out, {"refined_true": n_true}
+
+
+# ---------------------------------------------------------------------------
+# Fused sharded chain (DESIGN.md §12): MBR mask + APRIL trichotomy + exact
+# refinement of every shard row under ONE shard_map
+# ---------------------------------------------------------------------------
+
+_FUSED_STEP_CACHE: dict = {}
+
+
+def _fused_shard_step(mesh):
+    if mesh in _FUSED_STEP_CACHE:
+        return _FUSED_STEP_CACHE[mesh]
+    from . import refine as refine_mod
+    from .mbr_join import pair_mask_body
+
+    # replicated MBR/cell tables, then the sharded per-row operands
+    specs = ((P(),) * 4
+             + (P("data"),) * 5      # ri, si, own_x, own_y, valid
+             + (P("data"),)          # packed interval batch (pytree)
+             + (P("data"),) * 6)     # vr, nr, rep_r, vs, ns, rep_s
+
+    @partial(shard_map, mesh=mesh, in_specs=specs,
+             out_specs=(P("data"), P("data"), P("data"), P()))
+    def step(mr, ms, lor, los, ri, si, ox, oy, vrow, batch,
+             vr, nr, rpr, vs, ns, rps):
+        v = pair_mask_body(jnp, mr, ms, lor, los, ri, si, ox, oy) & vrow
+        verd = april_filter_kernel_jnp(batch)
+        verd = jnp.where(v, verd, jnp.int8(TRUE_NEG))
+        res, unc = refine_mod._intersects_impl_jnp(vr, nr, vs, ns, rpr, rps)
+        indec = v & (verd == INDECISIVE)
+        hit = (verd == TRUE_HIT) | (indec & res)
+        unc = unc & indec
+        counts = jax.lax.psum(jnp.stack([
+            jnp.sum(v), jnp.sum(v & (verd == TRUE_NEG)),
+            jnp.sum(verd == TRUE_HIT), jnp.sum(indec)]), "data")
+        return verd, hit, unc, counts
+
+    _FUSED_STEP_CACHE[mesh] = jax.jit(step)
+    return _FUSED_STEP_CACHE[mesh]
+
+
+def distributed_fused_join(R, S, approx_r, approx_s,
+                           grid: int | None = None, mesh: Mesh | None = None):
+    """The intersects join as ONE sharded dispatch (DESIGN.md §12).
+
+    The host runs the cheap grid-hash preprocessing; every candidate row
+    then flows through MBR mask -> APRIL trichotomy -> exact refinement
+    inside a single ``shard_map`` step, counts psum-reduce on device, and
+    the lanes come back in one :func:`~repro.spatial.fused.to_host` gather
+    (plus the sanctioned f64 escalation of guard-band pairs). Refinement is
+    branch-free — every shard row refines, masked by its verdict — so this
+    trades redundant FLOPs for zero intermediate syncs; the staged
+    ``distributed_*`` steps remain the large-batch references. Pair *set*
+    (order-insensitive) equals the staged chain. APRIL stores over polygon
+    sides only. Returns (pairs [K,2] int64, counts dict).
+    """
+    from .mbr_join import _pad_rows_pow2, _prepare, candidate_rows
+    from . import refine as refine_mod
+    from jax.experimental import enable_x64
+
+    empty = np.zeros((0, 2), np.int64)
+    zero = {"mbr_pairs": 0, "true_neg": 0, "true_hit": 0, "indecisive": 0}
+    mbrs_r, mbrs_s, k, extent = _prepare(R.mbrs, S.mbrs, grid)
+    if k == 0:
+        return empty, zero
+    ri, si, own_x, own_y, lo_r, lo_s = candidate_rows(mbrs_r, mbrs_s, k,
+                                                      extent)
+    if len(ri) == 0:
+        return empty, zero
+    mesh = mesh or make_join_mesh()
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    (mbrs_r, lo_r), _ = _pad_rows_pow2([mbrs_r, lo_r])
+    (mbrs_s, lo_s), _ = _pad_rows_pow2([mbrs_s, lo_s])
+    (pri, psi, pox, poy, vrow), n = _pad_rows_pow2(
+        [ri, si, own_x, own_y, np.ones(len(ri), bool)], multiple=n_dev)
+    frame = np.stack([pri, psi], axis=1)
+    packed = pack_pair_batch(approx_r.store, approx_s.store,
+                             frame, pad_batch_to=n_dev)
+    batch = {key: jnp.asarray(a) for key, a in packed.arrays().items()}
+    vr = np.asarray(R.verts, np.float64)[pri]
+    vs = np.asarray(S.verts, np.float64)[psi]
+    nr = np.asarray(R.nverts, np.int32)[pri]
+    ns = np.asarray(S.nverts, np.int32)[psi]
+    rpr = refine_mod._reps(R, pri)
+    rps = refine_mod._reps(S, psi)
+
+    step = _fused_shard_step(mesh)
+    with enable_x64():
+        verd, hit, unc, counts = step(
+            *[jnp.asarray(a) for a in (mbrs_r, mbrs_s, lo_r, lo_s,
+                                       pri, psi, pox, poy, vrow)],
+            batch, *[jnp.asarray(a) for a in (vr, nr, rpr, vs, ns, rps)])
+    verd, hit, unc, counts = to_host(verd, hit, unc, counts)
+    hit, unc = hit[:n].copy(), unc[:n]
+    if unc.any():          # sanctioned f64 escalation of guard-band rows
+        esc = frame[:n][unc]
+        hit[unc] = (verd[:n][unc] == TRUE_HIT) | refine_mod.refine(
+            R, S, esc, predicate="intersects", backend="numpy")
+    pairs = frame[:n][hit]
+    return pairs, {"mbr_pairs": int(counts[0]), "true_neg": int(counts[1]),
+                   "true_hit": int(counts[2]), "indecisive": int(counts[3])}

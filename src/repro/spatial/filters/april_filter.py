@@ -181,6 +181,39 @@ class AprilFilter(IntermediateFilter):
             self._lists(approx_s, "A"), self._lists(approx_s, "F"),
             ri, si, backend=backend, order=order)
 
+    def status_lane(self, approx_r, approx_s, ri, si, *,
+                    predicate: str = "intersects", backend: str = "numpy",
+                    order: tuple[str, ...] = _DEFAULT_ORDER, **opts):
+        """Device-computed status lane (DESIGN.md §12).
+
+        The interval-list slabs are device-resident, so the full trichotomy
+        evaluates on device via ``join.fused_status_rows`` — no host verdict
+        round trip. The sequential backend and degenerate intersects orders
+        (the reference leaves AA survivors INDECISIVE) keep the uploaded
+        host lane so fused == staged row for row.
+        """
+        self._check(predicate, backend)
+        if backend == "sequential" or (
+                predicate in ("intersects", "selection")
+                and set(order) != set(_DEFAULT_ORDER)):
+            return super().status_lane(approx_r, approx_s, ri, si,
+                                       predicate=predicate, backend=backend,
+                                       order=order, **opts)
+        if predicate == "linestring":
+            return join.fused_status_rows(
+                "linestring", self._lists(approx_r, "line"), None,
+                self._lists(approx_s, "A"), self._lists(approx_s, "F"),
+                ri, si)
+        if predicate == "within":
+            return join.fused_status_rows(
+                "within", self._lists(approx_r, "A"), None,
+                self._lists(approx_s, "A"), self._lists(approx_s, "F"),
+                ri, si)
+        return join.fused_status_rows(
+            "intersects", self._lists(approx_r, "A"),
+            self._lists(approx_r, "F"), self._lists(approx_s, "A"),
+            self._lists(approx_s, "F"), ri, si)
+
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
                      order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:
         sr, ss = approx_r.store, approx_s.store
@@ -342,6 +375,15 @@ class AprilCompressedFilter(AprilFilter):
             verdicts[sel[hit]] = join.TRUE_HIT
             sel = sel[~hit]
         return verdicts
+
+    def status_lane(self, approx_r, approx_s, ri, si, *,
+                    predicate: str = "intersects", backend: str = "numpy",
+                    order: tuple[str, ...] = _DEFAULT_ORDER, **opts):
+        # the bounded batch decode is survivor-driven host logic (np.unique
+        # over AA survivors), so the fused lane is the uploaded host verdicts
+        return IntermediateFilter.status_lane(
+            self, approx_r, approx_s, ri, si, predicate=predicate,
+            backend=backend, order=order, **opts)
 
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate,
                      order: tuple[str, ...] = _DEFAULT_ORDER, **opts) -> int:

@@ -128,6 +128,30 @@ class IntermediateFilter(abc.ABC):
                      predicate: str, **opts) -> int:
         raise NotImplementedError
 
+    def status_lane(self, approx_r: Approximation, approx_s: Approximation,
+                    ri: np.ndarray, si: np.ndarray, *,
+                    predicate: str = "intersects", backend: str = "numpy",
+                    **opts):
+        """Device int8 status lane [N] over the fused chain's pair frame
+        (DESIGN.md §12).
+
+        ``ri``/``si`` are the host-known candidate frame — grid-hash
+        preprocessing artifacts, so consuming them costs no device sync.
+        The default computes the batched host :meth:`verdicts` over the
+        frame and uploads the result; filters whose stores are
+        device-resident (APRIL, none) override with a lane computed on
+        device, keeping the chain free of intermediate host pulls. Verdicts
+        must be row-identical to :meth:`verdicts` for every backend.
+        """
+        import jax.numpy as jnp
+        ri = np.asarray(ri, np.int64)
+        si = np.asarray(si, np.int64)
+        if len(ri) == 0:
+            return jnp.zeros(0, jnp.int8)
+        verd = self.verdicts(approx_r, approx_s, np.stack([ri, si], axis=1),
+                             predicate=predicate, backend=backend, **opts)
+        return jnp.asarray(verd)
+
     # -- incremental maintenance (DESIGN.md §10) ----------------------------
     def patch_insert(self, approx: Approximation, dataset_one) -> None:
         """Append the approximation of ``dataset_one``'s single object to

@@ -4,6 +4,10 @@ Conservative-only: certifies TRUE negatives, never hits — for every
 predicate (disjoint approximations rule out intersection, containment, and
 line crossing alike). The batched path runs the separating-axis tests as
 padded einsum passes over the whole candidate batch.
+
+Fused pipeline (DESIGN.md §12): the hull stores are host ragged arrays, so
+5C+CH keeps the inherited host ``status_lane`` — one verdict upload per
+batch, then the chain stays device-resident.
 """
 from __future__ import annotations
 

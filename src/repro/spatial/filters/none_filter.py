@@ -32,6 +32,14 @@ class NoneFilter(IntermediateFilter):
     def _verdict_one(self, approx_r, approx_s, i, j, *, predicate, **opts):
         return INDECISIVE
 
+    def status_lane(self, approx_r, approx_s, ri, si, *,
+                    predicate: str = "intersects", backend: str = "numpy",
+                    **opts):
+        # constant lane, minted directly on device — no host round trip
+        self._check(predicate, backend)
+        import jax.numpy as jnp
+        return jnp.full(len(np.asarray(ri)), INDECISIVE, jnp.int8)
+
     # nothing is stored, so maintenance is a no-op (ids are tracked by the
     # dataset handle, not the store)
     def patch_insert(self, approx, dataset_one) -> None:

@@ -4,6 +4,10 @@ The batched path memoizes per-object upscale pyramids in the Approximation's
 ``meta`` (they survive across calls and predicates) and evaluates the
 overlay + Table-1 lookup of every candidate pair as one padded vectorized
 gather (``baselines.ra.ra_filter_batch``).
+
+Fused pipeline (DESIGN.md §12): the pyramid overlay is a host-memoized
+gather, so RA keeps the inherited host ``status_lane`` — one verdict upload
+per batch, then the chain stays device-resident.
 """
 from __future__ import annotations
 

@@ -4,6 +4,10 @@ Verdict batches run the vectorized fragment sweep in ``core.ri``: candidate
 pairs expand to overlapping-interval fragments, whose 3-bit code runs are
 ANDed either on host (numpy bit pass) or as packed uint32 words through the
 Pallas ``kernels/ri_and`` ALIGNEDAND kernel (backend 'jnp'/'pallas').
+
+Fused pipeline (DESIGN.md §12): the fragment expansion is survivor-driven
+host logic, so RI keeps the inherited host ``status_lane`` — its verdicts
+upload once per batch and the chain stays device-resident from there.
 """
 from __future__ import annotations
 

@@ -47,7 +47,7 @@ import numpy as np
 __all__ = [
     "MBR_BACKENDS", "mbr_join", "mbr_intersect_mask", "adaptive_grid",
     "joint_extent", "bucket_ranges", "expand_buckets", "candidate_rows",
-    "pair_mask_body", "MBRIndex",
+    "pair_mask_body", "pair_mask_lane_jnp", "MBRIndex",
 ]
 
 MBR_BACKENDS = ("numpy", "jnp", "sequential")
@@ -289,11 +289,17 @@ def _pair_mask_np(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y):
 _JNP_MASK = None
 
 
-def _pair_mask_jnp(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y):
-    """The same mask pass jit-compiled on device (f64 under ``enable_x64``
-    — without it JAX would silently round coordinates to f32 and merge
+def pair_mask_lane_jnp(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y):
+    """Device-resident pair mask: (lane [Npad] device bool, n).
+
+    The same mask pass jit-compiled on device (f64 under ``enable_x64`` —
+    without it JAX would silently round coordinates to f32 and merge
     nearby MBR borders), rows padded to powers of two so recompilation
-    stays logarithmic in the row count."""
+    stays logarithmic in the row count. The lane never visits the host —
+    the fused chain (DESIGN.md §12) consumes it directly as the
+    CandidateSet ``valid`` lane; padding rows are already False via the
+    jit's ``valid`` operand. ``lane[:n]`` are the real rows.
+    """
     global _JNP_MASK
     import jax
     import jax.numpy as jnp
@@ -315,7 +321,16 @@ def _pair_mask_jnp(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y):
     with enable_x64():
         out = _JNP_MASK(mbrs_r, mbrs_s, lo_r, lo_s, ri, si,
                         own_x, own_y, valid)
-    return np.asarray(out)[:n]
+    return out, n
+
+
+def _pair_mask_jnp(mbrs_r, mbrs_s, lo_r, lo_s, ri, si, own_x, own_y):
+    """Staged-mode wrapper: compute the device lane, then materialize it
+    through the chain's sanctioned sync point (``fused.to_host``)."""
+    from .fused import to_host
+    out, n = pair_mask_lane_jnp(mbrs_r, mbrs_s, lo_r, lo_s, ri, si,
+                                own_x, own_y)
+    return to_host(out)[:n]
 
 
 # ---------------------------------------------------------------------------

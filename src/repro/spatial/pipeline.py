@@ -25,7 +25,9 @@ are dataset-batched behind backend knobs forwarded to ``JoinPlan`` —
 ``mbr_backend`` (candidate generation, DESIGN.md §8), ``filter_backend``
 (the bucketed filter joins, §9; ``use_jnp`` is its legacy spelling),
 ``build_backend`` via build options (§6), and ``refine_backend`` (§7);
-see the README "Pipeline stages & backends" table.
+see the README "Pipeline stages & backends" table. ``pipeline_mode``
+(DESIGN.md §12) selects staged (host stage boundaries, default) or fused
+(device-resident chain, one end-of-chain sync) execution.
 """
 from __future__ import annotations
 
@@ -41,7 +43,8 @@ __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
 
 def _plan(R, S, method, n_order, *, filter_backend="numpy",
           refine_backend="numpy", mbr_backend="numpy", mbr_grid=None,
-          max_ra_cells=None, order=None, r_kind="polygon"):
+          max_ra_cells=None, order=None, r_kind="polygon",
+          pipeline_mode="staged"):
     build_opts = {}
     filter_opts = {}
     if method == "ra" and max_ra_cells is not None:
@@ -51,6 +54,7 @@ def _plan(R, S, method, n_order, *, filter_backend="numpy",
     return JoinPlan(R, S, filter=method, filter_backend=filter_backend,
                     refine_backend=refine_backend, mbr_backend=mbr_backend,
                     n_order=n_order, mbr_grid=mbr_grid, r_kind=r_kind,
+                    pipeline_mode=pipeline_mode,
                     build_opts=build_opts, filter_opts=filter_opts)
 
 
@@ -69,7 +73,7 @@ def spatial_intersection_join(
     use_jnp: bool = False, max_ra_cells: int = 750,
     prebuilt: tuple | None = None, mbr_grid: int | None = None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
-    filter_backend: str | None = None,
+    filter_backend: str | None = None, pipeline_mode: str = "staged",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: run the full pipeline; returns (pairs [K,2], stats).
 
@@ -80,7 +84,8 @@ def spatial_intersection_join(
                  filter_backend=filter_backend
                  or ("jnp" if use_jnp else "numpy"),
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
-                 mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order)
+                 mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order,
+                 pipeline_mode=pipeline_mode)
     if prebuilt is not None:
         pr, ps = prebuilt
         plan.build(prebuilt=(_adopt(method, pr), _adopt(method, ps)))
@@ -91,10 +96,12 @@ def spatial_within_join(
     R, S, method: str = "april", n_order: int = 10,
     prebuilt: tuple | None = None, refine_backend: str = "numpy",
     mbr_backend: str = "numpy", filter_backend: str = "numpy",
+    pipeline_mode: str = "staged",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: within join (§4.3.2), pairs (r, s) with r within s."""
     plan = _plan(R, S, method, n_order, filter_backend=filter_backend,
-                 refine_backend=refine_backend, mbr_backend=mbr_backend)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend,
+                 pipeline_mode=pipeline_mode)
     if prebuilt is not None:
         plan.build(prebuilt=tuple(_adopt(method, p) for p in prebuilt))
     return plan.execute("within")
@@ -104,12 +111,14 @@ def polygon_linestring_join(
     S, L, method: str = "april", n_order: int = 10,
     prebuilt=None, refine_backend: str = "numpy",
     mbr_backend: str = "numpy", filter_backend: str = "numpy",
+    pipeline_mode: str = "staged",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: polygon x linestring join (§4.3.3), pairs are
     (line, poly). ``prebuilt`` is the polygon-side store."""
     plan = _plan(L, S, method, n_order, r_kind="line",
                  filter_backend=filter_backend,
-                 refine_backend=refine_backend, mbr_backend=mbr_backend)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend,
+                 pipeline_mode=pipeline_mode)
     if prebuilt is not None:
         plan.build(prebuilt=(None, _adopt(method, prebuilt)))
     return plan.execute("linestring")
@@ -118,14 +127,15 @@ def polygon_linestring_join(
 def selection_queries(
     data, queries, method: str = "april", n_order: int = 10, prebuilt=None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
-    filter_backend: str = "numpy",
+    filter_backend: str = "numpy", pipeline_mode: str = "staged",
 ) -> tuple[list[np.ndarray], JoinStats]:
     """Deprecated shim: polygonal range queries (§4.3.1). Returns, per query
     polygon, the data polygons intersecting it. ``prebuilt`` is the
     data-side store."""
     plan = _plan(data, queries, method, n_order,
                  filter_backend=filter_backend,
-                 refine_backend=refine_backend, mbr_backend=mbr_backend)
+                 refine_backend=refine_backend, mbr_backend=mbr_backend,
+                 pipeline_mode=pipeline_mode)
     if prebuilt is not None:
         plan.build(prebuilt=(_adopt(method, prebuilt), None))
     pairs, stats = plan.execute("selection")

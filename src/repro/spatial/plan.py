@@ -30,10 +30,11 @@ from ..core.join import (INDECISIVE, TRUE_HIT, TRUE_NEG,
 from ..core.rasterize import Extent, GLOBAL_EXTENT
 from . import refine
 from .filters import Approximation, IntermediateFilter, get_filter
+from .fused import PIPELINE_MODES, check_pipeline_mode, execute_fused
 from .mbr_join import _check_backend as _check_mbr_backend
 from .mbr_join import mbr_join
 
-__all__ = ["JoinStats", "JoinPlan"]
+__all__ = ["JoinStats", "JoinPlan", "PIPELINE_MODES"]
 
 
 @dataclass
@@ -49,16 +50,28 @@ class JoinStats:
     n_true_negs: int = 0
     n_indecisive: int = 0
     n_results: int = 0
+    pipeline_mode: str = "staged"
     t_mbr: float = 0.0
     t_filter: float = 0.0
     t_refine: float = 0.0
+    #: fused mode only: the end-of-chain gather + f64 escalation (staged
+    #: stage times include their own syncs, so this stays 0.0 there)
+    t_sync: float = 0.0
     t_build: float = 0.0
     approx_bytes: int = 0
     extra: dict = field(default_factory=dict)
 
     @property
     def t_total(self) -> float:
-        return self.t_mbr + self.t_filter + self.t_refine
+        return self.t_mbr + self.t_filter + self.t_refine + self.t_sync
+
+    def stage_times(self) -> dict:
+        """Per-stage device-time breakdown (the serving latency report):
+        JSON-safe, round-trips through to_dict/from_dict."""
+        return {"t_mbr": float(self.t_mbr), "t_filter": float(self.t_filter),
+                "t_refine": float(self.t_refine),
+                "t_sync": float(self.t_sync),
+                "t_total": float(self.t_total)}
 
     def rates(self) -> tuple[float, float, float]:
         n = max(1, self.n_candidates)
@@ -67,11 +80,13 @@ class JoinStats:
 
     def row(self) -> str:
         h, g, i = self.rates()
+        sync = (f"sync={self.t_sync:.3f}s "
+                if self.pipeline_mode == "fused" else "")
         return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
                 f"mbr={self.t_mbr:.3f}s[{self.mbr_backend}] "
                 f"filter={self.t_filter:.3f}s[{self.filter_backend}] "
                 f"refine={self.t_refine:.3f}s[{self.refine_backend}] "
-                f"total={self.t_total:.3f}s results={self.n_results}")
+                f"{sync}total={self.t_total:.3f}s results={self.n_results}")
 
     def to_dict(self) -> dict:
         """JSON-safe dict of every field (the service response envelope);
@@ -120,6 +135,10 @@ class JoinPlan:
     ``filter.build`` (e.g. ``build_backend``, ``max_cells`` for RA,
     ``method`` for APRIL construction); ``filter_opts`` go to every
     ``filter.verdicts`` call (e.g. ``order`` for APRIL).
+    ``pipeline_mode`` selects where stage boundaries live (DESIGN.md §12):
+    ``staged`` (default) materializes each stage's survivors on host;
+    ``fused`` chains the stages device-resident with one end-of-chain sync
+    — result pairs and their order are identical either way.
     """
 
     def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
@@ -129,6 +148,7 @@ class JoinPlan:
                  extent: Extent = GLOBAL_EXTENT, r_kind: str = "polygon",
                  s_kind: str = "polygon", mbr_grid: int | None = None,
                  mbr_index: "MBRIndex | None" = None,
+                 pipeline_mode: str = "staged",
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
         if (filter_backend is not None and backend is not None
@@ -145,6 +165,7 @@ class JoinPlan:
         check_filter_backend(filter_backend)
         refine._check_backend(refine_backend)
         _check_mbr_backend(mbr_backend)
+        check_pipeline_mode(pipeline_mode)
         self.R = R
         self.S = S
         self.filter = get_filter(filter)
@@ -158,6 +179,7 @@ class JoinPlan:
         self.s_kind = s_kind
         self.mbr_grid = mbr_grid
         self.mbr_index = mbr_index
+        self.pipeline_mode = pipeline_mode
         self.build_opts = dict(build_opts or {})
         self.filter_opts = dict(filter_opts or {})
         self.approx_r: Approximation | None = None
@@ -259,10 +281,16 @@ class JoinPlan:
                           backend=self.filter_backend,
                           filter_backend=self.filter_backend,
                           refine_backend=self.refine_backend,
-                          mbr_backend=self.mbr_backend)
+                          mbr_backend=self.mbr_backend,
+                          pipeline_mode=self.pipeline_mode)
         stats.t_build = self._t_build
         stats.approx_bytes = (self.approx_r.size_bytes()
                               + self.approx_s.size_bytes())
+
+        if self.pipeline_mode == "fused":
+            results, stats = execute_fused(self, predicate, stats)
+            self.last_stats = stats
+            return results, stats
 
         t0 = time.perf_counter()
         pairs = self.candidates(predicate)

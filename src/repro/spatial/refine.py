@@ -674,3 +674,135 @@ def refine(R, S, pairs: np.ndarray, predicate: str = "intersects",
                          "('intersects', 'within', 'linestring', "
                          "'selection')")
     return refine_pairs(R, S, pairs, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Fused-chain device refinement (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def device_geometry(D, kind: str = "polygon") -> dict:
+    """f64 device copies of a dataset's padded vertex tensors, plus (for
+    polygons) representative interior points for every object.
+
+    Uploaded once per dataset and cached on the handle (the
+    ``_interval_lists_cache`` idiom of ``core.join``), so fused chains and
+    warm service groups gather by index instead of re-packing host slabs
+    per query. The cache keys on the identity of the ``verts`` array —
+    incremental dataset patches swap the array and naturally invalidate.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    key = (id(D.verts), kind)
+    cached = getattr(D, "_device_geom", None)
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    with enable_x64():
+        geom = {
+            "verts": jnp.asarray(np.asarray(D.verts, np.float64)),
+            "nverts": jnp.asarray(np.asarray(D.nverts, np.int32)),
+        }
+        if kind != "line":
+            reps = geometry.representative_points(D.verts, D.nverts)
+            geom["reps"] = jnp.asarray(np.asarray(reps, np.float64))
+    try:
+        D._device_geom = (key, geom)
+    except AttributeError:      # slotted handle: still correct, just colder
+        pass
+    return geom
+
+
+_FUSED_REFINE_FNS: dict = {}
+#: unroll bound for the chunked packed-prefix loop (compile-time lever)
+_MAX_REFINE_CHUNKS = 32
+
+
+def _fused_refine_fn(kind: str, C: int):
+    """jit'd chunked refinement of a front-packed pair prefix.
+
+    The packed frame is walked in static chunks of ``C``; a chunk whose
+    start lies past the device survivor count is skipped with
+    ``jax.lax.cond`` — XLA executes only the taken branch, so the work
+    scales with the (data-dependent) survivor count without the count ever
+    visiting the host.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if (kind, C) in _FUSED_REFINE_FNS:
+        return _FUSED_REFINE_FNS[(kind, C)]
+
+    def run(vr_all, nr_all, rep_r, vs_all, ns_all, rep_s, ri, si,
+            perm, count):
+        Np = perm.shape[0]
+        res = jnp.zeros(Np, bool)
+        unc = jnp.zeros(Np, bool)
+        for c0 in range(0, Np, C):
+            idx = perm[c0:c0 + C]
+            take = (c0 + jnp.arange(C)) < count
+
+            def live(_):
+                rr = ri[idx]
+                ss = si[idx]
+                vr, nr = vr_all[rr], nr_all[rr]
+                vs, ns = vs_all[ss], ns_all[ss]
+                if kind == "intersects":
+                    v, u = _intersects_impl_jnp(vr, nr, vs, ns,
+                                                rep_r[rr], rep_s[ss])
+                elif kind == "within":
+                    v, u = _within_impl_jnp(vr, nr, vs, ns)
+                else:
+                    v, u = _line_impl_jnp(vr, nr, vs, ns)
+                return v & take, u & take
+
+            def dead(_):
+                return jnp.zeros(C, bool), jnp.zeros(C, bool)
+
+            v, u = jax.lax.cond(c0 < count, live, dead, 0)
+            res = res.at[c0:c0 + C].set(v)
+            unc = unc.at[c0:c0 + C].set(u)
+        return res, unc
+
+    _FUSED_REFINE_FNS[(kind, C)] = jax.jit(run)
+    return _FUSED_REFINE_FNS[(kind, C)]
+
+
+def fused_refine_lanes(R, S, ri_dev, si_dev, perm, count,
+                       predicate: str = "intersects"):
+    """Device (res, unc) lanes over a front-packed indecisive prefix.
+
+    ``perm``/``count`` come from ``kernels.compact.compact_mask`` over the
+    INDECISIVE status lane; ``ri_dev``/``si_dev`` are the device pair frame.
+    Returns [Np] bool lanes in the *packed* frame (``Np`` = ``len(perm)``
+    padded up to the chunk size, padding entries False); scatter back
+    through ``perm``. ``unc`` marks FMA-borderline pairs for the single
+    end-of-chain host escalation — identical to the staged jnp backend's
+    per-bucket escalation set.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    kind = {"intersects": "intersects", "selection": "intersects",
+            "within": "within", "linestring": "line"}[predicate]
+    geom_r = device_geometry(R, kind="line" if kind == "line" else "polygon")
+    geom_s = device_geometry(S)
+    N = perm.shape[0]
+    if N == 0:
+        return jnp.zeros(0, bool), jnp.zeros(0, bool), perm
+    # chunk size: bounded [C, Er, Es] tile, bounded unroll
+    Va = int(np.asarray(R.nverts).max(initial=1))
+    Vb = int(np.asarray(S.nverts).max(initial=1))
+    by_mem = max(8, _CHUNK_ELEMS // max(1, Va * Vb))
+    by_unroll = -(-N // _MAX_REFINE_CHUNKS)
+    C = 1 << int(np.ceil(np.log2(max(by_mem, by_unroll, 1))))
+    Np = -(-N // C) * C
+    # pad the permutation with out-of-frame indices: the scatter back into
+    # candidate-frame lanes drops them (mode='drop')
+    perm_p = jnp.concatenate(
+        [perm, jnp.full(Np - N, N, jnp.int32)]) if Np != N else perm
+    with enable_x64():
+        fn = _fused_refine_fn(kind, C)
+        res, unc = fn(geom_r["verts"], geom_r["nverts"],
+                      geom_r.get("reps"), geom_s["verts"],
+                      geom_s["nverts"], geom_s.get("reps"),
+                      ri_dev, si_dev, perm_p, count)
+    return res, unc, perm_p

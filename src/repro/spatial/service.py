@@ -167,7 +167,10 @@ class JoinService:
     def __init__(self, *, cache_bytes: int = DEFAULT_BUDGET,
                  window_s: float = 0.002, method: str = "april",
                  n_order: int = 10, filter_backend: str = "numpy",
-                 refine_backend: str = "numpy", mbr_backend: str = "numpy"):
+                 refine_backend: str = "numpy", mbr_backend: str = "numpy",
+                 pipeline_mode: str = "staged"):
+        from .fused import check_pipeline_mode
+        check_pipeline_mode(pipeline_mode)
         self.cache = StoreCache(cache_bytes)
         self.window_s = float(window_s)
         self.method = method
@@ -175,6 +178,7 @@ class JoinService:
         self.filter_backend = filter_backend
         self.refine_backend = refine_backend
         self.mbr_backend = mbr_backend
+        self.pipeline_mode = pipeline_mode
         self.datasets: dict[str, _DatasetHandle] = {}
         self._pending: list[_Request] = []
         # guards the request queue, stats, latencies and worker lifecycle
@@ -190,6 +194,9 @@ class JoinService:
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
         self._latencies: list[float] = []
+        # cumulative per-stage device-time breakdown across executed groups
+        # (JoinStats.stage_times of every batch, summed)
+        self._stage_times: dict[str, float] = {}
         self.stats = {"requests": 0, "batches": 0, "batched_requests": 0,
                       "inserts": 0, "deletes": 0}
 
@@ -340,11 +347,15 @@ class JoinService:
                             filter_backend=self.filter_backend,
                             refine_backend=self.refine_backend,
                             mbr_backend=self.mbr_backend,
-                            mbr_index=handle.index)
+                            mbr_index=handle.index,
+                            pipeline_mode=self.pipeline_mode)
             plan.build(prebuilt=(approx, None))
             pairs, stats = plan.execute(predicate)
             stats.extra["batched_requests"] = len(reqs)
             stats.extra["cache"] = dict(self.cache.stats)
+        with self._lock:
+            for key, dt in stats.stage_times().items():
+                self._stage_times[key] = self._stage_times.get(key, 0.0) + dt
         envelope = stats.to_dict()
         # scatter: each request owns a contiguous run of query indices
         offs = np.cumsum([0] + [len(r.nverts) for r in reqs])
@@ -395,15 +406,21 @@ class JoinService:
     # -- accounting ---------------------------------------------------------
 
     def latency_stats(self) -> dict:
-        """p50/p99 submit-to-resolution latency over resolved requests."""
+        """p50/p99 submit-to-resolution latency over resolved requests,
+        plus the cumulative per-stage device-time breakdown
+        (``t_mbr``/``t_filter``/``t_refine``/``t_sync``) of the executed
+        batches."""
         with self._lock:
             lat = np.asarray(self._latencies, np.float64)
+            stages = dict(self._stage_times)
         if len(lat) == 0:
-            return {"n": 0, "p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+            return {"n": 0, "p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0,
+                    "stage_times": stages}
         return {"n": int(len(lat)),
                 "p50_s": float(np.percentile(lat, 50)),
                 "p99_s": float(np.percentile(lat, 99)),
-                "mean_s": float(lat.mean())}
+                "mean_s": float(lat.mean()),
+                "stage_times": stages}
 
     # -- checkpointing ------------------------------------------------------
 

@@ -34,8 +34,9 @@ from .core import AnalysisPass, Finding, SourceFile
 
 _DOCS = ("README.md", "DESIGN.md")
 #: build_backend travels through build_opts to every filter build, not as a
-#: named JoinPlan kwarg
-_EXTRA_KNOBS = ("build_backend",)
+#: named JoinPlan kwarg; pipeline_mode is the staged/fused execution-mode
+#: knob (DESIGN.md §12) — not a ``*backend`` name, same parity contract
+_EXTRA_KNOBS = ("build_backend", "pipeline_mode")
 _LAUNCHERS = ("src/repro/launch/spatial_join.py",
               "src/repro/launch/serve_join.py")
 _PIPELINE = "src/repro/spatial/pipeline.py"
@@ -47,7 +48,8 @@ def _launcher_flag_knobs(root: Path) -> dict[str, list[str]]:
     for rel in _LAUNCHERS:
         text = (root / rel).read_text()
         for flag in re.findall(
-                r'add_argument\(\s*"(--[a-z][a-z-]*backend)"', text):
+                r'add_argument\(\s*"(--[a-z][a-z-]*(?:backend|mode))"',
+                text):
             knob = flag.lstrip("-").replace("-", "_")
             knobs.setdefault(knob, []).append(rel)
     return knobs
