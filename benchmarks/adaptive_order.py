@@ -1,66 +1,181 @@
-"""Beyond-paper: per-pair adaptive join order (the paper's §9 future work).
+"""BENCH_planner: the adaptive query planner vs the static config sweep.
 
-Compares fixed AA-AF-FA against the MBR-statistics heuristic on a
-hit-heavy workload (T1 x T3, 70% true hits in the paper) and a
-negative-heavy one (T1 x T2). Metric: total interval comparisons executed
-by the sequential filter (machine-independent work counter)."""
+The ISSUE-9 acceptance gate (DESIGN.md §13): ``choose_plan`` samples a
+slice of the MBR candidates and picks filter method / ``n_order`` /
+AA-AF-FA order / pipeline mode; its pick must land within ``MARGIN`` of
+the best static configuration — and far above the worst — on both the
+negative-heavy (T1 x T2) and hit-heavy (T1 x T3) workloads, with the
+executed adaptive plan's result pairs identical to the refine-everything
+reference. The metric is the planner's own machine-independent work unit
+(interval comparisons + build/refine/decode work,
+:func:`repro.spatial.planner.measured_work` on the FULL candidate set),
+so the gate is immune to CI wall-clock noise; the adaptive total includes
+the sampling/probe work the planner itself spent (``plan_work``).
+
+This suite also carries the paper's Table-7 join-order sweep (§7.2.2,
+formerly ``benchmarks/join_order.py``): per-order wall-clock filter time
+over one reused :class:`~repro.spatial.plan.JoinPlan` — the static sweep
+the planner's order choice is judged against.
+
+``--smoke`` is the CI quick-lane check: seeded planning is deterministic,
+the chosen estimate is never worse than the best static estimate, the
+executed adaptive plan matches the refine-everything reference on
+intersects/within, and tiny candidate sets take the skip-filter fast
+path.
+"""
 from __future__ import annotations
 
-from repro.core.april import build_april
-from repro.core.join import adaptive_order, interval_join_pair
+import json
+
+import numpy as np
+
+from repro.spatial import JoinPlan
 from repro.spatial.mbr_join import mbr_join
+from repro.spatial.planner import (PLAN_DEFAULTS, choose_plan,
+                                   measured_work, static_configs)
 
-from .common import ds, row
+from .common import bench_main, ds, row
 
-
-def _count_join(X, Y) -> int:
-    """Interval comparisons a two-pointer merge join performs."""
-    i = j = n = 0
-    while i < len(X) and j < len(Y):
-        n += 1
-        if X[i][0] < Y[j][1] and Y[j][0] < X[i][1]:
-            return n
-        if X[i][1] <= Y[j][1]:
-            i += 1
-        else:
-            j += 1
-    return n
+N_ORDER = 9
+#: negative-heavy (many small objects, AA kills most pairs) and hit-heavy
+#: (few large complex objects, ~70% true hits in the paper's Table 7)
+WORKLOADS = (("T1", "T2"), ("T1", "T3"))
+MARGIN = 1.1
 
 
-def _filter_work(ar, as_, R, S, pairs, order_fn) -> int:
-    total = 0
-    for i, j in pairs:
-        order = order_fn(i, j)
-        lists = {"AA": (ar.a_list(i), as_.a_list(j)),
-                 "AF": (ar.a_list(i), as_.f_list(j)),
-                 "FA": (ar.f_list(i), as_.a_list(j))}
-        for step in order:
-            X, Y = lists[step]
-            total += _count_join(X, Y)
-            hit = interval_join_pair(X, Y)
-            if step == "AA" and not hit:
-                break
-            if step != "AA" and hit:
-                break
-    return total
+def _pair_set(pairs) -> set:
+    return set(map(tuple, np.asarray(pairs).tolist()))
 
 
-def run():
-    out = []
-    for pair in (("T1", "T2"), ("T1", "T3")):
-        R, S = ds(pair[0]), ds(pair[1])
-        ar, as_ = build_april(R, 9), build_april(S, 9)
+def _sweep_orders() -> list[int]:
+    return sorted({max(4, N_ORDER - 2), N_ORDER, min(14, N_ORDER + 2)})
+
+
+def bench_planner() -> dict:
+    out: dict = {"n_order_requested": N_ORDER, "margin": MARGIN,
+                 "work_unit": "interval comparisons (planner cost model)"}
+    for rn, sn in WORKLOADS:
+        R, S = ds(rn), ds(sn)
         pairs = mbr_join(R.mbrs, S.mbrs)
-        fixed = _filter_work(ar, as_, R, S, pairs,
-                             lambda i, j: ("AA", "AF", "FA"))
-        adapt = _filter_work(
-            ar, as_, R, S, pairs,
-            lambda i, j: adaptive_order(
-                R.mbrs[i], S.mbrs[j],
-                int(ar.f_off[i + 1] - ar.f_off[i]),
-                int(as_.f_off[j + 1] - as_.f_off[j])))
-        out.append(row(
-            f"adaptive_order_{pair[0]}x{pair[1]}", 0.0,
-            f"fixed_cmps={fixed};adaptive_cmps={adapt};"
-            f"saving={1 - adapt / max(1, fixed):.3f}"))
+        choice = choose_plan(R, S, pairs, predicate="intersects",
+                             n_order=N_ORDER)
+
+        bank: dict = {}
+        sweep = {
+            cfg.key(): measured_work(R, S, pairs, cfg, store_bank=bank)
+            for cfg in static_configs("intersects",
+                                      PLAN_DEFAULTS["methods"],
+                                      _sweep_orders(),
+                                      PLAN_DEFAULTS["orders"], N_ORDER)
+        }
+        totals = {k: v["total"] for k, v in sweep.items()}
+        best = min(totals, key=lambda k: (totals[k], k))
+        worst = max(totals, key=lambda k: (totals[k], k))
+        w_adapt = (measured_work(R, S, pairs, choice, store_bank=bank)
+                   ["total"] + choice.est["plan_work"])
+        ratio = w_adapt / totals[best]
+        assert ratio <= MARGIN, (
+            f"{rn}x{sn}: adaptive plan {choice.key()} costs {w_adapt:.0f} "
+            f"work units vs best static {best} at {totals[best]:.0f} "
+            f"({ratio:.3f}x > {MARGIN}x margin)")
+
+        plan = JoinPlan(R, S, filter="april", n_order=N_ORDER,
+                        plan_mode="adaptive")
+        res, _ = plan.execute("intersects")
+        ref, _ = JoinPlan(R, S, filter="none").execute("intersects")
+        identical = _pair_set(res) == _pair_set(ref)
+        assert identical, f"{rn}x{sn}: adaptive verdicts diverged"
+
+        out[f"{rn}x{sn}"] = {
+            "n_candidates": int(len(pairs)),
+            "plan": choice.key(),
+            "plan_pipeline_mode": choice.pipeline_mode,
+            "work_adaptive": round(w_adapt, 1),
+            "plan_work": round(choice.est["plan_work"], 1),
+            "best_static": best,
+            "work_best_static": round(totals[best], 1),
+            "worst_static": worst,
+            "work_worst_static": round(totals[worst], 1),
+            "ratio_adaptive_vs_best_static": round(ratio, 4),
+            "speedup_adaptive_over_worst_static":
+                round(totals[worst] / w_adapt, 2),
+            "n_results": int(len(res)),
+            "verdicts_equal": bool(identical),
+        }
     return out
+
+
+def _table7_rows() -> list[str]:
+    """Table 7 (§7.2.2): wall-clock filter time per AA/AF/FA order, one
+    reused JoinPlan per dataset pair (the build/execute split)."""
+    out = []
+    for rn, sn in WORKLOADS:
+        R, S = ds(rn), ds(sn)
+        plan = JoinPlan(R, S, filter="april", n_order=N_ORDER)
+        plan.build()
+        for order in PLAN_DEFAULTS["orders"]:
+            plan.filter_opts["order"] = order
+            _, st = plan.execute("intersects")
+            h, g, i = st.rates()
+            out.append(row(
+                f"table7_{rn}x{sn}_{'-'.join(order)}", st.t_filter * 1e6,
+                f"hits={h:.3f};negs={g:.3f};indec={i:.3f}"))
+    return out
+
+
+def run() -> list[str]:
+    res = bench_planner()
+    with open("BENCH_planner.json", "w") as f:
+        json.dump(res, f, indent=2)
+    rows = []
+    for key, v in res.items():
+        if isinstance(v, dict):
+            rows.append(row(
+                f"planner_{key}", 0.0,
+                f"plan={v['plan']};best={v['best_static']};"
+                f"ratio_vs_best={v['ratio_adaptive_vs_best_static']};"
+                f"speedup_vs_worst={v['speedup_adaptive_over_worst_static']}"
+            ))
+    return rows + _table7_rows()
+
+
+def smoke() -> None:
+    """CI quick lane: determinism, never-worse-than-best-static estimate,
+    verdict identity of the executed adaptive plan, skip-filter fast
+    path."""
+    from repro.datagen import make_dataset
+
+    R = make_dataset("T1", seed=41, count=70)
+    S = make_dataset("T2", seed=42, count=110)
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    c1 = choose_plan(R, S, pairs, n_order=7)
+    c2 = choose_plan(R, S, pairs, n_order=7)
+    assert c1.to_dict() == c2.to_dict(), "seeded planning must be " \
+        "deterministic (same inputs -> same chosen plan)"
+    if c1.est["costs"]:
+        # est["costs"] entries are rounded to 3 decimals; total is exact
+        assert c1.est["total"] <= min(c1.est["costs"].values()) + 1e-3, \
+            "chosen estimate must equal the best static estimate"
+    print(f"planner smoke ok: deterministic choice {c1.key()} "
+          f"over {len(c1.est['costs'])} static configs")
+
+    for predicate in ("intersects", "within"):
+        plan = JoinPlan(R, S, filter="april", n_order=7,
+                        plan_mode="adaptive")
+        res, st = plan.execute(predicate)
+        ref, _ = JoinPlan(R, S, filter="none").execute(predicate)
+        assert _pair_set(res) == _pair_set(ref), predicate
+        assert st.plan_mode == "adaptive" and "plan" in st.extra
+        print(f"planner smoke ok: {predicate} adaptive "
+              f"plan={st.extra['plan']['method']} == refine-all reference")
+
+    tiny_r = make_dataset("T1", seed=43, count=4)
+    tiny_s = make_dataset("T2", seed=44, count=4)
+    tiny = choose_plan(tiny_r, tiny_s,
+                       mbr_join(tiny_r.mbrs, tiny_s.mbrs), n_order=7)
+    assert tiny.skip_filter and tiny.method == "none"
+    print("planner smoke ok: tiny candidate set skips the filter")
+
+
+if __name__ == "__main__":
+    bench_main(run, smoke)

@@ -12,16 +12,14 @@ import sys
 import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
-               filter_throughput, granularity, join_order, kernel_bench,
-               linestring, mbr_join, partitioning, pipeline_e2e, refinement,
-               selection, service_throughput, size_variance, space,
-               within_join)
+               filter_throughput, granularity, kernel_bench, linestring,
+               mbr_join, partitioning, pipeline_e2e, refinement, selection,
+               service_throughput, size_variance, space, within_join)
 from .common import smoke_requested
 
 SUITES = {
     "table4_space": space,
     "table5_effect_of_n": effect_of_n,
-    "table7_join_order": join_order,
     "table8_partitioning": partitioning,
     "table10_granularity": granularity,
     "table11_construction": construction,
@@ -30,7 +28,9 @@ SUITES = {
     "table16_within": within_join,
     "table17_linestring": linestring,
     "fig13_comparative": comparative,
-    "beyond_adaptive_order": adaptive_order,
+    # emits BENCH_planner.json: adaptive planner vs the static config
+    # sweep; also carries the Table-7 join-order rows (paper §7.2.2)
+    "planner_table7_join_order": adaptive_order,
     "kernels": kernel_bench,
     # emits BENCH_filter.json: sequential vs batched verdict throughput
     "filter_throughput": filter_throughput,

@@ -12,7 +12,9 @@ mutations that exercise the incremental store patches. Reports sustained
 queries/sec, p50/p99 latency with the per-stage device-time breakdown
 (``t_mbr``/``t_filter``/``t_refine``/``t_sync``), and cache hit/eviction
 stats; ``--pipeline-mode fused`` routes every micro-batched group through
-the device-resident fused chain (DESIGN.md §12); ``--ckpt-dir``
+the device-resident fused chain (DESIGN.md §12); ``--plan-mode adaptive``
+lets the sample-based planner pick each group's method/granularity
+(DESIGN.md §13, replanning on mutation drift); ``--ckpt-dir``
 periodically persists the stores + mutation log through
 :class:`~repro.runtime.checkpoint.CheckpointManager` (and resumes from the
 latest step on restart).
@@ -54,7 +56,7 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
               n_requests: int = 100, method: str = "april",
               n_order: int = 8, filter_backend: str = "numpy",
               mbr_backend: str = "numpy", refine_backend: str = "numpy",
-              pipeline_mode: str = "staged",
+              pipeline_mode: str = "staged", plan_mode: str = "static",
               window_ms: float = 2.0, cache_mb: float = 256.0,
               mutate_every: int = 25, ckpt_dir: str | None = None,
               ckpt_every: int = 50, seed: int = 0,
@@ -73,7 +75,8 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
             mgr, window_s=window_ms / 1e3,
             cache_bytes=int(cache_mb * (1 << 20)),
             filter_backend=filter_backend, mbr_backend=mbr_backend,
-            refine_backend=refine_backend, pipeline_mode=pipeline_mode)
+            refine_backend=refine_backend, pipeline_mode=pipeline_mode,
+            plan_mode=plan_mode)
     if svc is None:
         svc = JoinService(method=method, n_order=n_order,
                           window_s=window_ms / 1e3,
@@ -81,7 +84,7 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
                           filter_backend=filter_backend,
                           mbr_backend=mbr_backend,
                           refine_backend=refine_backend,
-                          pipeline_mode=pipeline_mode)
+                          pipeline_mode=pipeline_mode, plan_mode=plan_mode)
         svc.register_dataset(dataset, D)
 
     trace = make_trace(rng, Q, n_requests)
@@ -115,7 +118,7 @@ def run_serve(dataset: str = "T1", count: int | None = 300,
 
     report = {
         "dataset": dataset, "method": method, "n_order": n_order,
-        "pipeline_mode": pipeline_mode,
+        "pipeline_mode": pipeline_mode, "plan_mode": plan_mode,
         "n_requests": n_requests, "elapsed_s": elapsed,
         "queries_per_s": n_requests / max(elapsed, 1e-9),
         "latency": svc.latency_stats(),
@@ -147,6 +150,11 @@ def main():
                     help="staged (default) or fused: run each micro-batched "
                          "group as one device-resident dispatch chain "
                          "(DESIGN.md §12)")
+    ap.add_argument("--plan-mode", default="static",
+                    help="static (default) or adaptive: the sample-based "
+                         "planner picks each request group's filter "
+                         "method/granularity, replanning once mutation "
+                         "drift passes the threshold (DESIGN.md §13)")
     ap.add_argument("--window-ms", type=float, default=2.0,
                     help="micro-batch accumulation window")
     ap.add_argument("--cache-mb", type=float, default=256.0,
@@ -163,7 +171,8 @@ def main():
         n_requests=args.queries, method=args.method, n_order=args.n_order,
         filter_backend=args.filter_backend, mbr_backend=args.mbr_backend,
         refine_backend=args.refine_backend,
-        pipeline_mode=args.pipeline_mode, window_ms=args.window_ms,
+        pipeline_mode=args.pipeline_mode, plan_mode=args.plan_mode,
+        window_ms=args.window_ms,
         cache_mb=args.cache_mb, mutate_every=args.mutate_every,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed)
     print(json.dumps(report, indent=2))

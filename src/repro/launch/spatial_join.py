@@ -32,11 +32,14 @@ from ..spatial.distributed import (distributed_filter, distributed_fused_join,
 from ..spatial.filters import get_filter
 from ..spatial.fused import check_pipeline_mode
 from ..spatial.mbr_join import mbr_join
+from ..spatial.plan import JoinPlan
+from ..spatial.planner import check_plan_mode
 
 
 def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
                    backend: str = "jnp", refine_backend: str = "numpy",
-                   mbr_backend: str = "numpy", pipeline_mode: str = "staged"):
+                   mbr_backend: str = "numpy", pipeline_mode: str = "staged",
+                   plan_mode: str = "static", n_order: int = 8):
     """Filter + refine all candidate pairs owned by partition ``pidx``.
 
     ``mbr_backend='jnp'`` generates the partition's candidates sharded over
@@ -50,13 +53,62 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
     (:func:`~repro.spatial.distributed.distributed_fused_join`) with the
     cross-partition ownership dedup applied to the joined pairs — the
     result set is identical to the staged chain; per-partition counts
-    then cover the partition's full candidate frame."""
+    then cover the partition's full candidate frame.
+
+    ``plan_mode='adaptive'`` (DESIGN.md §13) gives each partition its own
+    plan: the sample-based planner runs on the partition's candidates, and
+    an april/none choice executes under ONE ``shard_map`` step via
+    :func:`~repro.spatial.distributed.distributed_fused_join` with the
+    per-shard plan (skip-filter plans drop the interval kernel entirely);
+    other choices run the partition's batched host path. Prebuilt
+    partition stores are reused when the choice matches their
+    method/granularity, rebuilt locally otherwise."""
     part = parting.partitions[pidx]
     ridx = part.obj_idx[R.name]
     sidx = part.obj_idx[S.name]
     ar, as_ = approx_r[pidx], approx_s[pidx]
     if len(ridx) == 0 or len(sidx) == 0:
         return np.zeros((0, 2), np.int64), {}
+
+    if plan_mode == "adaptive":
+        Rp = PolygonDataset(name=R.name, verts=R.verts[ridx],
+                            nverts=R.nverts[ridx])
+        Sp = PolygonDataset(name=S.name, verts=S.verts[sidx],
+                            nverts=S.nverts[sidx])
+        probe = JoinPlan(Rp, Sp, filter="april", n_order=n_order,
+                         refine_backend=refine_backend
+                         if refine_backend != "jnp" else "numpy",
+                         plan_mode="adaptive")
+        choice = probe.plan("intersects")
+        if choice.method in ("april", "none"):
+            if choice.skip_filter:
+                ar2 = as2 = None
+            elif (filt.name == "april" and choice.n_order == n_order
+                    and ar is not None and as_ is not None):
+                ar2, as2 = ar, as_
+            else:
+                april = get_filter("april")
+                ar2 = april.build(Rp, n_order=choice.n_order, side="r")
+                as2 = april.build(Sp, n_order=choice.n_order, side="s")
+            local_pairs, counts = distributed_fused_join(
+                Rp, Sp, ar2, as2, mesh=mesh, plan=choice)
+        else:
+            local_pairs, st = probe.execute("intersects")
+            counts = {"true_neg": st.n_true_negs,
+                      "true_hit": st.n_true_hits,
+                      "indecisive": st.n_indecisive}
+        counts = dict(counts)
+        counts["plan"] = choice.key()
+        if len(local_pairs) == 0:
+            return np.zeros((0, 2), np.int64), counts
+        own = partition_mod.reference_partitions(
+            parting.parts_per_dim, R.mbrs[ridx[local_pairs[:, 0]]],
+            S.mbrs[sidx[local_pairs[:, 1]]]) == pidx
+        local_pairs = local_pairs[own]
+        out = np.stack([ridx[local_pairs[:, 0]], sidx[local_pairs[:, 1]]],
+                       axis=1)
+        return out, counts
+
     if filt.name != "none" and (ar is None or as_ is None):
         return np.zeros((0, 2), np.int64), {}
 
@@ -121,8 +173,10 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
 def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
              seed=0, count_r=None, count_s=None, mesh=None, method="april",
              backend="jnp", refine_backend="numpy", mbr_backend="numpy",
-             build_backend="numpy", pipeline_mode="staged"):
+             build_backend="numpy", pipeline_mode="staged",
+             plan_mode="static"):
     check_pipeline_mode(pipeline_mode)
+    check_plan_mode(plan_mode)
     filt = get_filter(method)
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
@@ -130,10 +184,16 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
 
     t0 = time.perf_counter()
     parting = partition_mod.partition_space([R, S], parts_per_dim=parts)
-    approx_r = parting.build_approx(filt, R, n_order, side="r",
-                                    build_backend=build_backend)
-    approx_s = parting.build_approx(filt, S, n_order, side="s",
-                                    build_backend=build_backend)
+    if plan_mode == "adaptive":
+        # no global prebuild: every partition's planner decides its own
+        # method/granularity and builds (or skips) stores locally
+        approx_r = [None] * len(parting)
+        approx_s = [None] * len(parting)
+    else:
+        approx_r = parting.build_approx(filt, R, n_order, side="r",
+                                        build_backend=build_backend)
+        approx_s = parting.build_approx(filt, S, n_order, side="s",
+                                        build_backend=build_backend)
     t_build = time.perf_counter() - t0
 
     mgr = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
@@ -159,7 +219,8 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
                                      mesh, filt, backend=backend,
                                      refine_backend=refine_backend,
                                      mbr_backend=mbr_backend,
-                                     pipeline_mode=pipeline_mode)
+                                     pipeline_mode=pipeline_mode,
+                                     plan_mode=plan_mode, n_order=n_order)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -207,6 +268,10 @@ def main():
                     help="staged (host stage boundaries, default) or fused "
                          "(whole partition chain as one sharded dispatch, "
                          "DESIGN.md §12; APRIL only)")
+    ap.add_argument("--plan-mode", default="static",
+                    help="static (use the knobs above verbatim, default) or "
+                         "adaptive (per-partition sample-based planner "
+                         "picks method/granularity/order, DESIGN.md §13)")
     args = ap.parse_args()
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
@@ -215,7 +280,7 @@ def main():
              refine_backend=args.refine_backend,
              mbr_backend=args.mbr_backend,
              build_backend=args.build_backend,
-             pipeline_mode=args.pipeline_mode)
+             pipeline_mode=args.pipeline_mode, plan_mode=args.plan_mode)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ from .filters import (  # noqa: F401
     get_filter, register_filter,
 )
 from .plan import PIPELINE_MODES, JoinPlan, JoinStats  # noqa: F401
+from .planner import (  # noqa: F401
+    PLAN_MODES, PlanChoice, check_plan_mode, choose_plan,
+)
 from .refine import REFINE_BACKENDS  # noqa: F401
 from .pipeline import (  # noqa: F401
     spatial_intersection_join, spatial_within_join,

@@ -387,25 +387,27 @@ def distributed_refine(R, S, pairs: np.ndarray,
 _FUSED_STEP_CACHE: dict = {}
 
 
-def _fused_shard_step(mesh):
-    if mesh in _FUSED_STEP_CACHE:
-        return _FUSED_STEP_CACHE[mesh]
+def _fused_shard_step(mesh, with_filter: bool = True):
+    """The one-dispatch chain, compiled per (mesh, filter-on/off).
+
+    ``with_filter=False`` is the per-shard plan's skip-filter variant
+    (DESIGN.md §13): no interval batch enters the step — every valid row
+    is INDECISIVE and refines, so tiny candidate sets avoid the packing
+    and kernel work entirely while staying inside one ``shard_map``.
+    """
+    key = (mesh, with_filter)
+    if key in _FUSED_STEP_CACHE:
+        return _FUSED_STEP_CACHE[key]
     from . import refine as refine_mod
     from .mbr_join import pair_mask_body
 
     # replicated MBR/cell tables, then the sharded per-row operands
     specs = ((P(),) * 4
              + (P("data"),) * 5      # ri, si, own_x, own_y, valid
-             + (P("data"),)          # packed interval batch (pytree)
+             + ((P("data"),) if with_filter else ())  # packed batch pytree
              + (P("data"),) * 6)     # vr, nr, rep_r, vs, ns, rep_s
 
-    @partial(shard_map, mesh=mesh, in_specs=specs,
-             out_specs=(P("data"), P("data"), P("data"), P()))
-    def step(mr, ms, lor, los, ri, si, ox, oy, vrow, batch,
-             vr, nr, rpr, vs, ns, rps):
-        v = pair_mask_body(jnp, mr, ms, lor, los, ri, si, ox, oy) & vrow
-        verd = april_filter_kernel_jnp(batch)
-        verd = jnp.where(v, verd, jnp.int8(TRUE_NEG))
+    def _finish(v, verd, vr, nr, rpr, vs, ns, rps):
         res, unc = refine_mod._intersects_impl_jnp(vr, nr, vs, ns, rpr, rps)
         indec = v & (verd == INDECISIVE)
         hit = (verd == TRUE_HIT) | (indec & res)
@@ -415,12 +417,31 @@ def _fused_shard_step(mesh):
             jnp.sum(verd == TRUE_HIT), jnp.sum(indec)]), "data")
         return verd, hit, unc, counts
 
-    _FUSED_STEP_CACHE[mesh] = jax.jit(step)
-    return _FUSED_STEP_CACHE[mesh]
+    if with_filter:
+        @partial(shard_map, mesh=mesh, in_specs=specs,
+                 out_specs=(P("data"), P("data"), P("data"), P()))
+        def step(mr, ms, lor, los, ri, si, ox, oy, vrow, batch,
+                 vr, nr, rpr, vs, ns, rps):
+            v = pair_mask_body(jnp, mr, ms, lor, los, ri, si, ox, oy) & vrow
+            verd = april_filter_kernel_jnp(batch)
+            verd = jnp.where(v, verd, jnp.int8(TRUE_NEG))
+            return _finish(v, verd, vr, nr, rpr, vs, ns, rps)
+    else:
+        @partial(shard_map, mesh=mesh, in_specs=specs,
+                 out_specs=(P("data"), P("data"), P("data"), P()))
+        def step(mr, ms, lor, los, ri, si, ox, oy, vrow,
+                 vr, nr, rpr, vs, ns, rps):
+            v = pair_mask_body(jnp, mr, ms, lor, los, ri, si, ox, oy) & vrow
+            verd = jnp.where(v, jnp.int8(INDECISIVE), jnp.int8(TRUE_NEG))
+            return _finish(v, verd, vr, nr, rpr, vs, ns, rps)
+
+    _FUSED_STEP_CACHE[key] = jax.jit(step)
+    return _FUSED_STEP_CACHE[key]
 
 
 def distributed_fused_join(R, S, approx_r, approx_s,
-                           grid: int | None = None, mesh: Mesh | None = None):
+                           grid: int | None = None, mesh: Mesh | None = None,
+                           plan: "PlanChoice | None" = None):
     """The intersects join as ONE sharded dispatch (DESIGN.md §12).
 
     The host runs the cheap grid-hash preprocessing; every candidate row
@@ -432,7 +453,15 @@ def distributed_fused_join(R, S, approx_r, approx_s,
     trades redundant FLOPs for zero intermediate syncs; the staged
     ``distributed_*`` steps remain the large-batch references. Pair *set*
     (order-insensitive) equals the staged chain. APRIL stores over polygon
-    sides only. Returns (pairs [K,2] int64, counts dict).
+    sides only.
+
+    ``plan`` carries this shard's :class:`~repro.spatial.planner.PlanChoice`
+    (DESIGN.md §13): a skip-filter plan drops the interval batch from the
+    step — no packing, no kernel, every valid row refines — still as one
+    ``shard_map`` dispatch (``approx_r``/``approx_s`` may then be ``None``).
+    The join order a plan carries is irrelevant here: the branch-free
+    kernel evaluates all three joins at once. Returns
+    (pairs [K,2] int64, counts dict).
     """
     from .mbr_join import _pad_rows_pow2, _prepare, candidate_rows
     from . import refine as refine_mod
@@ -454,9 +483,12 @@ def distributed_fused_join(R, S, approx_r, approx_s,
     (pri, psi, pox, poy, vrow), n = _pad_rows_pow2(
         [ri, si, own_x, own_y, np.ones(len(ri), bool)], multiple=n_dev)
     frame = np.stack([pri, psi], axis=1)
-    packed = pack_pair_batch(approx_r.store, approx_s.store,
-                             frame, pad_batch_to=n_dev)
-    batch = {key: jnp.asarray(a) for key, a in packed.arrays().items()}
+    with_filter = not (plan is not None
+                       and (plan.skip_filter or plan.method == "none"))
+    if with_filter:
+        packed = pack_pair_batch(approx_r.store, approx_s.store,
+                                 frame, pad_batch_to=n_dev)
+        batch = {key: jnp.asarray(a) for key, a in packed.arrays().items()}
     vr = np.asarray(R.verts, np.float64)[pri]
     vs = np.asarray(S.verts, np.float64)[psi]
     nr = np.asarray(R.nverts, np.int32)[pri]
@@ -464,12 +496,15 @@ def distributed_fused_join(R, S, approx_r, approx_s,
     rpr = refine_mod._reps(R, pri)
     rps = refine_mod._reps(S, psi)
 
-    step = _fused_shard_step(mesh)
+    step = _fused_shard_step(mesh, with_filter)
     with enable_x64():
-        verd, hit, unc, counts = step(
-            *[jnp.asarray(a) for a in (mbrs_r, mbrs_s, lo_r, lo_s,
-                                       pri, psi, pox, poy, vrow)],
-            batch, *[jnp.asarray(a) for a in (vr, nr, rpr, vs, ns, rps)])
+        head = [jnp.asarray(a) for a in (mbrs_r, mbrs_s, lo_r, lo_s,
+                                         pri, psi, pox, poy, vrow)]
+        tail = [jnp.asarray(a) for a in (vr, nr, rpr, vs, ns, rps)]
+        if with_filter:
+            verd, hit, unc, counts = step(*head, batch, *tail)
+        else:
+            verd, hit, unc, counts = step(*head, *tail)
     verd, hit, unc, counts = to_host(verd, hit, unc, counts)
     hit, unc = hit[:n].copy(), unc[:n]
     if unc.any():          # sanctioned f64 escalation of guard-band rows

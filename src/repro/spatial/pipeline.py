@@ -27,7 +27,9 @@ are dataset-batched behind backend knobs forwarded to ``JoinPlan`` —
 ``build_backend`` via build options (§6), and ``refine_backend`` (§7);
 see the README "Pipeline stages & backends" table. ``pipeline_mode``
 (DESIGN.md §12) selects staged (host stage boundaries, default) or fused
-(device-resident chain, one end-of-chain sync) execution.
+(device-resident chain, one end-of-chain sync) execution; ``plan_mode``
+(DESIGN.md §13) selects static knobs (default) or the sample-based
+adaptive planner that picks method/granularity/order per workload.
 """
 from __future__ import annotations
 
@@ -44,7 +46,7 @@ __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
 def _plan(R, S, method, n_order, *, filter_backend="numpy",
           refine_backend="numpy", mbr_backend="numpy", mbr_grid=None,
           max_ra_cells=None, order=None, r_kind="polygon",
-          pipeline_mode="staged"):
+          pipeline_mode="staged", plan_mode="static"):
     build_opts = {}
     filter_opts = {}
     if method == "ra" and max_ra_cells is not None:
@@ -54,7 +56,7 @@ def _plan(R, S, method, n_order, *, filter_backend="numpy",
     return JoinPlan(R, S, filter=method, filter_backend=filter_backend,
                     refine_backend=refine_backend, mbr_backend=mbr_backend,
                     n_order=n_order, mbr_grid=mbr_grid, r_kind=r_kind,
-                    pipeline_mode=pipeline_mode,
+                    pipeline_mode=pipeline_mode, plan_mode=plan_mode,
                     build_opts=build_opts, filter_opts=filter_opts)
 
 
@@ -74,18 +76,20 @@ def spatial_intersection_join(
     prebuilt: tuple | None = None, mbr_grid: int | None = None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
     filter_backend: str | None = None, pipeline_mode: str = "staged",
+    plan_mode: str = "static",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: run the full pipeline; returns (pairs [K,2], stats).
 
     Prefer ``JoinPlan(R, S, filter=method).build().execute("intersects")``.
-    ``filter_backend`` overrides the legacy ``use_jnp`` switch.
+    ``filter_backend`` overrides the legacy ``use_jnp`` switch;
+    ``plan_mode="adaptive"`` lets the §13 planner override method/order.
     """
     plan = _plan(R, S, method, n_order,
                  filter_backend=filter_backend
                  or ("jnp" if use_jnp else "numpy"),
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
                  mbr_grid=mbr_grid, max_ra_cells=max_ra_cells, order=order,
-                 pipeline_mode=pipeline_mode)
+                 pipeline_mode=pipeline_mode, plan_mode=plan_mode)
     if prebuilt is not None:
         pr, ps = prebuilt
         plan.build(prebuilt=(_adopt(method, pr), _adopt(method, ps)))
@@ -96,12 +100,12 @@ def spatial_within_join(
     R, S, method: str = "april", n_order: int = 10,
     prebuilt: tuple | None = None, refine_backend: str = "numpy",
     mbr_backend: str = "numpy", filter_backend: str = "numpy",
-    pipeline_mode: str = "staged",
+    pipeline_mode: str = "staged", plan_mode: str = "static",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: within join (§4.3.2), pairs (r, s) with r within s."""
     plan = _plan(R, S, method, n_order, filter_backend=filter_backend,
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
-                 pipeline_mode=pipeline_mode)
+                 pipeline_mode=pipeline_mode, plan_mode=plan_mode)
     if prebuilt is not None:
         plan.build(prebuilt=tuple(_adopt(method, p) for p in prebuilt))
     return plan.execute("within")
@@ -111,14 +115,14 @@ def polygon_linestring_join(
     S, L, method: str = "april", n_order: int = 10,
     prebuilt=None, refine_backend: str = "numpy",
     mbr_backend: str = "numpy", filter_backend: str = "numpy",
-    pipeline_mode: str = "staged",
+    pipeline_mode: str = "staged", plan_mode: str = "static",
 ) -> tuple[np.ndarray, JoinStats]:
     """Deprecated shim: polygon x linestring join (§4.3.3), pairs are
     (line, poly). ``prebuilt`` is the polygon-side store."""
     plan = _plan(L, S, method, n_order, r_kind="line",
                  filter_backend=filter_backend,
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
-                 pipeline_mode=pipeline_mode)
+                 pipeline_mode=pipeline_mode, plan_mode=plan_mode)
     if prebuilt is not None:
         plan.build(prebuilt=(None, _adopt(method, prebuilt)))
     return plan.execute("linestring")
@@ -128,6 +132,7 @@ def selection_queries(
     data, queries, method: str = "april", n_order: int = 10, prebuilt=None,
     refine_backend: str = "numpy", mbr_backend: str = "numpy",
     filter_backend: str = "numpy", pipeline_mode: str = "staged",
+    plan_mode: str = "static",
 ) -> tuple[list[np.ndarray], JoinStats]:
     """Deprecated shim: polygonal range queries (§4.3.1). Returns, per query
     polygon, the data polygons intersecting it. ``prebuilt`` is the
@@ -135,7 +140,7 @@ def selection_queries(
     plan = _plan(data, queries, method, n_order,
                  filter_backend=filter_backend,
                  refine_backend=refine_backend, mbr_backend=mbr_backend,
-                 pipeline_mode=pipeline_mode)
+                 pipeline_mode=pipeline_mode, plan_mode=plan_mode)
     if prebuilt is not None:
         plan.build(prebuilt=(_adopt(method, prebuilt), None))
     pairs, stats = plan.execute("selection")

@@ -33,8 +33,9 @@ from .filters import Approximation, IntermediateFilter, get_filter
 from .fused import PIPELINE_MODES, check_pipeline_mode, execute_fused
 from .mbr_join import _check_backend as _check_mbr_backend
 from .mbr_join import mbr_join
+from .planner import PLAN_MODES, PlanChoice, check_plan_mode, choose_plan
 
-__all__ = ["JoinStats", "JoinPlan", "PIPELINE_MODES"]
+__all__ = ["JoinStats", "JoinPlan", "PIPELINE_MODES", "PLAN_MODES"]
 
 
 @dataclass
@@ -51,6 +52,11 @@ class JoinStats:
     n_indecisive: int = 0
     n_results: int = 0
     pipeline_mode: str = "staged"
+    #: how the executed configuration was chosen (DESIGN.md §13):
+    #: ``static`` = constructor knobs verbatim, ``adaptive`` = planner pick
+    #: (the chosen :class:`~repro.spatial.planner.PlanChoice` rides in
+    #: ``extra["plan"]``)
+    plan_mode: str = "static"
     t_mbr: float = 0.0
     t_filter: float = 0.0
     t_refine: float = 0.0
@@ -139,6 +145,14 @@ class JoinPlan:
     ``staged`` (default) materializes each stage's survivors on host;
     ``fused`` chains the stages device-resident with one end-of-chain sync
     — result pairs and their order are identical either way.
+    ``plan_mode`` selects who picks the configuration (DESIGN.md §13):
+    ``static`` (default) executes the knobs above verbatim; ``adaptive``
+    runs the sample-based cost planner on the first :meth:`execute` (or an
+    explicit :meth:`plan` call) and adopts its choice of filter method,
+    ``n_order``, join order, and pipeline mode. ``plan_opts`` tune the
+    planner (see :data:`~repro.spatial.planner.PLAN_DEFAULTS`);
+    ``plan_choice`` injects a pre-computed choice (per-shard plans, the
+    service's replan cache) instead of re-sampling.
     """
 
     def __init__(self, R, S, *, filter: str | IntermediateFilter = "april",
@@ -149,6 +163,9 @@ class JoinPlan:
                  s_kind: str = "polygon", mbr_grid: int | None = None,
                  mbr_index: "MBRIndex | None" = None,
                  pipeline_mode: str = "staged",
+                 plan_mode: str = "static",
+                 plan_opts: dict | None = None,
+                 plan_choice: PlanChoice | None = None,
                  build_opts: dict | None = None,
                  filter_opts: dict | None = None):
         if (filter_backend is not None and backend is not None
@@ -166,6 +183,10 @@ class JoinPlan:
         refine._check_backend(refine_backend)
         _check_mbr_backend(mbr_backend)
         check_pipeline_mode(pipeline_mode)
+        check_plan_mode(plan_mode)
+        if plan_choice is not None and plan_mode != "adaptive":
+            raise ValueError("plan_choice requires plan_mode='adaptive' "
+                             f"(got plan_mode={plan_mode!r})")
         self.R = R
         self.S = S
         self.filter = get_filter(filter)
@@ -180,12 +201,18 @@ class JoinPlan:
         self.mbr_grid = mbr_grid
         self.mbr_index = mbr_index
         self.pipeline_mode = pipeline_mode
+        self.plan_mode = plan_mode
+        self.plan_opts = dict(plan_opts or {})
+        self.plan_choice: PlanChoice | None = None
         self.build_opts = dict(build_opts or {})
         self.filter_opts = dict(filter_opts or {})
         self.approx_r: Approximation | None = None
         self.approx_s: Approximation | None = None
         self._t_build = 0.0
+        self._t_plan = 0.0
         self.last_stats: JoinStats | None = None
+        if plan_choice is not None:
+            self._apply_choice(plan_choice)
 
     # -- preprocessing ------------------------------------------------------
 
@@ -222,6 +249,44 @@ class JoinPlan:
                                  side="s", **self.build_opts))
         self._t_build += time.perf_counter() - t0
         return self
+
+    # -- adaptive planning (DESIGN.md §13) ----------------------------------
+
+    def _apply_choice(self, choice: PlanChoice) -> None:
+        """Adopt a planner choice: swap filter/granularity/order/pipeline.
+        Built approximations are invalidated when the store shape changes
+        (a prebuilt store for the chosen config can still be adopted via
+        :meth:`build`'s ``prebuilt``)."""
+        if (choice.method != self.filter.name
+                or int(choice.n_order) != self.n_order):
+            self.approx_r = self.approx_s = None
+        self.filter = get_filter(choice.method)
+        self.n_order = int(choice.n_order)
+        self.pipeline_mode = choice.pipeline_mode
+        if (choice.method in ("april", "april-c")
+                and choice.predicate in ("intersects", "selection")):
+            self.filter_opts["order"] = tuple(choice.order)
+        else:
+            self.filter_opts.pop("order", None)
+        self.plan_choice = choice
+
+    def plan(self, predicate: str = "intersects") -> PlanChoice:
+        """Run the sample-based planner for ``predicate`` and apply its
+        choice (``plan_mode='adaptive'`` only). Called lazily by the first
+        :meth:`execute`; call explicitly to re-plan (e.g. after the
+        workload drifts). Deterministic for fixed inputs and
+        ``plan_opts['seed']``."""
+        if self.plan_mode != "adaptive":
+            raise ValueError("plan() requires JoinPlan(plan_mode="
+                             f"'adaptive'), got {self.plan_mode!r}")
+        t0 = time.perf_counter()
+        pairs = self.candidates(predicate)
+        choice = choose_plan(self.R, self.S, pairs, predicate=predicate,
+                             n_order=self.n_order, extent=self.extent,
+                             r_kind=self.r_kind, **self.plan_opts)
+        self._t_plan = time.perf_counter() - t0
+        self._apply_choice(choice)
+        return choice
 
     # -- candidate generation (the MBR filter, per predicate) ---------------
 
@@ -275,6 +340,8 @@ class JoinPlan:
             raise ValueError(
                 f"predicate {predicate!r} needs polygon approximations, but "
                 "this plan was built with r_kind='line'")
+        if self.plan_mode == "adaptive" and self.plan_choice is None:
+            self.plan(predicate)
         if self.approx_r is None or self.approx_s is None:
             self.build()
         stats = JoinStats(method=self.filter.name, predicate=predicate,
@@ -282,7 +349,11 @@ class JoinPlan:
                           filter_backend=self.filter_backend,
                           refine_backend=self.refine_backend,
                           mbr_backend=self.mbr_backend,
-                          pipeline_mode=self.pipeline_mode)
+                          pipeline_mode=self.pipeline_mode,
+                          plan_mode=self.plan_mode)
+        if self.plan_choice is not None:
+            stats.extra["plan"] = self.plan_choice.to_dict()
+            stats.extra["t_plan"] = self._t_plan
         stats.t_build = self._t_build
         stats.approx_bytes = (self.approx_r.size_bytes()
                               + self.approx_s.size_bytes())

@@ -48,6 +48,7 @@ from ..datagen.synthetic import PolygonDataset
 from .filters import get_filter
 from .mbr_join import MBRIndex
 from .plan import JoinPlan
+from .planner import PlanChoice, check_plan_mode
 from .store_cache import StoreCache, DEFAULT_BUDGET
 
 __all__ = ["JoinService", "JoinTicket", "SERVICE_PREDICATES"]
@@ -162,15 +163,26 @@ class JoinService:
     everything pending synchronously (what tests and benchmarks do).
     Backend knobs mirror :class:`~repro.spatial.plan.JoinPlan` and apply to
     every batched pass.
+
+    ``plan_mode="adaptive"`` (DESIGN.md §13) replaces the static
+    method/n_order of each request group with the sample-based planner's
+    pick, computed against the group's actual query batch and cached per
+    (dataset, predicate, method, n_order) group key. The cached choice is
+    invalidated once ``patch_insert``/``patch_delete`` drift — mutations
+    applied since planning — reaches ``replan_after``; build cost is
+    amortized in the cost model (warm stores serve many batches), which
+    ``plan_opts`` can override. ``stats["replans"]`` counts planner runs.
     """
 
     def __init__(self, *, cache_bytes: int = DEFAULT_BUDGET,
                  window_s: float = 0.002, method: str = "april",
                  n_order: int = 10, filter_backend: str = "numpy",
                  refine_backend: str = "numpy", mbr_backend: str = "numpy",
-                 pipeline_mode: str = "staged"):
+                 pipeline_mode: str = "staged", plan_mode: str = "static",
+                 plan_opts: dict | None = None, replan_after: int = 16):
         from .fused import check_pipeline_mode
         check_pipeline_mode(pipeline_mode)
+        check_plan_mode(plan_mode)
         self.cache = StoreCache(cache_bytes)
         self.window_s = float(window_s)
         self.method = method
@@ -179,6 +191,12 @@ class JoinService:
         self.refine_backend = refine_backend
         self.mbr_backend = mbr_backend
         self.pipeline_mode = pipeline_mode
+        self.plan_mode = plan_mode
+        self.plan_opts = dict(plan_opts or {})
+        self.replan_after = int(replan_after)
+        # group key -> (PlanChoice, mutation seq at planning time);
+        # guarded by _lock (planning itself is serialized by _exec_lock)
+        self._plans: dict[tuple, tuple[PlanChoice, int]] = {}
         self.datasets: dict[str, _DatasetHandle] = {}
         self._pending: list[_Request] = []
         # guards the request queue, stats, latencies and worker lifecycle
@@ -198,7 +216,7 @@ class JoinService:
         # (JoinStats.stage_times of every batch, summed)
         self._stage_times: dict[str, float] = {}
         self.stats = {"requests": 0, "batches": 0, "batched_requests": 0,
-                      "inserts": 0, "deletes": 0}
+                      "inserts": 0, "deletes": 0, "replans": 0}
 
     # -- datasets and mutations ---------------------------------------------
 
@@ -331,24 +349,66 @@ class JoinService:
             self.stats["batched_requests"] += len(batch)
         return len(batch)
 
+    def _plan_for(self, handle, dataset_id: str, predicate: str,
+                  method: str, n_order: int, queries) -> PlanChoice:
+        """The group's cached PlanChoice, recomputed once mutation drift
+        (log entries since planning) reaches ``replan_after``. Callers hold
+        ``_exec_lock``. Build cost is amortized 16x by default: warm stores
+        serve many micro-batches (``plan_opts`` overrides)."""
+        pkey = (dataset_id, predicate, method, n_order)
+        with self._lock:
+            cached = self._plans.get(pkey)
+        if cached is not None and handle.seq - cached[1] < self.replan_after:
+            return cached[0]
+        opts = {"amortize_build": 16.0}
+        opts.update(self.plan_opts)
+        probe = JoinPlan(handle.dataset, queries, filter="april",
+                         n_order=n_order, extent=handle.extent,
+                         mbr_backend=self.mbr_backend,
+                         mbr_index=handle.index,
+                         plan_mode="adaptive", plan_opts=opts)
+        choice = probe.plan(predicate)
+        with self._lock:
+            self._plans[pkey] = (choice, handle.seq)
+            self.stats["replans"] += 1
+        return choice
+
     def _run_group(self, dataset_id: str, predicate: str, method: str,
                    n_order: int, reqs: list[_Request]) -> None:
         with self._exec_lock:
             handle = self._handle(dataset_id)
-            approx = self.warm_store(dataset_id, method, n_order)
             vmax = max(r.verts.shape[1] for r in reqs)
             q_verts = np.concatenate(
                 [_pad_verts(r.verts, vmax) for r in reqs])
             q_nverts = np.concatenate([r.nverts for r in reqs])
             queries = PolygonDataset(name="_queries", verts=q_verts,
                                      nverts=q_nverts)
-            plan = JoinPlan(handle.dataset, queries, filter=method,
-                            n_order=n_order, extent=handle.extent,
-                            filter_backend=self.filter_backend,
-                            refine_backend=self.refine_backend,
-                            mbr_backend=self.mbr_backend,
-                            mbr_index=handle.index,
-                            pipeline_mode=self.pipeline_mode)
+            if self.plan_mode == "adaptive":
+                # the planner's pick overrides the request's method/n_order;
+                # its warm store lands in the same LRU, so several chosen
+                # configs stay resident side by side
+                choice = self._plan_for(handle, dataset_id, predicate,
+                                        method, n_order, queries)
+                approx = self.warm_store(dataset_id, choice.method,
+                                         choice.n_order)
+                plan = JoinPlan(handle.dataset, queries,
+                                filter=choice.method,
+                                n_order=choice.n_order, extent=handle.extent,
+                                filter_backend=self.filter_backend,
+                                refine_backend=self.refine_backend,
+                                mbr_backend=self.mbr_backend,
+                                mbr_index=handle.index,
+                                pipeline_mode=self.pipeline_mode,
+                                plan_mode="adaptive", plan_choice=choice)
+            else:
+                approx = self.warm_store(dataset_id, method, n_order)
+                plan = JoinPlan(handle.dataset, queries, filter=method,
+                                n_order=n_order, extent=handle.extent,
+                                filter_backend=self.filter_backend,
+                                refine_backend=self.refine_backend,
+                                mbr_backend=self.mbr_backend,
+                                mbr_index=handle.index,
+                                pipeline_mode=self.pipeline_mode)
             plan.build(prebuilt=(approx, None))
             pairs, stats = plan.execute(predicate)
             stats.extra["batched_requests"] = len(reqs)

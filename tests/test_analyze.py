@@ -555,7 +555,7 @@ def _fake_repo(tmp_path, *, readme, design, pipeline, flags):
 
 
 ALL_KNOBS = ("filter_backend", "refine_backend", "mbr_backend",
-             "build_backend", "pipeline_mode")
+             "build_backend", "pipeline_mode", "plan_mode")
 
 
 def test_be002_003_true_negative_fully_threaded(tmp_path):

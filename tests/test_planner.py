@@ -1,0 +1,182 @@
+"""Adaptive query planner (DESIGN.md §13): deterministic seeded choice,
+never-worse-than-best-static estimate, skip-filter fast path, PlanChoice /
+JoinStats round trips, verdict identity of the executed adaptive plan, and
+the per-shard plan hook of the fused distributed step."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.datagen import make_dataset
+from repro.spatial import JoinPlan, JoinStats, PlanChoice, check_plan_mode
+from repro.spatial.mbr_join import mbr_join
+from repro.spatial.planner import ORDER_CHOICES, choose_plan
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).reshape(-1, 2).tolist()))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return (make_dataset("T1", seed=61, count=70),
+            make_dataset("T2", seed=62, count=110))
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_plan_mode_validation(data):
+    R, S = data
+    with pytest.raises(ValueError, match="plan_mode"):
+        JoinPlan(R, S, plan_mode="bogus")
+    with pytest.raises(ValueError, match="plan_mode"):
+        check_plan_mode("bogus")
+    with pytest.raises(ValueError, match="plan_choice"):
+        JoinPlan(R, S, plan_mode="static", plan_choice=PlanChoice())
+    with pytest.raises(ValueError, match="adaptive"):
+        JoinPlan(R, S, plan_mode="static").plan()
+
+
+def test_choose_plan_rejects_bad_options(data):
+    R, S = data
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    with pytest.raises(TypeError, match="unknown plan option"):
+        choose_plan(R, S, pairs, not_an_option=1)
+    with pytest.raises(ValueError, match="cannot cost"):
+        choose_plan(R, S, pairs, methods=("april", "5cch"))
+
+
+# ---------------------------------------------------------------------------
+# Choice properties
+# ---------------------------------------------------------------------------
+
+def test_planning_is_deterministic(data):
+    R, S = data
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    c1 = choose_plan(R, S, pairs, n_order=7)
+    c2 = choose_plan(R, S, pairs, n_order=7)
+    assert c1.to_dict() == c2.to_dict()
+
+
+def test_estimate_never_worse_than_best_static(data):
+    R, S = data
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    c = choose_plan(R, S, pairs, n_order=7)
+    assert c.est["costs"], "full sample path must produce a cost table"
+    # est["costs"] entries are rounded to 3 decimals; total is exact
+    assert c.est["total"] <= min(c.est["costs"].values()) + 1e-3
+    assert c.key() in c.est["costs"] or c.method == "none"
+    assert c.est["plan_work"] >= 0.0
+
+
+def test_tiny_candidate_set_skips_filter():
+    R = make_dataset("T1", seed=63, count=4)
+    S = make_dataset("T2", seed=64, count=4)
+    c = choose_plan(R, S, mbr_join(R.mbrs, S.mbrs), n_order=7)
+    assert c.method == "none" and c.skip_filter
+    assert c.est.get("skip_rule") and c.est["plan_work"] == 0.0
+
+
+def test_plan_choice_json_round_trip():
+    c = PlanChoice(method="april-c", n_order=11,
+                   order=ORDER_CHOICES[2], pipeline_mode="fused",
+                   skip_filter=False, predicate="within",
+                   est={"total": 12.5, "costs": {"none": 40.0}})
+    back = PlanChoice.from_dict(json.loads(json.dumps(c.to_dict())))
+    assert back.to_dict() == c.to_dict()
+    assert back.order == c.order and back.key() == c.key()
+
+
+# ---------------------------------------------------------------------------
+# Execution: adaptive == refine-everything reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("predicate", ("intersects", "within"))
+def test_adaptive_execute_matches_oracle(data, predicate):
+    R, S = data
+    plan = JoinPlan(R, S, filter="april", n_order=7, plan_mode="adaptive")
+    res, st = plan.execute(predicate)
+    ref, _ = JoinPlan(R, S, filter="none").execute(predicate)
+    assert _pairs_set(res) == _pairs_set(ref)
+    assert st.plan_mode == "adaptive"
+    assert "plan" in st.extra and st.extra["t_plan"] >= 0.0
+    choice = PlanChoice.from_dict(st.extra["plan"])
+    assert plan.filter.name == choice.method
+    assert plan.n_order == choice.n_order
+    if choice.method in ("april", "april-c") and predicate == "intersects":
+        assert tuple(plan.filter_opts["order"]) == choice.order
+
+
+def test_join_stats_round_trip_preserves_plan(data):
+    R, S = data
+    _, st = JoinPlan(R, S, filter="april", n_order=7,
+                     plan_mode="adaptive").execute("intersects")
+    back = JoinStats.from_dict(json.loads(json.dumps(st.to_dict())))
+    assert back.plan_mode == "adaptive"
+    assert back.extra["plan"] == st.extra["plan"]
+    _, st2 = JoinPlan(R, S, filter="april", n_order=7).execute("intersects")
+    assert st2.plan_mode == "static" and "plan" not in st2.extra
+
+
+# ---------------------------------------------------------------------------
+# Distributed: per-shard plan hook (skip-filter goes straight to refine)
+# ---------------------------------------------------------------------------
+
+def test_distributed_fused_join_honors_skip_filter_plan(data):
+    from repro.spatial import get_filter
+    from repro.spatial.distributed import distributed_fused_join
+
+    R, S = data
+    ar = get_filter("april").build(R, n_order=6, side="R")
+    as_ = get_filter("april").build(S, n_order=6, side="S")
+    ref, refc = distributed_fused_join(R, S, ar, as_)
+    skip = PlanChoice(method="none", skip_filter=True)
+    got, gotc = distributed_fused_join(R, S, None, None, plan=skip)
+    assert _pairs_set(ref) == _pairs_set(got)
+    # without the filter every candidate is refined
+    assert gotc["indecisive"] == refc["true_neg"] + refc["true_hit"] \
+        + refc["indecisive"]
+
+
+# ---------------------------------------------------------------------------
+# Property: the three §13 guarantees on random workloads
+# ---------------------------------------------------------------------------
+
+def _assert_planner_properties(seed_r, seed_s, count_r, count_s, predicate):
+    R = make_dataset("T1", seed=seed_r, count=count_r)
+    S = make_dataset("T2", seed=seed_s, count=count_s)
+    pairs = mbr_join(R.mbrs, S.mbrs)
+    c1 = choose_plan(R, S, pairs, predicate=predicate, n_order=7)
+    c2 = choose_plan(R, S, pairs, predicate=predicate, n_order=7)
+    assert c1.to_dict() == c2.to_dict()
+    if c1.est["costs"]:
+        assert c1.est["total"] <= min(c1.est["costs"].values()) + 1e-3
+    res, _ = JoinPlan(R, S, filter="april", n_order=7,
+                      plan_mode="adaptive").execute(predicate)
+    ref, _ = JoinPlan(R, S, filter="none").execute(predicate)
+    assert _pairs_set(res) == _pairs_set(ref)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_planner_properties_random(seed):
+    """Seeded fallback of the hypothesis property below — always runs."""
+    rng = np.random.default_rng(500 + seed)
+    _assert_planner_properties(
+        int(rng.integers(0, 1000)), int(rng.integers(1000, 2000)),
+        int(rng.integers(3, 60)), int(rng.integers(3, 60)),
+        ("intersects", "within")[seed % 2])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @given(st.integers(0, 2**20), st.integers(0, 2**20),
+           st.integers(3, 60), st.integers(3, 60),
+           st.sampled_from(("intersects", "within")))
+    @settings(max_examples=8, deadline=None)
+    def test_planner_properties_hypothesis(sr, ss, cr, cs, predicate):
+        _assert_planner_properties(sr, ss, cr, cs, predicate)

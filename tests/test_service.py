@@ -231,3 +231,37 @@ def test_service_checkpoint_restore_verdict_identity(data, tmp_path):
 def test_service_checkpoint_restore_none_when_empty(tmp_path):
     mgr = CheckpointManager(str(tmp_path), async_save=False)
     assert JoinService.restore_checkpoint(mgr) is None
+
+
+# ---------------------------------------------------------------------------
+# Adaptive planning through the serving path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_service_replans_after_drift(data):
+    D, Q = data
+    svc = JoinService(method="april", n_order=N_ORDER,
+                      plan_mode="adaptive", replan_after=2)
+    svc.register_dataset("d", D)
+
+    def _batch():
+        ts = [svc.submit("d", "intersects", Q.verts[i, : Q.nverts[i]])
+              for i in range(len(Q))]
+        svc.drain()
+        return ts
+
+    ts = _batch()
+    assert svc.stats["replans"] == 1         # planned once for the group
+    _batch()
+    assert svc.stats["replans"] == 1         # cached: no drift, no replan
+
+    # two mutations reach replan_after -> next group plans again
+    new_poly = Q.verts[0, : Q.nverts[0]] * 0.7 + 0.15
+    svc.insert("d", new_poly)
+    svc.delete("d", 2)
+    ts = _batch()
+    assert svc.stats["replans"] == 2
+    for i, t in enumerate(ts):
+        ref, _ = JoinPlan(svc.dataset("d"), _one(Q, i), filter="april",
+                          n_order=N_ORDER).execute("intersects")
+        assert _pairs_set(t.wait(5.0).pairs) == _pairs_set(ref), i
+        assert t.stats["plan_mode"] == "adaptive"

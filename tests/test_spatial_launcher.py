@@ -26,3 +26,15 @@ def test_launcher_matches_pipeline(tmp_path):
                        count_r=60, count_s=90,
                        ckpt_dir=str(tmp_path / "ck"))
     assert _pairs_set(res2) == _pairs_set(ref)
+
+
+def test_launcher_adaptive_plan_matches_pipeline():
+    # per-partition planning (DESIGN.md §13): no global prebuilt stores,
+    # each partition picks its own config, results identical to the
+    # refine-everything reference
+    res, totals = run_join("T1", "T2", n_order=7, parts=2, seed=0,
+                           count_r=60, count_s=90, plan_mode="adaptive")
+    R = make_dataset("T1", seed=0, count=60)
+    S = make_dataset("T2", seed=1, count=90)
+    ref, _ = spatial_intersection_join(R, S, method="none")
+    assert _pairs_set(res) == _pairs_set(ref)

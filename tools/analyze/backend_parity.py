@@ -36,7 +36,7 @@ _DOCS = ("README.md", "DESIGN.md")
 #: build_backend travels through build_opts to every filter build, not as a
 #: named JoinPlan kwarg; pipeline_mode is the staged/fused execution-mode
 #: knob (DESIGN.md §12) — not a ``*backend`` name, same parity contract
-_EXTRA_KNOBS = ("build_backend", "pipeline_mode")
+_EXTRA_KNOBS = ("build_backend", "pipeline_mode", "plan_mode")
 _LAUNCHERS = ("src/repro/launch/spatial_join.py",
               "src/repro/launch/serve_join.py")
 _PIPELINE = "src/repro/spatial/pipeline.py"
