@@ -13,8 +13,9 @@ import time
 
 from . import (adaptive_order, comparative, construction, effect_of_n,
                filter_throughput, granularity, kernel_bench, linestring,
-               mbr_join, partitioning, pipeline_e2e, refinement, selection,
-               service_throughput, size_variance, space, within_join)
+               mbr_join, partitioning, pipeline_e2e, refinement, scaleout,
+               selection, service_throughput, size_variance, space,
+               within_join)
 from .common import smoke_requested
 
 SUITES = {
@@ -42,6 +43,8 @@ SUITES = {
     "service_throughput": service_throughput,
     # emits BENCH_pipeline.json: fused single-dispatch chain vs staged
     "pipeline_e2e": pipeline_e2e,
+    # emits BENCH_scaleout.json: cost-balanced tiling vs the static grid
+    "scaleout": scaleout,
 }
 
 

@@ -1,0 +1,125 @@
+"""BENCH_scaleout: cost-balanced tiled partitioning vs the static grid.
+
+The ISSUE-10 acceptance gate: the §14 out-of-core driver
+(:func:`~repro.spatial.scaleout.tiled_join`) with cost-aware partitioning
+— per-partition work estimated in the §13 planner's units, hot partitions
+skew-split into quadrants, partitions FFD-packed into byte-budgeted tiles
+— must complete a clustered multi-chunk workload at >= 1.0x the uniform
+static grid (``balance="static"``: no splitting, order-preserving
+packing), with ``verdicts_equal`` true. The honest speedup lever is
+precision: skew-split children get their own smaller raster extents, so
+their interval grids are effectively finer — fewer INDECISIVE pairs on
+the dense clusters and less exact-refinement work, which dominates on
+skewed data. ``benchmarks/run.py`` persists the result as
+BENCH_scaleout.json and ``tools/check_bench.py`` guards the committed
+artifact in CI.
+
+``python -m benchmarks.scaleout --smoke`` is the CI quick-lane check:
+tiled verdicts (both balance modes, several tiles, skew splits firing)
+== the in-memory ``JoinPlan`` reference pair set.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.datagen import iter_dataset_chunks, make_chunked_dataset
+from repro.spatial import JoinPlan
+from repro.spatial.scaleout import tiled_join
+
+from .common import sync
+
+N_ORDER = 8
+COUNT_R, COUNT_S, CHUNK = 2400, 3400, 600
+TILE_BUDGET = 1_200_000          # several tiles on this workload
+
+
+def _chunks(name: str, seed: int, count: int):
+    return iter_dataset_chunks(name, seed=seed, count=count,
+                               chunk_size=CHUNK)
+
+
+def _pairs_set(p):
+    return set(map(tuple, np.asarray(p).reshape(-1, 2).tolist()))
+
+
+def _tiled(balance: str, **opts):
+    t0 = time.perf_counter()
+    pairs, stats = tiled_join(
+        _chunks("T1", 5, COUNT_R), _chunks("T2", 6, COUNT_S),
+        predicate="intersects", method="april", n_order=N_ORDER,
+        tile_budget=TILE_BUDGET, balance=balance, **opts)
+    sync(pairs)
+    return pairs, stats, time.perf_counter() - t0
+
+
+def bench_scaleout():
+    # cost-balanced: skew splits on (threshold at the median partition
+    # cost — the hot quadrants of the 16-cluster map split into finer
+    # extents), FFD packing by estimated resident bytes
+    pairs_c, st_c, t_cost = _tiled("cost", split_factor=1.0)
+    # static baseline: the uniform grid, packed in partition order
+    pairs_s, st_s, t_static = _tiled("static")
+
+    equal = _pairs_set(pairs_c) == _pairs_set(pairs_s)
+    assert equal, "cost-balanced verdicts diverged from the static grid"
+    assert st_c.extra["tile_plan"]["n_splits"] > 0, \
+        "skew split must fire on this clustered workload"
+
+    return {
+        "dataset": "T1 x T2 (streamed chunks)", "method": "april",
+        "n_order": N_ORDER, "count_r": COUNT_R, "count_s": COUNT_S,
+        "chunk_size": CHUNK, "tile_budget": TILE_BUDGET,
+        "t_cost_balanced_s": round(t_cost, 4),
+        "t_static_grid_s": round(t_static, 4),
+        "speedup_cost_balanced": round(t_static / max(t_cost, 1e-9), 2),
+        "tiles_cost": st_c.tiles, "tiles_static": st_s.tiles,
+        "n_splits": st_c.extra["tile_plan"]["n_splits"],
+        "indecisive_cost": st_c.n_indecisive,
+        "indecisive_static": st_s.n_indecisive,
+        "n_results": st_c.n_results,
+        "verdicts_equal": bool(equal),
+    }
+
+
+def smoke() -> None:
+    """CI quick lane: tiled == in-memory verdict set, both balance modes,
+    with the workload genuinely tiling and skew splits firing."""
+    kw = dict(seed=5, count=260, chunk_size=90)
+    R = make_chunked_dataset("T1", **kw)
+    S = make_chunked_dataset("T2", seed=6, count=380, chunk_size=90)
+    ref, _ = JoinPlan(R, S, filter="april", n_order=7).execute("intersects")
+    ref = _pairs_set(ref)
+    for balance, opts in (("cost", dict(split_factor=1.0,
+                                        min_split_objs=32)),
+                          ("static", {})):
+        pairs, stats = tiled_join(
+            iter_dataset_chunks("T1", **kw),
+            iter_dataset_chunks("T2", seed=6, count=380, chunk_size=90),
+            predicate="intersects", method="april", n_order=7,
+            tile_budget=150_000, balance=balance, **opts)
+        assert _pairs_set(pairs) == ref, balance
+        assert stats.tiles > 1, balance
+        if balance == "cost":
+            assert stats.extra["tile_plan"]["n_splits"] > 0
+        print(f"scaleout smoke ok: {balance} tiled == in-memory "
+              f"({stats.tiles} tiles, {stats.n_results} results)")
+
+
+def run():
+    res = bench_scaleout()
+    with open("BENCH_scaleout.json", "w") as f:
+        json.dump(res, f, indent=2)
+    from .common import row
+    return [row("scaleout_tiled",
+                1e6 * res["t_cost_balanced_s"],
+                f"tiles={res['tiles_cost']};"
+                f"n_splits={res['n_splits']};"
+                f"speedup={res['speedup_cost_balanced']}")]
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+    bench_main(run, smoke)

@@ -1,4 +1,4 @@
-"""Space partitioning for APRIL (§5.2).
+"""Space partitioning for APRIL (§5.2; tiled scale-out in DESIGN.md §14).
 
 The map is divided into ``parts_per_dim ** 2`` disjoint tiles. Every dataset
 (layer) shares the same partitioning. A partition's *raster area* is the
@@ -8,10 +8,21 @@ the effective global resolution without widening interval integers.
 
 Duplicate-result avoidance follows [13, 49]: a candidate pair is processed
 only in the partition containing the *reference point* — the bottom-left
-corner of the intersection of the two MBRs.
+corner of the intersection of the two MBRs. For the uniform grid that is
+:func:`reference_partitions` (closed-form cell arithmetic); the §14
+skew-split partitioner produces a *non-uniform* disjoint rect cover, whose
+batched ownership rule is :func:`owner_tiles`.
 
-Partitions are also the distribution unit for the multi-device join
-(``spatial/distributed.py``).
+Partitions are the distribution unit for the multi-device join
+(``spatial/distributed.py``) and the packing unit of the out-of-core tiled
+driver (``spatial/scaleout.py``): :func:`quadrants` splits a hot
+partition's tile 2x2, :func:`tile_hits` re-assigns object MBRs to the
+children, and :func:`square_extent` recomputes each child's raster area.
+
+Batching contract: every public function here is MBR-array-batched — it
+takes ``[N, 4]`` float64 boxes (or a list of tile rects) and returns
+vectorized masks/indices; per-object Python loops appear nowhere on the
+assignment path.
 """
 from __future__ import annotations
 
@@ -25,7 +36,8 @@ from .april import AprilStore, build_april
 from .rasterize import Extent
 
 __all__ = ["Partitioning", "partition_space", "reference_partition",
-           "reference_partitions"]
+           "reference_partitions", "quadrants", "tile_hits", "owner_tiles",
+           "square_extent"]
 
 
 def _parallel_map(fn, items, parallel: bool, max_workers: int | None = None):
@@ -127,6 +139,73 @@ def partition_space(datasets, parts_per_dim: int) -> Partitioning:
         parts.append(Partition(
             tile=tile, extent=Extent(lo_x, lo_y, side), obj_idx=obj_idx))
     return Partitioning(parts_per_dim=k, partitions=parts)
+
+
+def quadrants(tile: tuple[float, float, float, float]
+              ) -> list[tuple[float, float, float, float]]:
+    """Split a tile rect into its 2x2 quadrant rects (the §14 skew-split
+    step). Children are listed bottom-left, bottom-right, top-left,
+    top-right — a fixed order, so repeated splits are deterministic."""
+    xmin, ymin, xmax, ymax = tile
+    xm, ym = (xmin + xmax) / 2.0, (ymin + ymax) / 2.0
+    return [(xmin, ymin, xm, ym), (xm, ymin, xmax, ym),
+            (xmin, ym, xm, ymax), (xm, ym, xmax, ymax)]
+
+
+def tile_hits(mbrs: np.ndarray,
+              tile: tuple[float, float, float, float]) -> np.ndarray:
+    """Batched open-interval intersection mask of ``[N, 4]`` MBRs against a
+    tile rect — the assignment rule of :func:`partition_space`, exposed for
+    the streaming partitioner (objects replicate into every tile their MBR
+    intersects; the reference-point rule dedups results)."""
+    m = np.asarray(mbrs, np.float64).reshape(-1, 4)
+    xmin, ymin, xmax, ymax = tile
+    return ((m[:, 0] < xmax) & (m[:, 2] > xmin)
+            & (m[:, 1] < ymax) & (m[:, 3] > ymin))
+
+
+def square_extent(mbrs: np.ndarray,
+                  tile: tuple[float, float, float, float]) -> Extent:
+    """Square raster hull of a partition's member MBRs (§5.2 raster area;
+    the empty partition falls back to its tile rect). Batched: one
+    min/max reduction over the ``[N, 4]`` boxes."""
+    m = np.asarray(mbrs, np.float64).reshape(-1, 4)
+    if len(m) == 0:
+        lo_x, lo_y, hi_x, hi_y = tile
+    else:
+        lo_x, lo_y = float(m[:, 0].min()), float(m[:, 1].min())
+        hi_x, hi_y = float(m[:, 2].max()), float(m[:, 3].max())
+    side = max(hi_x - lo_x, hi_y - lo_y) * (1 + 1e-9)
+    return Extent(lo_x, lo_y, side)
+
+
+def owner_tiles(tiles: np.ndarray, mbrs_r: np.ndarray,
+                mbrs_s: np.ndarray) -> np.ndarray:
+    """Batched reference-point ownership over an arbitrary *disjoint* rect
+    cover (the §14 generalization of :func:`reference_partitions` to
+    skew-split tilings).
+
+    ``tiles`` is ``[T, 4]`` (xmin, ymin, xmax, ymax) rects that tile the
+    map disjointly; a pair belongs to the tile containing its reference
+    point — half-open ``[min, max)`` membership, with the tiles touching
+    the map's top/right edge closed there so boundary points stay owned.
+    Returns the owning tile index per pair (``-1`` if the cover has a
+    hole, which the tiled driver treats as a hard error).
+    """
+    tiles = np.asarray(tiles, np.float64).reshape(-1, 4)
+    mbrs_r = np.asarray(mbrs_r, np.float64).reshape(-1, 4)
+    mbrs_s = np.asarray(mbrs_s, np.float64).reshape(-1, 4)
+    rx = np.maximum(mbrs_r[:, 0], mbrs_s[:, 0])
+    ry = np.maximum(mbrs_r[:, 1], mbrs_s[:, 1])
+    hi_x = tiles[:, 2].max()
+    hi_y = tiles[:, 3].max()
+    own = np.full(len(rx), -1, np.int64)
+    for t in range(len(tiles)):
+        xmin, ymin, xmax, ymax = tiles[t]
+        in_x = (rx >= xmin) & ((rx < xmax) | (xmax >= hi_x) & (rx <= xmax))
+        in_y = (ry >= ymin) & ((ry < ymax) | (ymax >= hi_y) & (ry <= ymax))
+        own[in_x & in_y & (own < 0)] = t
+    return own
 
 
 def reference_partition(parts_per_dim: int, mbr_r: np.ndarray, mbr_s: np.ndarray) -> int:

@@ -1,3 +1,4 @@
 from .synthetic import (  # noqa: F401
-    PolygonDataset, make_dataset, make_linestrings, DATASET_SPECS
+    PolygonDataset, make_dataset, make_linestrings, iter_dataset_chunks,
+    make_chunked_dataset, DATASET_SPECS
 )

@@ -9,17 +9,38 @@ rings — simple, non-self-intersecting, hole-free, matching the paper's data
 cleaning (§7.1 removes multi-polygons, self-intersections, holes).
 
 All geometry lives in the unit square [0,1]^2 (the "map").
+
+Two generation scales (both seeded, both deterministic):
+
+* :func:`make_dataset` — the original per-polygon loop; fine up to a few
+  thousand objects (tests, benches at paper scale).
+* :func:`iter_dataset_chunks` — the out-of-core generator behind the §14
+  tiled scale-out driver: polygons are produced in fixed-size **chunks**,
+  each chunk built by ONE vectorized pass (no per-polygon Python loop), so
+  multi-million-polygon workloads stream through bounded host memory.
+  Chunk ``ci`` is a pure function of ``(name, seed, ci)`` — chunks can be
+  regenerated independently and in any order, which is what the streaming
+  partitioner and the checkpoint-resume path rely on.
+  :func:`make_chunked_dataset` concatenates the chunks into one in-memory
+  dataset — the identity reference the tiled driver is tested against.
+
+Batching contract (DESIGN.md §6/§14): every entry point returns (or yields)
+:class:`PolygonDataset` — padded ``[P, Vmax, 2]`` vertex arrays with a
+``nverts`` mask and precomputed MBRs — the dataset-batched input shape of
+every pipeline stage.
 """
 from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
+from typing import Iterator
 
 import numpy as np
 
 from ..core import geometry
 
-__all__ = ["PolygonDataset", "make_dataset", "make_linestrings", "DATASET_SPECS"]
+__all__ = ["PolygonDataset", "make_dataset", "make_linestrings",
+           "iter_dataset_chunks", "make_chunked_dataset", "DATASET_SPECS"]
 
 
 @dataclass
@@ -105,6 +126,90 @@ def make_dataset(
                     r + 1e-4, 1 - r - 1e-4)
         pts = _star_polygon(rng, c, r, int(nvs[i]), jitter)
         verts[i, : nvs[i]] = pts
+    return PolygonDataset(name=name, verts=verts, nverts=nvs)
+
+
+def _star_polygons_chunk(rng: np.random.Generator, centers: np.ndarray,
+                         radii: np.ndarray, nvs: np.ndarray,
+                         jitter: float) -> np.ndarray:
+    """One vectorized pass over a whole chunk of star polygons: sorted
+    jittered angles + jittered radii, padding rows zeroed. The chunk twin
+    of :func:`_star_polygon` (same construction, batched RNG draws — chunk
+    streams are seeded independently of the per-polygon loop)."""
+    n, vmax = len(nvs), int(nvs.max())
+    mask = np.arange(vmax)[None, :] < nvs[:, None]
+    angles = rng.uniform(0.0, 2 * np.pi, size=(n, vmax))
+    # padding sorts to the row tail (inf), then drops out via the mask
+    angles = np.sort(np.where(mask, angles, np.inf), axis=1)
+    angles = np.where(mask, angles, 0.0)
+    angles += np.linspace(0, 1e-4, vmax)[None, :]   # no degenerate edges
+    rad = radii[:, None] * (1.0 + jitter * rng.uniform(-1.0, 1.0,
+                                                       size=(n, vmax)))
+    rad = np.maximum(rad, 0.15 * radii[:, None])
+    pts = centers[:, None, :] + np.stack(
+        [rad * np.cos(angles), rad * np.sin(angles)], axis=-1)
+    pts = np.clip(pts, 1e-6, 1.0 - 1e-6)
+    return np.where(mask[..., None], pts, 0.0)
+
+
+def iter_dataset_chunks(
+    name: str, seed: int = 0, count: int | None = None,
+    chunk_size: int = 65536, avg_vertices: int | None = None,
+    avg_radius: float | None = None, map_seed: int = 0,
+) -> Iterator[PolygonDataset]:
+    """Stream a dataset as fixed-size chunks (the §14 out-of-core source).
+
+    Chunk ``ci`` is generated by one vectorized pass from an rng seeded on
+    ``(name, seed, ci)`` — deterministic, order-independent, and O(chunk)
+    host memory regardless of ``count``, so multi-million-polygon workloads
+    never materialize in full. Statistics (cluster skew, vertex counts,
+    radius distribution) match :func:`make_dataset`'s spec table; the
+    *stream* is its own seeded universe, not a re-chunking of the
+    per-polygon loop. ``make_chunked_dataset`` is the in-memory
+    concatenation used as the tiled driver's identity reference.
+    """
+    spec = DATASET_SPECS.get(name, (1000, 30, 0.005, 0.5))
+    cnt = count if count is not None else spec[0]
+    nv_avg = avg_vertices if avg_vertices is not None else spec[1]
+    rad = avg_radius if avg_radius is not None else spec[2]
+    jitter = spec[3]
+    map_rng = np.random.default_rng(map_seed)
+    n_clusters = 16
+    cl_centers = map_rng.uniform(0.1, 0.9, size=(n_clusters, 2))
+
+    for ci, start in enumerate(range(0, cnt, chunk_size)):
+        m = min(chunk_size, cnt - start)
+        rng = np.random.default_rng(
+            zlib.crc32(f"{name}:{seed}:chunk:{ci}".encode()))
+        nvs = np.clip(rng.poisson(nv_avg, size=m), 4, None).astype(np.int64)
+        radii = rad * np.exp(rng.normal(0.0, 0.45, size=m))
+        spread = max(0.008, 2.5 * rad)
+        cl_idx = rng.integers(0, n_clusters, size=m)
+        centers = cl_centers[cl_idx] + rng.normal(0, spread, size=(m, 2))
+        centers = np.clip(centers, radii[:, None] + 1e-4,
+                          1.0 - radii[:, None] - 1e-4)
+        verts = _star_polygons_chunk(rng, centers, radii, nvs, jitter)
+        yield PolygonDataset(name=name, verts=verts, nverts=nvs)
+
+
+def make_chunked_dataset(
+    name: str, seed: int = 0, count: int | None = None,
+    chunk_size: int = 65536, avg_vertices: int | None = None,
+    avg_radius: float | None = None, map_seed: int = 0,
+) -> PolygonDataset:
+    """Concatenate :func:`iter_dataset_chunks` into one in-memory dataset
+    (padded to the global Vmax). Object ``i`` here carries the same global
+    id ``i`` the streaming driver assigns (chunk start + local index) — the
+    identity reference for the tiled scale-out tests."""
+    chunks = list(iter_dataset_chunks(
+        name, seed=seed, count=count, chunk_size=chunk_size,
+        avg_vertices=avg_vertices, avg_radius=avg_radius,
+        map_seed=map_seed))
+    vmax = max(int(c.verts.shape[1]) for c in chunks)
+    verts = np.concatenate([
+        np.pad(c.verts, ((0, 0), (0, vmax - c.verts.shape[1]), (0, 0)))
+        for c in chunks], axis=0)
+    nvs = np.concatenate([c.nverts for c in chunks])
     return PolygonDataset(name=name, verts=verts, nverts=nvs)
 
 

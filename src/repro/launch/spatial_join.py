@@ -12,6 +12,18 @@ the rest -> batched refinement of the indecisive remainder. Fault tolerance:
 per-partition results checkpoint through CheckpointManager, so a killed run
 resumes at partition granularity; the WorkQueue re-leases partitions whose
 workers stall (straggler mitigation).
+
+``--plan-mode adaptive`` plans per partition (DESIGN.md §13), sharing
+planner choices between partitions of similar candidate density through a
+:class:`~repro.spatial.planner.ProfileCache` — only the first partition of
+each density bucket pays for sampling.
+
+``--tile-budget BYTES`` switches to the out-of-core tiled driver
+(DESIGN.md §14, "Scaling beyond one device" in README.md): datasets stream
+in as generated chunks, the cost-balanced partitioner packs them into
+memory-budgeted tiles (``--balance static`` keeps the uniform grid), and
+every finished tile checkpoints to ``--ckpt-dir`` — rerun with ``--resume``
+to continue a killed run at the first unfinished tile.
 """
 from __future__ import annotations
 
@@ -33,13 +45,14 @@ from ..spatial.filters import get_filter
 from ..spatial.fused import check_pipeline_mode
 from ..spatial.mbr_join import mbr_join
 from ..spatial.plan import JoinPlan
-from ..spatial.planner import check_plan_mode
+from ..spatial.planner import ProfileCache, check_plan_mode
 
 
 def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
                    backend: str = "jnp", refine_backend: str = "numpy",
                    mbr_backend: str = "numpy", pipeline_mode: str = "staged",
-                   plan_mode: str = "static", n_order: int = 8):
+                   plan_mode: str = "static", n_order: int = 8,
+                   profile_cache=None):
     """Filter + refine all candidate pairs owned by partition ``pidx``.
 
     ``mbr_backend='jnp'`` generates the partition's candidates sharded over
@@ -62,7 +75,11 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
     per-shard plan (skip-filter plans drop the interval kernel entirely);
     other choices run the partition's batched host path. Prebuilt
     partition stores are reused when the choice matches their
-    method/granularity, rebuilt locally otherwise."""
+    method/granularity, rebuilt locally otherwise. A ``profile_cache``
+    (:class:`~repro.spatial.planner.ProfileCache`) shares planner choices
+    between partitions of similar candidate density — a cache hit adopts
+    the cached :class:`~repro.spatial.planner.PlanChoice` instead of
+    re-sampling this partition."""
     part = parting.partitions[pidx]
     ridx = part.obj_idx[R.name]
     sidx = part.obj_idx[S.name]
@@ -79,7 +96,19 @@ def join_partition(R, S, approx_r, approx_s, parting, pidx, mesh, filt,
                          refine_backend=refine_backend
                          if refine_backend != "jnp" else "numpy",
                          plan_mode="adaptive")
-        choice = probe.plan("intersects")
+        choice = key = None
+        if profile_cache is not None:
+            cand = probe.candidates("intersects")
+            key = profile_cache.key("intersects", len(Rp), len(Sp),
+                                    len(cand))
+            choice = profile_cache.get(key)
+            if choice is not None:
+                probe._apply_choice(choice)
+            else:
+                choice = probe.plan("intersects", pairs=cand)
+                profile_cache.put(key, choice)
+        else:
+            choice = probe.plan("intersects")
         if choice.method in ("april", "none"):
             if choice.skip_filter:
                 ar2 = as2 = None
@@ -181,6 +210,7 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
     R = make_dataset(r_name, seed=seed, count=count_r)
     S = make_dataset(s_name, seed=seed + 1, count=count_s)
     mesh = mesh or make_join_mesh()
+    profile_cache = ProfileCache() if plan_mode == "adaptive" else None
 
     t0 = time.perf_counter()
     parting = partition_mod.partition_space([R, S], parts_per_dim=parts)
@@ -220,7 +250,8 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
                                      refine_backend=refine_backend,
                                      mbr_backend=mbr_backend,
                                      pipeline_mode=pipeline_mode,
-                                     plan_mode=plan_mode, n_order=n_order)
+                                     plan_mode=plan_mode, n_order=n_order,
+                                     profile_cache=profile_cache)
         done[p] = res
         for k in totals:
             totals[k] += counts.get(k, 0)
@@ -233,9 +264,50 @@ def run_join(r_name="T1", s_name="T2", n_order=8, parts=2, ckpt_dir=None,
 
     results = np.concatenate([v for v in done.values() if len(v)], axis=0) \
         if any(len(v) for v in done.values()) else np.zeros((0, 2), np.int64)
+    cache_note = (f"  plan cache {profile_cache.stats}"
+                  if profile_cache is not None else "")
     print(f"build {t_build:.2f}s  join {t_join:.2f}s  "
-          f"results {len(results)}  filter counts {totals}")
+          f"results {len(results)}  filter counts {totals}{cache_note}")
     return results, totals
+
+
+def run_tiled_join(r_name="T1", s_name="T2", *, tile_budget: int,
+                   n_order=8, balance="cost", ckpt_dir=None, resume=True,
+                   seed=0, count_r=None, count_s=None, chunk_size=65536,
+                   mesh=None, method="april", backend="numpy",
+                   refine_backend="numpy", mbr_backend="numpy",
+                   pipeline_mode="staged", plan_mode="static"):
+    """Out-of-core tiled scale-out run (DESIGN.md §14): both datasets
+    stream in as generated chunks (never materialized whole), the
+    cost-balanced partitioner packs them into ``tile_budget``-byte tiles,
+    and :func:`~repro.spatial.scaleout.tiled_join` drives the per-tile
+    joins — checkpointing every finished tile to ``ckpt_dir`` so a rerun
+    with ``resume=True`` continues at the first unfinished tile. The
+    summary line surfaces the §14 stats additions (``tiles``,
+    ``t_partition``) next to the per-stage times."""
+    from ..datagen import iter_dataset_chunks
+    from ..spatial.planner import ProfileCache
+    from ..spatial.scaleout import tiled_join
+
+    check_pipeline_mode(pipeline_mode)
+    check_plan_mode(plan_mode)
+    profile_cache = ProfileCache() if plan_mode == "adaptive" else None
+    pairs, stats = tiled_join(
+        iter_dataset_chunks(r_name, seed=seed, count=count_r,
+                            chunk_size=chunk_size),
+        iter_dataset_chunks(s_name, seed=seed + 1, count=count_s,
+                            chunk_size=chunk_size),
+        method=method, n_order=n_order, filter_backend=backend,
+        refine_backend=refine_backend, mbr_backend=mbr_backend,
+        pipeline_mode=pipeline_mode, plan_mode=plan_mode, mesh=mesh,
+        ckpt_dir=ckpt_dir, resume=resume, profile_cache=profile_cache,
+        tile_budget=tile_budget, balance=balance, seed=seed)
+    resumed = stats.extra.get("resumed_tiles", 0)
+    print(f"tiles {stats.tiles} ({resumed} resumed)  "
+          f"partition {stats.t_partition:.2f}s  build {stats.t_build:.2f}s  "
+          f"results {len(pairs)}")
+    print(stats.row())
+    return pairs, stats
 
 
 def main():
@@ -272,7 +344,37 @@ def main():
                     help="static (use the knobs above verbatim, default) or "
                          "adaptive (per-partition sample-based planner "
                          "picks method/granularity/order, DESIGN.md §13)")
+    ap.add_argument("--tile-budget", type=int, default=None,
+                    help="resident bytes per tile; switches to the "
+                         "out-of-core tiled driver (DESIGN.md §14): "
+                         "datasets stream in chunked, partitions pack into "
+                         "memory-budgeted tiles, finished tiles checkpoint "
+                         "to --ckpt-dir")
+    ap.add_argument("--balance", default="cost",
+                    help="tiled driver only: 'cost' (skew-split + "
+                         "cost-balanced packing, default) or 'static' "
+                         "(uniform grid, partition-order packing)")
+    ap.add_argument("--resume", action="store_true",
+                    help="tiled driver only: resume from the --ckpt-dir "
+                         "completed-tile manifest (skips straight to the "
+                         "first unfinished tile; a changed workload or "
+                         "config starts fresh)")
+    ap.add_argument("--chunk-size", type=int, default=65536,
+                    help="tiled driver only: generated objects per "
+                         "streamed chunk")
     args = ap.parse_args()
+    if args.tile_budget is not None:
+        run_tiled_join(args.r, args.s, tile_budget=args.tile_budget,
+                       n_order=args.n_order, balance=args.balance,
+                       ckpt_dir=args.ckpt_dir, resume=args.resume,
+                       count_r=args.count_r, count_s=args.count_s,
+                       chunk_size=args.chunk_size, method=args.method,
+                       backend=args.filter_backend or "numpy",
+                       refine_backend=args.refine_backend,
+                       mbr_backend=args.mbr_backend,
+                       pipeline_mode=args.pipeline_mode,
+                       plan_mode=args.plan_mode)
+        return
     run_join(args.r, args.s, n_order=args.n_order, parts=args.parts,
              ckpt_dir=args.ckpt_dir, count_r=args.count_r,
              count_s=args.count_s, method=args.method,

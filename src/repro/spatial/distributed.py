@@ -25,6 +25,14 @@ pipeline stage has a mesh-sharded batched path:
 
 The same step functions lower on the production meshes (16x16 and 2x16x16)
 — exercised by ``launch/dryrun.py --arch april_join``.
+
+Batching contract: every entry point here is candidate-batched — it takes
+``[N, 2]`` pair-index arrays (plus the padded interval/vertex operand
+arrays packed from them) and dispatches whole shards; nothing loops
+per pair on the host. Partitions are the outer unit of work: the
+launcher (``launch/spatial_join.py``) and the §14 tiled driver
+(``spatial/scaleout.py``) call these per partition, each with its own
+approximations and candidate frame.
 """
 from __future__ import annotations
 
@@ -76,8 +84,11 @@ class PackedPairs:
 
 def pack_pair_batch(store_r, store_s, pairs: np.ndarray,
                     pad_batch_to: int = 1, pad_width_to: int = 8) -> PackedPairs:
-    """Pack candidate pairs into padded arrays; batch padded to a multiple of
-    ``pad_batch_to`` (the device count), widths to ``pad_width_to``."""
+    """Pack a ``[N, 2]`` candidate-pair batch into the padded device arrays
+    of :class:`PackedPairs` (DESIGN.md §9): batch padded to a multiple of
+    ``pad_batch_to`` (the device count, so shards divide evenly), interval
+    widths to a multiple of ``pad_width_to``. One vectorized gather per
+    list kind — no per-pair host loop."""
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
     B = len(pairs)
     Bp = max(pad_batch_to, ((B + pad_batch_to - 1) // pad_batch_to) * pad_batch_to)
@@ -108,7 +119,10 @@ def pack_pair_batch(store_r, store_s, pairs: np.ndarray,
 
 def bucket_pairs(store_r, store_s, pairs: np.ndarray, n_devices: int = 1,
                  max_width: int = 512) -> list[PackedPairs]:
-    """Split pairs into power-of-two width buckets (padding/LB control)."""
+    """Split a ``[N, 2]`` pair batch into power-of-two interval-width
+    buckets and pack each (DESIGN.md §9): width-bucketing bounds padding
+    waste and is the primary load-balance/straggler lever of the sharded
+    filter stage."""
     pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
     if len(pairs) == 0:
         return []
@@ -142,10 +156,12 @@ def _overlap_rows(xs, xl, nx, ys, yl, ny):
 
 
 def april_filter_kernel_jnp(batch: dict) -> jnp.ndarray:
-    """Fused AA/AF/FA filter for a packed batch -> verdicts [B] int8.
+    """Fused AA/AF/FA filter for a packed batch -> verdicts [B] int8
+    (DESIGN.md §9; the Pallas twin lives in ``kernels/interval_join``).
 
     All three joins are evaluated for every pair (branch-free); the verdict
-    select reproduces Algorithm 2's decision tree.
+    select reproduces Algorithm 2's decision tree. Batched: the input is
+    the :meth:`PackedPairs.arrays` dict, one row per candidate pair.
     """
     aa = _overlap_rows(batch["ra_s"], batch["ra_l"], batch["ra_n"],
                        batch["sa_s"], batch["sa_l"], batch["sa_n"])
@@ -158,13 +174,17 @@ def april_filter_kernel_jnp(batch: dict) -> jnp.ndarray:
 
 
 def make_join_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ``Mesh`` over the first ``n_devices`` local devices (all by
+    default), axis name 'data' — the batch-sharding axis every
+    ``distributed_*`` step and the §14 tiled driver shard over."""
     devs = jax.devices()
     n = n_devices or len(devs)
     return Mesh(np.asarray(devs[:n]), ("data",))
 
 
 def distributed_april_filter(packed: PackedPairs, mesh: Mesh | None = None):
-    """Run the filter sharded over the mesh 'data' axis.
+    """Run the APRIL filter kernel on one packed batch, sharded over the
+    mesh 'data' axis (DESIGN.md §9).
 
     Returns (verdicts [B] np.int8, counts dict) — counts are psum-reduced on
     device (one scalar per verdict class crosses the network, not the batch).

@@ -40,7 +40,8 @@ from ..core.compress import compress_april
 from .plan import JoinPlan, JoinStats
 
 __all__ = ["JoinStats", "spatial_intersection_join", "spatial_within_join",
-           "polygon_linestring_join", "selection_queries"]
+           "polygon_linestring_join", "selection_queries",
+           "tiled_spatial_join"]
 
 
 def _plan(R, S, method, n_order, *, filter_backend="numpy",
@@ -94,6 +95,37 @@ def spatial_intersection_join(
         pr, ps = prebuilt
         plan.build(prebuilt=(_adopt(method, pr), _adopt(method, ps)))
     return plan.execute("intersects")
+
+
+def tiled_spatial_join(
+    r_chunks, s_chunks, predicate: str = "intersects",
+    method: str = "april", n_order: int = 10,
+    tile_budget: int | None = None, balance: str = "cost",
+    ckpt_dir: str | None = None, resume: bool = True,
+    filter_backend: str = "numpy", refine_backend: str = "numpy",
+    mbr_backend: str = "numpy", pipeline_mode: str = "staged",
+    plan_mode: str = "static", **scaleout_opts,
+) -> tuple[np.ndarray, JoinStats]:
+    """Pipeline-flavored front door to the out-of-core tiled driver
+    (DESIGN.md §14): same knob names as the shims above, plus the
+    partitioner's ``tile_budget`` (resident bytes per tile) / ``balance``
+    and the checkpoint pair ``ckpt_dir`` / ``resume`` (rerun with
+    ``resume=True`` to continue at the first unfinished tile). Inputs are
+    chunk iterators or in-memory datasets (auto-chunked); result pairs are
+    global ids, set-identical to the in-memory shims for every method x
+    predicate. Thin forwarder to
+    :func:`~repro.spatial.scaleout.tiled_join`."""
+    from .scaleout import SCALEOUT_DEFAULTS, tiled_join
+    if tile_budget is not None:
+        scaleout_opts["tile_budget"] = tile_budget
+    scaleout_opts.setdefault("tile_budget", SCALEOUT_DEFAULTS["tile_budget"])
+    return tiled_join(r_chunks, s_chunks, predicate=predicate,
+                      method=method, n_order=n_order,
+                      filter_backend=filter_backend,
+                      refine_backend=refine_backend,
+                      mbr_backend=mbr_backend, pipeline_mode=pipeline_mode,
+                      plan_mode=plan_mode, ckpt_dir=ckpt_dir, resume=resume,
+                      balance=balance, **scaleout_opts)
 
 
 def spatial_within_join(

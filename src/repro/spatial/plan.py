@@ -57,6 +57,9 @@ class JoinStats:
     #: (the chosen :class:`~repro.spatial.planner.PlanChoice` rides in
     #: ``extra["plan"]``)
     plan_mode: str = "static"
+    #: §14 tiled scale-out only: number of memory-budgeted tiles the run
+    #: was packed into (0 = in-memory join, no tiling)
+    tiles: int = 0
     t_mbr: float = 0.0
     t_filter: float = 0.0
     t_refine: float = 0.0
@@ -64,6 +67,9 @@ class JoinStats:
     #: stage times include their own syncs, so this stays 0.0 there)
     t_sync: float = 0.0
     t_build: float = 0.0
+    #: §14 tiled scale-out only: wall time of the streaming partitioner
+    #: (spill + statistics + skew split + tile packing)
+    t_partition: float = 0.0
     approx_bytes: int = 0
     extra: dict = field(default_factory=dict)
 
@@ -77,6 +83,7 @@ class JoinStats:
         return {"t_mbr": float(self.t_mbr), "t_filter": float(self.t_filter),
                 "t_refine": float(self.t_refine),
                 "t_sync": float(self.t_sync),
+                "t_partition": float(self.t_partition),
                 "t_total": float(self.t_total)}
 
     def rates(self) -> tuple[float, float, float]:
@@ -88,6 +95,8 @@ class JoinStats:
         h, g, i = self.rates()
         sync = (f"sync={self.t_sync:.3f}s "
                 if self.pipeline_mode == "fused" else "")
+        if self.tiles:
+            sync += f"tiles={self.tiles} part={self.t_partition:.3f}s "
         return (f"{self.method:8s} hits={h:6.2%} negs={g:6.2%} indec={i:6.2%} "
                 f"mbr={self.t_mbr:.3f}s[{self.mbr_backend}] "
                 f"filter={self.t_filter:.3f}s[{self.filter_backend}] "
@@ -270,17 +279,23 @@ class JoinPlan:
             self.filter_opts.pop("order", None)
         self.plan_choice = choice
 
-    def plan(self, predicate: str = "intersects") -> PlanChoice:
+    def plan(self, predicate: str = "intersects",
+             pairs: np.ndarray | None = None) -> PlanChoice:
         """Run the sample-based planner for ``predicate`` and apply its
         choice (``plan_mode='adaptive'`` only). Called lazily by the first
         :meth:`execute`; call explicitly to re-plan (e.g. after the
-        workload drifts). Deterministic for fixed inputs and
-        ``plan_opts['seed']``."""
+        workload drifts). ``pairs`` may supply the candidate set when the
+        caller already generated it (the launcher's
+        :class:`~repro.spatial.planner.ProfileCache` path keys on the
+        candidate count before deciding whether to plan at all) — it must
+        equal :meth:`candidates` (``predicate``) output. Deterministic for
+        fixed inputs and ``plan_opts['seed']``."""
         if self.plan_mode != "adaptive":
             raise ValueError("plan() requires JoinPlan(plan_mode="
                              f"'adaptive'), got {self.plan_mode!r}")
         t0 = time.perf_counter()
-        pairs = self.candidates(predicate)
+        if pairs is None:
+            pairs = self.candidates(predicate)
         choice = choose_plan(self.R, self.S, pairs, predicate=predicate,
                              n_order=self.n_order, extent=self.extent,
                              r_kind=self.r_kind, **self.plan_opts)

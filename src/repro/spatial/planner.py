@@ -60,8 +60,8 @@ from ..core.rasterize import Extent, GLOBAL_EXTENT
 
 __all__ = [
     "PLAN_MODES", "PLANNER_METHODS", "ORDER_CHOICES", "PLAN_DEFAULTS",
-    "PlanChoice", "check_plan_mode", "choose_plan", "static_configs",
-    "measured_work",
+    "PlanChoice", "ProfileCache", "check_plan_mode", "choose_plan",
+    "static_configs", "measured_work",
 ]
 
 #: ``JoinPlan(plan_mode=...)``: ``static`` executes the constructor knobs
@@ -138,6 +138,53 @@ class PlanChoice:
                    skip_filter=bool(d.get("skip_filter", False)),
                    predicate=d.get("predicate", "intersects"),
                    est=dict(d.get("est", {})))
+
+
+class ProfileCache:
+    """Shares planner choices between partitions of similar candidate
+    density (the §13 follow-on used by the launcher's adaptive path and
+    the §14 tiled driver).
+
+    Per-partition adaptive planning re-samples and re-probes every
+    partition, but partitions with the same workload *shape* — similar
+    candidate volume and candidate density (candidates per MBR
+    cross-pair) — land on the same :class:`PlanChoice` anyway. The cache
+    keys a partition by ``predicate`` plus the **quantized log2** of its
+    candidate count and density (``density_tol_log2`` buckets, default one
+    octave): the first partition in a bucket pays for
+    :func:`choose_plan`, the rest adopt its choice via
+    ``JoinPlan._apply_choice`` without building probe stores.
+
+    Reused choices are heuristic, not argmin-exact, for the adopting
+    partition — verdicts are unaffected (plans change execution, never
+    results; the exact refinement stage decides every pair). Single-thread
+    use only (the launcher and tiled driver plan sequentially); the
+    service's replan cache remains separate.
+    """
+
+    def __init__(self, density_tol_log2: float = 1.0):
+        self.density_tol_log2 = float(density_tol_log2)
+        self._cache: dict[tuple, PlanChoice] = {}
+        self.stats = {"hits": 0, "misses": 0}
+
+    def key(self, predicate: str, n_r: int, n_s: int,
+            n_cand: int) -> tuple:
+        """Quantized workload-shape bucket of one partition."""
+        tol = max(self.density_tol_log2, 1e-9)
+        size = round(np.log2(n_cand + 1.0) / tol)
+        dens = n_cand / max(1.0, float(n_r) * float(n_s))
+        return (predicate, size, round(np.log2(dens + 1e-12) / tol))
+
+    def get(self, key: tuple) -> PlanChoice | None:
+        choice = self._cache.get(key)
+        self.stats["hits" if choice is not None else "misses"] += 1
+        return choice
+
+    def put(self, key: tuple, choice: PlanChoice) -> None:
+        self._cache[key] = choice
+
+    def __len__(self) -> int:
+        return len(self._cache)
 
 
 # ---------------------------------------------------------------------------

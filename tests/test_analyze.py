@@ -555,7 +555,8 @@ def _fake_repo(tmp_path, *, readme, design, pipeline, flags):
 
 
 ALL_KNOBS = ("filter_backend", "refine_backend", "mbr_backend",
-             "build_backend", "pipeline_mode", "plan_mode")
+             "build_backend", "pipeline_mode", "plan_mode",
+             "tile_budget", "resume")
 
 
 def test_be002_003_true_negative_fully_threaded(tmp_path):

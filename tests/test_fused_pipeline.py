@@ -225,7 +225,8 @@ def test_stats_stage_times_roundtrip(rs):
     _, stats = plan.execute("intersects")
     times = stats.stage_times()
     assert set(times) == {"t_mbr", "t_filter", "t_refine", "t_sync",
-                          "t_total"}
+                          "t_partition", "t_total"}
+    assert times["t_partition"] == 0.0   # non-tiled run (§14)
     assert times["t_total"] == pytest.approx(
         times["t_mbr"] + times["t_filter"] + times["t_refine"]
         + times["t_sync"])

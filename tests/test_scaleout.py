@@ -1,0 +1,260 @@
+"""Out-of-core tiled scale-out driver (DESIGN.md §14).
+
+The §14 contract: tiling, cost-balanced packing, skew splitting, and
+checkpoint-resume are *execution* details — the verdict set is identical
+to the in-memory `JoinPlan` reference for every filter method and every
+predicate, a kill mid-run resumes to the same results, and planning is
+deterministic.
+"""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.datagen import (iter_dataset_chunks, make_chunked_dataset,
+                           make_linestrings)
+from repro.spatial.filters import available_filters
+from repro.spatial.plan import JoinPlan
+from repro.spatial.planner import ProfileCache
+from repro.spatial.scaleout import (SCALEOUT_DEFAULTS, plan_scaleout,
+                                    tiled_join)
+
+COUNT_R, COUNT_S, CHUNK = 280, 400, 100
+N_ORDER = 7
+# small budget + low split threshold: several tiles AND skew splits fire;
+# total estimated resident bytes exceed 4x this budget (asserted below)
+TILED = dict(tile_budget=150_000, split_factor=1.0, min_split_objs=32)
+
+
+def _chunks_r():
+    return iter_dataset_chunks("T1", seed=5, count=COUNT_R, chunk_size=CHUNK)
+
+
+def _chunks_s():
+    return iter_dataset_chunks("T2", seed=6, count=COUNT_S, chunk_size=CHUNK)
+
+
+def _mem_r():
+    return make_chunked_dataset("T1", seed=5, count=COUNT_R, chunk_size=CHUNK)
+
+
+def _mem_s():
+    return make_chunked_dataset("T2", seed=6, count=COUNT_S, chunk_size=CHUNK)
+
+
+def _pairs_set(pairs):
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+def _reference(predicate, method, **kw):
+    plan = JoinPlan(_mem_r(), _mem_s(), filter=method, n_order=N_ORDER, **kw)
+    pairs, _ = plan.execute(predicate)
+    return _pairs_set(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Verdict identity: every filter method x predicate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", sorted(available_filters()))
+@pytest.mark.parametrize("predicate", ["intersects", "within", "selection"])
+def test_tiled_identity_every_method_predicate(method, predicate):
+    ref = _reference(predicate, method)
+    pairs, stats = tiled_join(_chunks_r(), _chunks_s(), predicate=predicate,
+                              method=method, n_order=N_ORDER, **TILED)
+    assert _pairs_set(pairs) == ref
+    assert stats.tiles > 1, "workload must actually tile"
+    assert stats.n_results == len(pairs)
+
+
+@pytest.mark.parametrize("method", sorted(available_filters()))
+def test_tiled_identity_linestring(method):
+    L = make_linestrings(seed=7, count=150)
+    S = _mem_s()
+    ref, _ = JoinPlan(L, S, filter=method, n_order=N_ORDER,
+                      r_kind="line").execute("linestring")
+    # in-memory datasets auto-chunk through the same streaming spill path
+    pairs, stats = tiled_join(L, S, predicate="linestring", method=method,
+                              n_order=N_ORDER, r_kind="line", **TILED)
+    assert _pairs_set(pairs) == _pairs_set(ref)
+    assert stats.tiles >= 1
+
+
+def test_tiled_identity_static_balance():
+    ref = _reference("intersects", "april")
+    pairs, stats = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                              n_order=N_ORDER, balance="static",
+                              tile_budget=TILED["tile_budget"])
+    assert _pairs_set(pairs) == ref
+    assert stats.extra["tile_plan"]["n_splits"] == 0
+
+
+def test_tiled_identity_adaptive_with_profile_cache():
+    ref = _reference("intersects", "april")
+    cache = ProfileCache()
+    pairs, stats = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                              n_order=N_ORDER, plan_mode="adaptive",
+                              profile_cache=cache, **TILED)
+    assert _pairs_set(pairs) == ref
+    cs = stats.extra["profile_cache"]
+    assert cs["hits"] + cs["misses"] >= stats.tiles - 1
+    assert len(cache) == cs["misses"]
+
+
+def test_tiled_workload_exceeds_budget_4x(tmp_path):
+    """The acceptance-criteria shape: total resident bytes >= 4x the tile
+    budget, so the driver genuinely spills and streams."""
+    plan, _, _ = plan_scaleout(_chunks_r(), _chunks_s(),
+                               spill_dir=str(tmp_path), n_order=N_ORDER,
+                               **TILED)
+    total = sum(p.est["bytes"] for p in plan.parts)
+    assert total >= 4 * TILED["tile_budget"]
+    assert len(plan.tiles) >= 4
+
+
+# ---------------------------------------------------------------------------
+# Skew split determinism
+# ---------------------------------------------------------------------------
+
+def test_plan_scaleout_deterministic(tmp_path):
+    p1, _, tot1 = plan_scaleout(_chunks_r(), _chunks_s(),
+                                spill_dir=str(tmp_path / "a"),
+                                n_order=N_ORDER, **TILED)
+    p2, _, tot2 = plan_scaleout(_chunks_r(), _chunks_s(),
+                                spill_dir=str(tmp_path / "b"),
+                                n_order=N_ORDER, **TILED)
+    assert tot1 == tot2 == (COUNT_R, COUNT_S)
+    assert p1.to_dict() == p2.to_dict()
+    assert p1.est["n_splits"] > 0, "skew split must fire on this workload"
+    # children of a split carry depth > 0 and strictly smaller tiles
+    deep = [p for p in p1.parts if p.depth > 0]
+    assert deep
+    for p in deep:
+        assert (p.tile[2] - p.tile[0]) <= 0.5 / SCALEOUT_DEFAULTS[
+            "parts_per_dim"] + 1e-12
+
+
+def test_tile_packing_respects_budget(tmp_path):
+    plan, _, _ = plan_scaleout(_chunks_r(), _chunks_s(),
+                               spill_dir=str(tmp_path), n_order=N_ORDER,
+                               **TILED)
+    for tile in plan.tiles:
+        load = sum(plan.parts[i].est["bytes"] for i in tile)
+        # single oversized partitions may ride alone above budget;
+        # multi-partition tiles must fit
+        if len(tile) > 1:
+            assert load <= TILED["tile_budget"]
+    covered = sorted(i for t in plan.tiles for i in t)
+    assert covered == list(range(len(plan.parts)))
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume: interrupted run + resume == uninterrupted verdict set
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_identical_verdicts(tmp_path):
+    ref = _reference("intersects", "april")
+    ck = str(tmp_path / "ck")
+
+    partial, st_part = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                                  n_order=N_ORDER, ckpt_dir=ck,
+                                  stop_after_tiles=2, **TILED)
+    assert st_part.extra["interrupted"] is True
+    assert _pairs_set(partial) < ref, "partial run must be a strict subset"
+
+    resumed, st_res = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                                 n_order=N_ORDER, ckpt_dir=ck, **TILED)
+    assert st_res.extra["resumed_tiles"] == 2
+    assert "interrupted" not in st_res.extra
+    assert _pairs_set(resumed) == ref
+    # resumed counters equal a clean run's (restored from the manifest)
+    clean, st_clean = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                                 n_order=N_ORDER, **TILED)
+    assert st_res.n_candidates == st_clean.n_candidates
+    assert st_res.n_indecisive == st_clean.n_indecisive
+
+
+def test_resume_fingerprint_guard(tmp_path):
+    """A manifest from a different configuration must NOT be resumed."""
+    ck = str(tmp_path / "ck")
+    tiled_join(_chunks_r(), _chunks_s(), method="april", n_order=N_ORDER,
+               ckpt_dir=ck, stop_after_tiles=1, **TILED)
+    pairs, stats = tiled_join(_chunks_r(), _chunks_s(), method="ri",
+                              n_order=N_ORDER, ckpt_dir=ck, **TILED)
+    assert stats.extra["resumed_tiles"] == 0
+    assert _pairs_set(pairs) == _reference("intersects", "ri")
+
+
+def test_resume_false_starts_fresh(tmp_path):
+    ck = str(tmp_path / "ck")
+    tiled_join(_chunks_r(), _chunks_s(), method="april", n_order=N_ORDER,
+               ckpt_dir=ck, stop_after_tiles=1, **TILED)
+    pairs, stats = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                              n_order=N_ORDER, ckpt_dir=ck, resume=False,
+                              **TILED)
+    assert stats.extra["resumed_tiles"] == 0
+    assert _pairs_set(pairs) == _reference("intersects", "april")
+
+
+# ---------------------------------------------------------------------------
+# Streamed datagen
+# ---------------------------------------------------------------------------
+
+def test_chunk_determinism_and_concat_identity():
+    a = list(iter_dataset_chunks("T1", seed=9, count=330, chunk_size=128))
+    b = list(iter_dataset_chunks("T1", seed=9, count=330, chunk_size=128))
+    assert len(a) == 3 and sum(len(c) for c in a) == 330
+    for ca, cb in zip(a, b):
+        np.testing.assert_array_equal(ca.verts, cb.verts)
+        np.testing.assert_array_equal(ca.nverts, cb.nverts)
+    ds = make_chunked_dataset("T1", seed=9, count=330, chunk_size=128)
+    off = 0
+    for c in a:
+        np.testing.assert_array_equal(ds.nverts[off:off + len(c)], c.nverts)
+        np.testing.assert_allclose(
+            ds.verts[off:off + len(c), : c.verts.shape[1]], c.verts)
+        off += len(c)
+
+
+def test_chunks_are_valid_polygons():
+    for c in iter_dataset_chunks("T2", seed=1, count=200, chunk_size=64):
+        assert (c.nverts >= 4).all()
+        assert np.isfinite(c.verts).all()
+        # padding rows zeroed (the batched-pipeline contract)
+        mask = np.arange(c.verts.shape[1])[None, :] >= c.nverts[:, None]
+        assert (c.verts[mask] == 0).all()
+        assert (c.mbrs[:, 2] > c.mbrs[:, 0]).all()
+
+
+# ---------------------------------------------------------------------------
+# Stats plumbing (JoinStats §14 additions)
+# ---------------------------------------------------------------------------
+
+def test_stats_roundtrip_and_row():
+    from repro.spatial.plan import JoinStats
+    pairs, st = tiled_join(_chunks_r(), _chunks_s(), method="april",
+                           n_order=N_ORDER, **TILED)
+    assert st.tiles > 1 and st.t_partition > 0
+    d = st.to_dict()
+    back = JoinStats.from_dict(d)
+    assert back.tiles == st.tiles
+    assert back.t_partition == st.t_partition
+    assert "t_partition" in st.stage_times()
+    assert f"tiles={st.tiles}" in st.row()
+    # non-tiled stats keep the old row shape and round-trip the defaults
+    st0 = JoinStats(method="april")
+    assert "tiles=" not in st0.row()
+    assert JoinStats.from_dict(st0.to_dict()).tiles == 0
+
+
+def test_profile_cache_buckets():
+    c = ProfileCache()
+    k1 = c.key("intersects", 1000, 1000, 5000)
+    k2 = c.key("intersects", 1100, 950, 5400)   # same octave
+    k3 = c.key("intersects", 1000, 1000, 90000)
+    assert k1 == k2 and k1 != k3
+    assert c.get(k1) is None
+    from repro.spatial.planner import PlanChoice
+    c.put(k1, PlanChoice())
+    assert c.get(k2) is not None
+    assert c.stats == {"hits": 1, "misses": 1}

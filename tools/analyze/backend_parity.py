@@ -35,20 +35,28 @@ from .core import AnalysisPass, Finding, SourceFile
 _DOCS = ("README.md", "DESIGN.md")
 #: build_backend travels through build_opts to every filter build, not as a
 #: named JoinPlan kwarg; pipeline_mode is the staged/fused execution-mode
-#: knob (DESIGN.md §12) — not a ``*backend`` name, same parity contract
-_EXTRA_KNOBS = ("build_backend", "pipeline_mode", "plan_mode")
+#: knob (DESIGN.md §12) — not a ``*backend`` name, same parity contract.
+#: tile_budget / resume are the §14 tiled scale-out knobs (tile packing
+#: budget + checkpoint-manifest resume): not JoinPlan kwargs either, but
+#: they gate execution the same way, so BE002/BE003 hold them to the same
+#: docs + pipeline-shim + launcher-flag threading.
+_EXTRA_KNOBS = ("build_backend", "pipeline_mode", "plan_mode",
+                "tile_budget", "resume")
 _LAUNCHERS = ("src/repro/launch/spatial_join.py",
               "src/repro/launch/serve_join.py")
 _PIPELINE = "src/repro/spatial/pipeline.py"
 
 
 def _launcher_flag_knobs(root: Path) -> dict[str, list[str]]:
-    """knob -> launchers exposing it as a ``--*-backend`` argparse flag."""
+    """knob -> launchers exposing it as an argparse flag (the
+    ``--*-backend`` / ``--*-mode`` family plus the §14 tiling flags
+    ``--*-budget`` and ``--resume``)."""
     knobs: dict[str, list[str]] = {}
     for rel in _LAUNCHERS:
         text = (root / rel).read_text()
         for flag in re.findall(
-                r'add_argument\(\s*"(--[a-z][a-z-]*(?:backend|mode))"',
+                r'add_argument\(\s*'
+                r'"(--[a-z][a-z-]*(?:backend|mode|budget)|--resume)"',
                 text):
             knob = flag.lstrip("-").replace("-", "_")
             knobs.setdefault(knob, []).append(rel)
